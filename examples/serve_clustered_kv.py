@@ -1,0 +1,75 @@
+"""Serving example: request-clustered batching + clustered-KV compression.
+
+1. a queue of mixed-length requests is clustered into homogeneous batches
+   (bit-serial k-medians over (prompt_len, gen_len) features) — padding
+   waste vs FIFO is reported,
+2. batches are prefillled + decoded with a small dense LM,
+3. the longest finished KV cache is then compressed with the paper's
+   clustering engine (keys → median centroids), and the clustered-
+   attention output error vs exact attention is reported alongside the
+   memory ratio — the "memory management" half of the title.
+
+Run: PYTHONPATH=src python examples/serve_clustered_kv.py
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import kv_compress
+from repro.core.request_cluster import Request, plan_batches, plan_fifo
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.runtime.server import Server, ServerConfig
+
+SMALL = ModelConfig(name="serve-lm", family="dense", n_layers=4, d_model=128,
+                    n_heads=4, n_kv_heads=2, head_dim=32, d_ff=512,
+                    vocab=512, pad_vocab_multiple=128, dtype="float32")
+
+
+def main():
+    rng = np.random.default_rng(0)
+    params = tfm.init_params(jax.random.PRNGKey(0), SMALL)
+
+    # --- request processing: clustered batching ---
+    lens = np.where(rng.random(24) < 0.5,
+                    rng.integers(8, 24, 24), rng.integers(96, 160, 24))
+    reqs = [Request(i, int(l), 8) for i, l in enumerate(lens)]
+    fifo = plan_fifo(reqs, batch_size=4)
+    clus = plan_batches(reqs, batch_size=4)
+    print(f"[batcher] padding waste: fifo {fifo.waste * 100:.1f}% → "
+          f"clustered {clus.waste * 100:.1f}%")
+
+    srv = Server(SMALL, ServerConfig(batch_size=4, max_seq=256), params)
+    prompts = {r.uid: rng.integers(0, 512, size=(r.prompt_len,)).astype(
+        np.int32) for r in reqs}
+    outs = srv.serve(reqs, prompts)
+    ms = np.mean([o.decode_ms for o in outs])
+    print(f"[server] {len(outs)} completions, mean decode "
+          f"{ms:.1f} ms/request")
+
+    # --- memory management: clustered-KV compression ---
+    long_prompt = rng.integers(0, 512, size=(1, 192)).astype(np.int32)
+    _, cache = jax.jit(lambda tk: tfm.prefill(params, SMALL, tk,
+                                              max_seq=256))(
+        jnp.asarray(long_prompt))
+    kc = np.asarray(cache["scan"]["sub0"]["k"])[0, 0]    # (S, H, Dh) layer 0
+    vc = np.asarray(cache["scan"]["sub0"]["v"])[0, 0]
+    kj, vj = jnp.asarray(kc[:192]), jnp.asarray(vc[:192])
+    cfg = kv_compress.KVCompressConfig(n_clusters=24, iters=8,
+                                       keep_recent=32)
+    ckv = kv_compress.compress_cache(kj, vj, cfg)
+    q = jnp.asarray(rng.normal(size=(SMALL.n_kv_heads,
+                                     SMALL.head_dim)).astype(np.float32))
+    out_c = kv_compress.clustered_attention(q, ckv, scale=SMALL.head_dim**-0.5)
+    out_e = kv_compress.exact_attention(q, kj, vj,
+                                        scale=SMALL.head_dim**-0.5)
+    err = float(jnp.linalg.norm(out_c - out_e) / jnp.linalg.norm(out_e))
+    print(f"[kv] 192 keys → {cfg.n_clusters} median centroids + "
+          f"{cfg.keep_recent} exact tail: memory "
+          f"{kv_compress.memory_ratio(192, cfg):.1f}× smaller, "
+          f"attention rel-err {err:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""End-to-end driver: train a small LM for a few hundred steps on CPU.
+
+Exercises the full production path: config → sharded-ready model →
+AdamW + schedule → deterministic data pipeline → checkpoint/resume →
+straggler stats — the same code the multi-pod launcher runs, at a size a
+CPU finishes in minutes.  Optionally enables the paper's k-means-codebook
+gradient compression to show the convergence impact is negligible.
+
+Run: PYTHONPATH=src python examples/train_lm.py [--steps 200] [--compress]
+"""
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import grad_compress
+from repro.data import pipeline
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+# ~15M params: finishes a few hundred CPU steps in minutes; same family
+# as the assigned dense archs (GQA + SwiGLU + RoPE)
+SMALL = ModelConfig(name="small-lm", family="dense", n_layers=4, d_model=256,
+                    n_heads=8, n_kv_heads=4, head_dim=32, d_ff=1024,
+                    vocab=2048, pad_vocab_multiple=128, dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--compress", action="store_true",
+                    help="cross-pod k-means gradient compression")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_example_ckpt")
+    args = ap.parse_args()
+
+    aw = adamw.AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=args.steps)
+    gt = (grad_compress.make_grad_transform(grad_compress.CompressConfig())
+          if args.compress else None)
+
+    def loss_fn(params, batch):
+        b = {k: jnp.asarray(v) for k, v in batch.items()}
+        return tfm.train_loss(params, SMALL, b, remat=False)
+
+    @jax.jit
+    def step_fn(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, opt_state, om = adamw.update(grads, opt_state, params, aw,
+                                             grad_transform=gt)
+        return params, opt_state, dict(metrics, loss=loss, **om)
+
+    data = pipeline.SyntheticLM(SMALL, pipeline.DataConfig(
+        seed=0, global_batch=args.batch, seq_len=args.seq))
+    tcfg = TrainerConfig(n_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                         ckpt_every=max(50, args.steps // 4), log_every=20)
+    trainer = Trainer(SMALL, tcfg, aw, step_fn, data)
+    trainer.run()
+    n = len(trainer.losses)
+    print(f"[example] loss: {trainer.losses[0]:.3f} → "
+          f"{sum(trainer.losses[-5:]) / 5:.3f} over {n} steps"
+          + (" (with gradient compression)" if args.compress else ""))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: bit-serial median clustering for memory management and request
+processing — a multi-pod JAX training/serving framework."""

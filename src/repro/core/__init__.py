@@ -1,0 +1,4 @@
+# The paper's primary contribution: bit-serial majority-vote medians and the
+# clustering engine built on them, plus the framework features they power
+# (KV-cache compression, request batching, gradient compression).
+from repro.core import bitserial, clustering, quantizer  # noqa: F401

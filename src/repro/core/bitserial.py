@@ -1,0 +1,237 @@
+"""Bit-serial median via majority voting — the paper's core algorithm.
+
+MSB→LSB scan.  At every bit position the *majority vote* across all (still
+active) inputs yields the median's bit; inputs whose bit disagrees with the
+majority are retired, and their remaining bits are replaced by their deviating
+bit (the paper's "minority bits ... replace all of the bits on their
+right-hand side"), so retired inputs keep voting on the correct side.
+
+Majority tie-break follows the paper exactly: "the output is 0 when (N/2) or
+more inputs are 0" ⇒ a bit is 1 iff strictly more than half of the effective
+votes are 1 ⇒ for even N the scan converges to the *lower* median (pinned by
+tests against a sort oracle).
+
+The paper's P/I inclusion predicates become first-class ``weights`` (0/1 masks
+or positive integer counts); the inter-array reduction tree becomes a
+per-bit ``psum`` over ``axis_name`` when running under ``shard_map``.
+
+All entry points are pure and jit/vmap/shard_map friendly.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantizer
+
+
+def _shift_right(u, b):
+    return jax.lax.shift_right_logical(u, b.astype(u.dtype))
+
+
+def _bit_at(u, b):
+    """Bit b (traced int32 scalar) of uint32 array u, as float32 0/1."""
+    return (_shift_right(u, b) & jnp.uint32(1)).astype(jnp.float32)
+
+
+def _set_bit(med, mbit_bool, b):
+    one = jax.lax.shift_left(jnp.uint32(1), b.astype(jnp.uint32))
+    return jnp.where(mbit_bool, med | one, med)
+
+
+def median_bits(u, *, weights=None, bits: int = 32, axis_name: Optional[str] = None):
+    """Weighted bit-serial median of unsigned-ordered ints along axis 0.
+
+    u: uint32 (N, ...).  weights: optional (N, ...) broadcastable, >= 0.
+    Returns uint32 median with the leading axis reduced.  When ``axis_name``
+    is given the vote counts are ``psum``-merged across that mesh axis per
+    bit — the paper's hierarchical reduction tree.
+    """
+    u = u.astype(jnp.uint32)
+    if weights is None:
+        w = jnp.ones(u.shape, jnp.float32)
+    else:
+        w = jnp.broadcast_to(weights.astype(jnp.float32), u.shape)
+
+    total = w.sum(axis=0)
+    if axis_name is not None:
+        total = jax.lax.psum(total, axis_name)
+
+    # derive initial carries from the (possibly device-varying) data so the
+    # fori_loop carry vma types are stable under shard_map
+    active = u == u
+    forced = (u & jnp.uint32(0)).astype(jnp.float32)
+    med = jnp.zeros(u.shape[1:], jnp.uint32)
+
+    def body(i, carry):
+        active, forced, med = carry
+        b = jnp.int32(bits - 1) - i
+        bit = _bit_at(u, b)  # (N, ...)
+        eff = jnp.where(active, bit, forced)
+        cnt1 = (w * eff).sum(axis=0)
+        if axis_name is not None:
+            cnt1 = jax.lax.psum(cnt1, axis_name)
+        mbit = cnt1 * 2.0 > total  # majority: 1 iff strictly more ones
+        med = _set_bit(med, mbit, b)
+        mbit_b = jnp.broadcast_to(mbit, u.shape)
+        dev = active & (bit.astype(jnp.bool_) != mbit_b)
+        forced = jnp.where(dev, bit, forced)
+        active = active & ~dev
+        return active, forced, med
+
+    _, _, med = jax.lax.fori_loop(0, bits, body, (active, forced, med))
+    return med
+
+
+def grouped_median_bits(
+    u,
+    assign,
+    k: int,
+    *,
+    weights=None,
+    bits: int = 32,
+    axis_name: Optional[str] = None,
+):
+    """Per-cluster bit-serial medians, all clusters in parallel.
+
+    u: uint32 (N, D); assign: int32 (N,) in [0, k); weights: optional (N,).
+    Returns (med (k, D) uint32, totals (k,) float32).  The per-bit vote count
+    is a one-hot matmul (MXU-friendly); totals==0 marks empty clusters.
+    """
+    n, d = u.shape
+    u = u.astype(jnp.uint32)
+    onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)  # (N, K)
+    if weights is not None:
+        onehot = onehot * weights.astype(jnp.float32)[:, None]
+
+    total = onehot.sum(axis=0)  # (K,)
+    if axis_name is not None:
+        total = jax.lax.psum(total, axis_name)
+
+    active = u == u
+    forced = (u & jnp.uint32(0)).astype(jnp.float32)
+    med = jnp.zeros((k, d), jnp.uint32)
+
+    def body(i, carry):
+        active, forced, med = carry
+        b = jnp.int32(bits - 1) - i
+        bit = _bit_at(u, b)  # (N, D)
+        eff = jnp.where(active, bit, forced)
+        # reduction "tree" level 1: within-shard one-hot matmul on the MXU
+        cnt1 = jax.lax.dot_general(
+            onehot, eff, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (K, D)
+        # level 2: across shards
+        if axis_name is not None:
+            cnt1 = jax.lax.psum(cnt1, axis_name)
+        mbit = cnt1 * 2.0 > total[:, None]  # (K, D) bool
+        med = _set_bit(med, mbit, b)
+        # broadcast each point's cluster-median bit back (gather)
+        mper = jnp.take(mbit, assign, axis=0)  # (N, D)
+        dev = active & (bit.astype(jnp.bool_) != mper)
+        forced = jnp.where(dev, bit, forced)
+        active = active & ~dev
+        return active, forced, med
+
+    _, _, med = jax.lax.fori_loop(0, bits, body, (active, forced, med))
+    return med, total
+
+
+def median_bits64(hi, lo, *, weights=None, axis_name: Optional[str] = None):
+    """64-bit two-limb variant (paper's 64-bit fixed-point claim).
+
+    hi, lo: uint32 (N, ...) limbs of an unsigned-ordered 64-bit value.
+    Returns (med_hi, med_lo) uint32.
+    """
+    hi = hi.astype(jnp.uint32)
+    lo = lo.astype(jnp.uint32)
+    if weights is None:
+        w = jnp.ones(hi.shape, jnp.float32)
+    else:
+        w = jnp.broadcast_to(weights.astype(jnp.float32), hi.shape)
+    total = w.sum(axis=0)
+    if axis_name is not None:
+        total = jax.lax.psum(total, axis_name)
+
+    active = hi == hi
+    forced = (hi & jnp.uint32(0)).astype(jnp.float32)
+    med_hi = jnp.zeros(hi.shape[1:], jnp.uint32)
+    med_lo = jnp.zeros(lo.shape[1:], jnp.uint32)
+
+    def body(i, carry):
+        active, forced, med_hi, med_lo = carry
+        b = jnp.int32(63) - i  # 63..0
+        in_hi = b >= 32
+        bshift = jnp.where(in_hi, b - 32, b)
+        limb = jnp.where(in_hi, hi, lo)
+        bit = _bit_at(limb, bshift)
+        eff = jnp.where(active, bit, forced)
+        cnt1 = (w * eff).sum(axis=0)
+        if axis_name is not None:
+            cnt1 = jax.lax.psum(cnt1, axis_name)
+        mbit = cnt1 * 2.0 > total
+        med_hi = jnp.where(in_hi, _set_bit(med_hi, mbit, bshift), med_hi)
+        med_lo = jnp.where(in_hi, med_lo, _set_bit(med_lo, mbit, bshift))
+        mbit_b = jnp.broadcast_to(mbit, hi.shape)
+        dev = active & (bit.astype(jnp.bool_) != mbit_b)
+        forced = jnp.where(dev, bit, forced)
+        active = active & ~dev
+        return active, forced, med_hi, med_lo
+
+    _, _, med_hi, med_lo = jax.lax.fori_loop(
+        0, 64, body, (active, forced, med_hi, med_lo)
+    )
+    return med_hi, med_lo
+
+
+# ---------------------------------------------------------------------------
+# Float front ends (quantize → bit-serial scan → dequantize)
+# ---------------------------------------------------------------------------
+
+
+def median(x, *, bits: int = 32, scale=None, weights=None,
+           axis_name: Optional[str] = None):
+    """Bit-serial median of float data along axis 0 (per remaining dims)."""
+    if scale is None:
+        scale = quantizer.auto_scale(
+            x.reshape(x.shape[0], -1), bits
+        ).reshape(x.shape[1:]) if x.ndim > 1 else quantizer.auto_scale(
+            x[:, None], bits
+        )[0]
+    b = min(bits, 32)
+    spec = quantizer.FixedPointSpec(bits=b, scale=scale)
+    q = quantizer.quantize(x, spec)
+    u = quantizer.to_unsigned_order(q, bits=b)
+    med_u = median_bits(u, weights=weights, bits=b, axis_name=axis_name)
+    return quantizer.dequantize(quantizer.from_unsigned_order(med_u, bits=b),
+                                spec)
+
+
+def grouped_median(x, assign, k: int, *, bits: int = 32, scale=None,
+                   weights=None, axis_name: Optional[str] = None):
+    """Per-cluster float medians: x (N, D), assign (N,) → ((k, D), totals)."""
+    if scale is None:
+        scale = quantizer.auto_scale(x, bits)
+    b = min(bits, 32)
+    spec = quantizer.FixedPointSpec(bits=b, scale=scale)
+    q = quantizer.quantize(x, spec)
+    u = quantizer.to_unsigned_order(q, bits=b)
+    med_u, totals = grouped_median_bits(
+        u, assign, k, weights=weights, bits=b, axis_name=axis_name
+    )
+    return (quantizer.dequantize(quantizer.from_unsigned_order(med_u, bits=b),
+                                 spec), totals)
+
+
+def sort_median_ref(x, axis=0):
+    """Sort-based lower-median oracle (the semantics the majority tie-break
+    yields): element at 1-based rank ceil(N/2)."""
+    n = x.shape[axis]
+    xs = jnp.sort(x, axis=axis)
+    idx = (n + 1) // 2 - 1
+    return jnp.take(xs, idx, axis=axis)

@@ -1,0 +1,125 @@
+"""Cross-pod gradient compression via k-means codebook quantization.
+
+The multi-pod mesh's slowest wire is the pod-to-pod link.  This module
+compresses each gradient tensor to a k-entry codebook (the paper's
+clustering engine applied 1-D to gradient values) + 4-bit indices before
+the cross-pod reduction, with error feedback so the quantization error is
+carried to the next step instead of lost (standard EF-SGD argument).
+
+Compression model (k=16): 4 bits/element + k floats ≈ 8× fewer bytes than
+fp32 across the pod link.  The codebook fit is a tiny 1-D k-means run per
+tensor per step (few Lloyd iterations over a subsample).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressConfig:
+    k: int = 16              # codebook entries (4-bit indices)
+    iters: int = 8           # Lloyd iterations for the 1-D codebook
+    sample: int = 4096       # subsample size for the fit
+    error_feedback: bool = True
+
+
+class EFState(NamedTuple):
+    residual: object  # pytree like grads
+
+
+def _fit_codebook_1d(x_flat, k: int, iters: int, sample: int):
+    """1-D k-means codebook over (a subsample of) the values."""
+    n = x_flat.shape[0]
+    idx = (jnp.arange(sample) * jnp.maximum(n // sample, 1)) % jnp.maximum(n, 1)
+    xs = x_flat[idx]
+    lo, hi = jnp.min(xs), jnp.max(xs)
+    cents = lo + (hi - lo) * (jnp.arange(k, dtype=jnp.float32) + 0.5) / k
+
+    def body(_, c):
+        d = jnp.abs(xs[:, None] - c[None, :])
+        a = jnp.argmin(d, axis=1)
+        onehot = jax.nn.one_hot(a, k, dtype=jnp.float32)
+        sums = onehot.T @ xs
+        counts = onehot.sum(0)
+        return jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), c)
+
+    return jax.lax.fori_loop(0, iters, body, cents)
+
+
+def quantize_tensor(g, cfg: CompressConfig):
+    """Returns (indices uint8, codebook (k,)) for tensor g."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    cents = _fit_codebook_1d(flat, cfg.k, cfg.iters,
+                             min(cfg.sample, flat.shape[0]))
+    d = jnp.abs(flat[:, None] - cents[None, :])
+    idx = jnp.argmin(d, axis=1).astype(jnp.uint8)
+    return idx.reshape(g.shape), cents
+
+
+def dequantize_tensor(idx, cents):
+    return jnp.take(cents, idx.astype(jnp.int32), axis=0)
+
+
+def compress_decompress(g, cfg: CompressConfig):
+    """Round-trip (what the wire sees): returns (g_hat, err)."""
+    idx, cents = quantize_tensor(g, cfg)
+    g_hat = dequantize_tensor(idx, cents)
+    return g_hat, g - g_hat
+
+
+def make_grad_transform(cfg: CompressConfig, axis_name: str = None):
+    """Gradient transform for the optimizer hook.
+
+    Without error feedback this is a pure transform; with it the caller
+    threads EFState explicitly via ``apply_ef``.  Under pjit the cross-pod
+    all-reduce happens on the *quantized* values; here we model the
+    quantize→reduce→dequantize round trip (the compression error is what
+    matters for convergence; wire-byte savings are reported analytically in
+    the benchmarks).
+    """
+    def transform(grads):
+        def one(g):
+            if g.size < 1024:  # tiny tensors aren't worth compressing
+                return g
+            g_hat, _ = compress_decompress(g, cfg)
+            return g_hat.astype(g.dtype)
+        return jax.tree.map(one, grads)
+
+    return transform
+
+
+def apply_ef(grads, ef: EFState, cfg: CompressConfig):
+    """Error-feedback round: compress (grads + residual), carry new residual."""
+    def one(g, r):
+        if g.size < 1024:
+            return g, jnp.zeros_like(g)
+        gc = g.astype(jnp.float32) + r
+        g_hat, err = compress_decompress(gc, cfg)
+        return g_hat.astype(g.dtype), err
+
+    pairs = jax.tree.map(one, grads, ef.residual)
+    g_hat = jax.tree.map(lambda p: p[0], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda p: p[1], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return g_hat, EFState(res)
+
+
+def init_ef(params) -> EFState:
+    return EFState(jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def wire_bytes(params_tree, cfg: CompressConfig) -> dict:
+    """Analytic wire-byte comparison for one cross-pod all-reduce."""
+    fp32 = sum(l.size * 4 for l in jax.tree.leaves(params_tree))
+    comp = sum((l.size // 2 + cfg.k * 4) if l.size >= 1024 else l.size * 4
+               for l in jax.tree.leaves(params_tree))
+    return {"fp32_bytes": fp32, "compressed_bytes": comp,
+            "ratio": fp32 / max(comp, 1)}

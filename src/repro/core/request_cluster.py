@@ -1,0 +1,97 @@
+"""Request processing: clustering-based batch formation for serving.
+
+Static batching pads every request in a batch to the longest prompt in it;
+with mixed lengths the padding waste dominates.  This module clusters the
+queued requests by (prompt_len, expected_new_tokens) features using the
+paper's bit-serial k-medians (medians — not means — because request-length
+distributions are heavy-tailed, the paper's exact motivation) and forms
+batches within clusters, minimizing padded-token waste.
+
+``plan_batches`` is the scheduler entry; ``padding_waste`` the metric the
+benchmark compares against FIFO batching (paper-table analogue).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import clustering
+from repro.core.clustering import ClusterConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    uid: int
+    prompt_len: int
+    max_new_tokens: int
+
+
+class BatchPlan(NamedTuple):
+    batches: List[List[int]]      # request uids per batch
+    waste: float                  # padded-token fraction
+
+
+def features(reqs: Sequence[Request]) -> np.ndarray:
+    return np.array([[r.prompt_len, r.max_new_tokens] for r in reqs],
+                    np.float32)
+
+
+def plan_batches(reqs: Sequence[Request], batch_size: int,
+                 n_clusters: int = 4, seed: int = 0) -> BatchPlan:
+    """Cluster by (len, gen) with bit-serial k-medians, then fill batches
+    cluster-by-cluster in sorted-length order."""
+    if not reqs:
+        return BatchPlan([], 0.0)
+    x = features(reqs)
+    if len(reqs) < 4 * batch_size:
+        # tiny queue: a global length sort is optimal; clustering pays off
+        # on large queues where the 2-D (len, gen) structure matters
+        order = np.argsort(x[:, 0], kind="stable").tolist()
+        batches = [order[i:i + batch_size]
+                   for i in range(0, len(order), batch_size)]
+        waste = padding_waste([[reqs[i] for i in b] for b in batches])
+        return BatchPlan([[reqs[i].uid for i in b] for b in batches], waste)
+    k = min(n_clusters, len(reqs))
+    cfg = ClusterConfig(k=k, metric="l1", centroid="median", max_iters=10,
+                        bits=16, seed=seed)
+    res = clustering.fit(jnp.asarray(x), cfg, use_kernel=False)
+    assign = np.asarray(res.assign)
+
+    # order clusters by median prompt length; inside a cluster sort by length
+    order = []
+    for c in range(k):
+        idx = np.where(assign == c)[0]
+        if len(idx) == 0:
+            continue
+        idx = idx[np.argsort(x[idx, 0], kind="stable")]
+        order.extend(idx.tolist())
+
+    batches = [order[i:i + batch_size]
+               for i in range(0, len(order), batch_size)]
+    waste = padding_waste([[reqs[i] for i in b] for b in batches])
+    return BatchPlan([[reqs[i].uid for i in b] for b in batches], waste)
+
+
+def plan_fifo(reqs: Sequence[Request], batch_size: int) -> BatchPlan:
+    batches = [list(range(len(reqs)))[i:i + batch_size]
+               for i in range(0, len(reqs), batch_size)]
+    waste = padding_waste([[reqs[i] for i in b] for b in batches])
+    return BatchPlan([[reqs[i].uid for i in b] for b in batches], waste)
+
+
+def padding_waste(batches: List[List[Request]]) -> float:
+    """Fraction of padded prompt tokens across all batches."""
+    padded, useful = 0, 0
+    for b in batches:
+        if not b:
+            continue
+        mx = max(r.prompt_len for r in b)
+        for r in b:
+            useful += r.prompt_len
+            padded += mx - r.prompt_len
+    return padded / max(padded + useful, 1)

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: blocked distance + argmin (assignment step).
+
+The clustering assignment step (closest-centroid search) is the other
+compute hot-spot of Algorithm 1.  L2 uses the MXU expansion
+‖x‖² − 2·x·cᵀ + ‖c‖²; L1 loops over centroids on the VPU (no (N, K, D)
+intermediate is ever materialized).
+
+Layout (per grid instance over N tiles):
+  x     (TN, D)  f32
+  cents (K, D)   f32  (resident, replicated across instances)
+  out   assign (TN, 1) int32, mindist (TN, 1) f32
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel_l2(x_ref, c_ref, a_ref, m_ref):
+    x = x_ref[...]                          # (TN, D)
+    c = c_ref[...]                          # (K, D)
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)            # (TN, 1)
+    c2 = jnp.sum(c * c, axis=1)[None, :]                  # (1, K)
+    xc = jax.lax.dot_general(x, c, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (TN, K)
+    dist = jnp.maximum(x2 - 2.0 * xc + c2, 0.0)
+    a_ref[...] = jnp.argmin(dist, axis=1).astype(jnp.int32)[:, None]
+    m_ref[...] = jnp.min(dist, axis=1)[:, None]
+
+
+def _kernel_l1(x_ref, c_ref, a_ref, m_ref, *, k: int):
+    x = x_ref[...]                          # (TN, D)
+    c = c_ref[...]                          # (K, D)
+    tn = x.shape[0]
+
+    def body(i, carry):
+        best_d, best_i = carry
+        di = jnp.sum(jnp.abs(x - c[i][None, :]), axis=1)   # (TN,)
+        better = di < best_d
+        return (jnp.where(better, di, best_d),
+                jnp.where(better, i, best_i))
+
+    best_d0 = jnp.full((tn,), jnp.inf, jnp.float32)
+    best_i0 = jnp.zeros((tn,), jnp.int32)
+    best_d, best_i = jax.lax.fori_loop(0, k, body, (best_d0, best_i0))
+    a_ref[...] = best_i[:, None]
+    m_ref[...] = best_d[:, None]
+
+
+def distance_argmin_pallas(x, cents, *, metric: str = "l2",
+                           n_block: int = 1024, interpret: bool = False):
+    """x (N, D) f32, cents (K, D) f32 → (assign (N,), mindist (N,))."""
+    n, d = x.shape
+    k = cents.shape[0]
+    pad_n = (-n) % n_block
+    if pad_n:
+        x = jnp.pad(x, ((0, pad_n), (0, 0)))
+    np_ = n + pad_n
+    grid = (np_ // n_block,)
+
+    kern = (_kernel_l2 if metric == "l2"
+            else functools.partial(_kernel_l1, k=k))
+    assign, mind = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_block, d), lambda i: (i, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((k, d), lambda i: (0, 0), memory_space=pltpu.VMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((n_block, 1), lambda i: (i, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((n_block, 1), lambda i: (i, 0),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_, 1), jnp.int32),
+            jax.ShapeDtypeStruct((np_, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x.astype(jnp.float32), cents.astype(jnp.float32))
+    return assign[:n, 0], mind[:n, 0]

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: flash-decode — one-token attention over a long KV
+cache with VMEM chunking and an online softmax carried across grid steps.
+
+The TPU grid executes sequentially per core, so the (m, l, acc) flash
+state lives in VMEM scratch across the chunk dimension: the KV cache
+streams HBM→VMEM exactly once, at chunk granularity, and the (G, Dh)
+accumulator never leaves VMEM — the same "operands stay resident, move
+one reduction step at a time" structure as the bit-serial median kernel.
+
+Layout (grid = (B, Hkv, S/C)):
+  t     (1, 1)  SMEM  — valid cache length (positions ≥ t are masked)
+  q     (1, 1, G, Dh)  — this kv-head's query group
+  k, v  (1, C, 1, Dh)  — one cache chunk for this (batch, kv-head)
+  out   (1, 1, G, Dh)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(t_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+            chunk: int, n_chunks: int, scale: float, softcap):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s[...], NEG)
+        l_s[...] = jnp.zeros_like(l_s[...])
+        acc_s[...] = jnp.zeros_like(acc_s[...])
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (G, Dh)
+    k = k_ref[0, :, 0].astype(jnp.float32)               # (C, Dh)
+    v = v_ref[0, :, 0].astype(jnp.float32)               # (C, Dh)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    kpos = ci * chunk + jax.lax.broadcasted_iota(jnp.int32, (1, chunk), 1)
+    s = jnp.where(kpos < t_ref[0, 0], s, NEG)            # (G, C)
+
+    m_old = m_s[...]                                     # (G, 1)
+    m_new = jnp.maximum(m_old, s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_old - m_new)
+    l_s[...] = l_s[...] * corr + p.sum(-1, keepdims=True)
+    acc_s[...] = acc_s[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(ci == n_chunks - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_s[...]
+                       / jnp.maximum(l_s[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode_pallas(q, k, v, t, *, scale: float, softcap=None,
+                        chunk: int = 512, interpret: bool = False):
+    """q (B, Hq, Dh), k/v (B, S, Hkv, Dh), t scalar int32 (valid length)
+    → (B, Hq, Dh).  Exact (full-cache) decode attention."""
+    b, hq, dh = q.shape
+    _, s, hkv, _ = k.shape
+    g = hq // hkv
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (s + pad) // chunk
+    qh = q.reshape(b, hkv, g, dh)
+    t_arr = jnp.full((1, 1), t, jnp.int32)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, n_chunks=nc, scale=scale,
+                          softcap=softcap),
+        grid=(b, hkv, nc),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, dh), lambda i, h, c: (i, h, 0, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, chunk, 1, dh), lambda i, h, c: (i, c, h, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, chunk, 1, dh), lambda i, h, c: (i, c, h, 0),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh), lambda i, h, c: (i, h, 0, 0),
+                               memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(t_arr, qh, k, v)
+    return out.reshape(b, hq, dh)

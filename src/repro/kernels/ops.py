@@ -1,0 +1,63 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode so the
+kernel bodies are validated end to end; on a TPU backend they compile via
+Mosaic.  Above the VMEM point-budget the grouped median falls back to the
+pure-JAX two-level reduction-tree path (``core.bitserial``) — mirroring the
+paper, where datasets beyond one storage array go through the hierarchical
+merge network.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitserial
+from repro.kernels import bitserial_median as _bsm
+from repro.kernels import distance_argmin as _da
+
+# points that fit the VMEM-resident kernel comfortably (u + active + forced
+# + temporaries at TD=128 lanes ≈ 4 f32 planes ⇒ ~8 MB at 4096 points)
+MAX_KERNEL_POINTS = 4096
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("k", "bits", "d_block", "interpret",
+                                   "force_kernel"))
+def grouped_median_bits(u, assign, k: int, weights=None, *, bits: int = 32,
+                        d_block: int = 128, interpret: bool | None = None,
+                        force_kernel: bool = False):
+    """Per-cluster bit-serial medians of unsigned-ordered uint32 data.
+
+    u (N, D), assign (N,) → (med (k, D) uint32, totals (k,) f32).
+    """
+    n = u.shape[0]
+    if weights is None:
+        weights = jnp.ones((n,), jnp.float32)
+    if interpret is None:
+        interpret = _interpret_default()
+    if n <= MAX_KERNEL_POINTS or force_kernel:
+        med = _bsm.grouped_median_pallas(u, assign, weights, k, bits=bits,
+                                         d_block=d_block, interpret=interpret)
+        onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)
+        totals = (onehot * weights[:, None]).sum(axis=0)
+        return med, totals
+    return bitserial.grouped_median_bits(u, assign, k, weights=weights,
+                                         bits=bits)
+
+
+@partial(jax.jit, static_argnames=("metric", "n_block", "interpret"))
+def distance_argmin(x, cents, *, metric: str = "l2", n_block: int = 1024,
+                    interpret: bool | None = None):
+    """Closest-centroid assignment: (assign (N,), mindist (N,))."""
+    if interpret is None:
+        interpret = _interpret_default()
+    nb = min(n_block, max(8, x.shape[0]))
+    return _da.distance_argmin_pallas(x, cents, metric=metric, n_block=nb,
+                                      interpret=interpret)

@@ -1,0 +1,78 @@
+"""Pure oracles for the Pallas kernels (numpy; independent implementations).
+
+Semantics pinned here:
+  * median = LOWER median (1-based rank ceil(n/2)) — what the paper's
+    majority tie-break ("output is 0 when N/2 or more inputs are 0") yields.
+  * grouped medians operate on the fixed-point grid; since quantization is
+    monotone it commutes with order statistics, so the float-level oracle is
+    dequantize(quantize(lower_median)).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def lower_median_ref(x: np.ndarray, axis: int = 0) -> np.ndarray:
+    """Lower median along ``axis``."""
+    x = np.asarray(x)
+    n = x.shape[axis]
+    xs = np.sort(x, axis=axis)
+    idx = (n + 1) // 2 - 1
+    return np.take(xs, idx, axis=axis)
+
+
+def weighted_lower_median_ref(x: np.ndarray, w: np.ndarray) -> np.ndarray:
+    """Weighted lower median along axis 0 (integer weights == repetition).
+
+    x: (N, D), w: (N,) non-negative ints.  Returns (D,).
+    Lower median of the multiset where x[i] appears w[i] times: smallest v
+    with cumulative weight >= ceil(W/2).
+    """
+    x = np.asarray(x, np.float64)
+    w = np.asarray(w, np.float64)
+    n, d = x.shape
+    out = np.zeros((d,), np.float64)
+    W = w.sum()
+    target = np.ceil(W / 2.0)
+    for j in range(d):
+        order = np.argsort(x[:, j], kind="stable")
+        cum = np.cumsum(w[order])
+        pos = np.searchsorted(cum, target, side="left")
+        out[j] = x[order[min(pos, n - 1)], j]
+    return out
+
+
+def grouped_median_ref(x: np.ndarray, assign: np.ndarray, k: int,
+                       fill: np.ndarray | None = None) -> tuple[np.ndarray, np.ndarray]:
+    """Per-cluster lower medians.  x (N, D), assign (N,) → ((k, D), counts).
+
+    Empty clusters take ``fill`` rows (or 0).
+    """
+    x = np.asarray(x)
+    n, d = x.shape
+    med = np.zeros((k, d), x.dtype)
+    counts = np.zeros((k,), np.int64)
+    for c in range(k):
+        m = assign == c
+        counts[c] = m.sum()
+        if counts[c] == 0:
+            med[c] = 0.0 if fill is None else fill[c]
+        else:
+            med[c] = lower_median_ref(x[m], axis=0)
+    return med, counts
+
+
+def distance_argmin_ref(x: np.ndarray, cents: np.ndarray, metric: str = "l2"
+                        ) -> tuple[np.ndarray, np.ndarray]:
+    """x (N, D), cents (K, D) → (assign (N,), mindist (N,)).
+    L2 distances are squared."""
+    x = np.asarray(x, np.float32)
+    cents = np.asarray(cents, np.float32)
+    if metric == "l2":
+        d = ((x[:, None, :] - cents[None, :, :]) ** 2).sum(-1)
+    elif metric == "l1":
+        d = np.abs(x[:, None, :] - cents[None, :, :]).sum(-1)
+    else:
+        raise ValueError(metric)
+    return d.argmin(1).astype(np.int32), d.min(1).astype(np.float32)

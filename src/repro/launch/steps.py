@@ -1,0 +1,373 @@
+"""Step builders + abstract input specs for every (arch × shape) cell.
+
+``lower_step`` produces the pjit-lowered artifact for a cell on a mesh:
+  * parameter/optimizer trees are abstract (jax.eval_shape — no allocation),
+  * partition specs come from the name-based rules (sharding/rules.py),
+  * the logical-axis rules context is active during tracing so model-level
+    ``annotate`` calls resolve against the target mesh,
+  * decode cells shard the KV sequence axis when the batch cannot cover the
+    data axis (sequence-parallel long-context decode).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig, ShapeCell
+from repro.optim import adamw
+from repro.sharding import (Rules, default_table, tree_param_specs, use_rules)
+
+
+@dataclasses.dataclass(frozen=True)
+class StepOptions:
+    kv_repeat: int = 1
+    fsdp: bool = False
+    seq_shard: bool = False
+    remat: bool = True
+    loss_chunk: int = 256
+    microbatch: int = 1
+    kv_mode: str = "exact"        # "clustered" = paper's KV memory manager;
+                                  # "int8" = quantized exact cache
+    kv_clusters: int = 512
+    kv_tail: int = 256
+    mla_seq_shard: bool = False   # shard the MLA latent cache's seq axis
+                                  # over the model axis (headless cache)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    shapes = jax.eval_shape(partial(tfm.init_params, cfg=cfg),
+                            jax.random.PRNGKey(0))
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Active params per token (MoE: top_k + shared experts only)."""
+    total = param_count(cfg)
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    n_prefix, n_rep, tail = tfm.layout(cfg)
+    n_moe_layers = n_rep * len(cfg.layer_pattern) + len(tail)
+    per_expert = 3 * cfg.d_model * m.d_expert
+    inactive = n_moe_layers * (m.n_routed - m.top_k) * per_expert
+    return total - inactive
+
+
+def pick_kv_repeat(cfg: ModelConfig, mesh: Mesh) -> int:
+    if cfg.attn_kind == "mla" or cfg.attention_free:
+        return 1
+    ms = mesh.shape["model"]
+    kv = cfg.n_kv_heads
+    if kv <= 1 or kv >= ms:
+        return 1  # MQA stays un-replicated (cache size), big kv already fine
+    r = ms // kv
+    if kv * r == ms and cfg.n_heads % (kv * r) == 0:
+        return r
+    return 1
+
+
+def pick_microbatch(cfg: ModelConfig, mesh: Mesh, cell: ShapeCell,
+                    budget_bytes: float = 9e9) -> int:
+    """Smallest power-of-two microbatch count keeping the per-device
+    activation estimate under budget.  Activation model: scan saves the
+    layer-boundary hidden per layer (remat recomputes the interior), plus
+    the fp32 logits chunk of the chunked CE."""
+    if cell.step != "train":
+        return 1
+    data_size = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    local_b = max(cell.global_batch // data_size, 1)
+    s = cell.seq_len
+    m = 1
+    while m < local_b:
+        b_eff = local_b / m
+        acts = cfg.n_layers * b_eff * s * cfg.d_model * 2 * 2.5
+        logits = b_eff * 256 * cfg.padded_vocab * 4 * 2
+        if acts + logits < budget_bytes:
+            break
+        m *= 2
+    return m
+
+
+def pick_options(cfg: ModelConfig, mesh: Mesh, cell: ShapeCell,
+                 **overrides) -> StepOptions:
+    data_size = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    opts = StepOptions(
+        kv_repeat=pick_kv_repeat(cfg, mesh),
+        # ZeRO/FSDP pays off for optimizer+master state; serving steps keep
+        # weights TP-resident (re-gathering them per token is pure waste)
+        fsdp=param_count(cfg) > 2e10 and cell.step == "train",
+        seq_shard=(cell.step == "decode"
+                   and cell.global_batch < data_size),
+        mla_seq_shard=(cfg.attn_kind == "mla" and cell.step == "decode"),
+        microbatch=pick_microbatch(cfg, mesh, cell),
+    )
+    return dataclasses.replace(opts, **overrides)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (abstract) + partition specs
+# ---------------------------------------------------------------------------
+
+
+def batch_struct(cfg: ModelConfig, cell: ShapeCell):
+    """ShapeDtypeStructs for the step inputs (weak-type-correct stand-ins)."""
+    gb, s = cell.global_batch, cell.seq_len
+    i32, bf16 = jnp.int32, jnp.bfloat16
+    if cell.step == "train":
+        out = {}
+        if cfg.is_encdec:
+            se = s // 2
+            out["enc_embeds"] = jax.ShapeDtypeStruct((gb, se, cfg.d_model),
+                                                     bf16)
+            out["tokens"] = jax.ShapeDtypeStruct((gb, s - se), i32)
+            out["labels"] = jax.ShapeDtypeStruct((gb, s - se), i32)
+        else:
+            st = s - cfg.n_frontend_tokens
+            if cfg.n_frontend_tokens:
+                out["frontend_embeds"] = jax.ShapeDtypeStruct(
+                    (gb, cfg.n_frontend_tokens, cfg.d_model), bf16)
+            out["tokens"] = jax.ShapeDtypeStruct((gb, st), i32)
+            out["labels"] = jax.ShapeDtypeStruct((gb, st), i32)
+        return out
+    if cell.step == "prefill":
+        out = {}
+        if cfg.is_encdec:
+            se = s // 2
+            out["enc_embeds"] = jax.ShapeDtypeStruct((gb, se, cfg.d_model),
+                                                     bf16)
+            out["tokens"] = jax.ShapeDtypeStruct((gb, s - se), i32)
+        else:
+            st = s - cfg.n_frontend_tokens
+            if cfg.n_frontend_tokens:
+                out["frontend_embeds"] = jax.ShapeDtypeStruct(
+                    (gb, cfg.n_frontend_tokens, cfg.d_model), bf16)
+            out["tokens"] = jax.ShapeDtypeStruct((gb, st), i32)
+        return out
+    # decode: one new token against a seq_len cache
+    return {"tokens": jax.ShapeDtypeStruct((gb, 1), i32),
+            "t": jax.ShapeDtypeStruct((), i32)}
+
+
+def batch_pspec(cfg: ModelConfig, cell: ShapeCell, rules: Rules):
+    b = rules.axes_for("batch", cell.global_batch)
+    if cell.step in ("train", "prefill"):
+        spec = {"tokens": P(b, None)}
+        if cell.step == "train":
+            spec["labels"] = P(b, None)
+        if cfg.is_encdec:
+            spec["enc_embeds"] = P(b, None, None)
+        elif cfg.n_frontend_tokens:
+            spec["frontend_embeds"] = P(b, None, None)
+        return spec
+    return {"tokens": P(b, None), "t": P()}
+
+
+def cache_struct(cfg: ModelConfig, cell: ShapeCell, opts: StepOptions):
+    def build():
+        if cfg.is_encdec:
+            se = cell.seq_len // 2
+            enc = jnp.zeros((cell.global_batch, se, cfg.d_model),
+                            jnp.bfloat16)
+            _, cache = tfm.prefill(
+                tfm.init_params(jax.random.PRNGKey(0), cfg), cfg,
+                jnp.zeros((cell.global_batch, se), jnp.int32),
+                max_seq=se, enc_embeds=enc, kv_repeat=opts.kv_repeat)
+            return cache
+        return tfm.init_cache(cfg, cell.global_batch, cell.seq_len,
+                              opts.kv_repeat, kv_mode=opts.kv_mode,
+                              kv_clusters=opts.kv_clusters,
+                              kv_tail=opts.kv_tail)
+
+    return jax.eval_shape(build)
+
+
+def _cache_leaf_spec(path: str, shape, rules: Rules) -> P:
+    b = rules.axes_for("batch", shape[0]) if len(shape) else None
+    if path.endswith("_scale"):
+        return P(rules.axes_for("kv_heads", shape[0]))
+    if path.endswith("/k") or path.endswith("/v"):
+        return P(b, rules.axes_for("kvseq", shape[1]),
+                 rules.axes_for("kv_heads", shape[2]), None)
+    if path.endswith("ckv") or path.endswith("kpe"):
+        return P(b, rules.axes_for("kvseq", shape[1]), None)
+    if path.endswith("conv"):
+        return P(b, None, rules.axes_for("ssm_ch", shape[2]))
+    if path.endswith("ssm"):
+        return P(b, rules.axes_for("ssm_heads", shape[1]), None, None)
+    if path.endswith("/h"):
+        return P(b, rules.axes_for("lru", shape[1]))
+    return P(*([b] + [None] * (len(shape) - 1))) if len(shape) else P()
+
+
+def cache_pspecs(cache_shapes, rules: Rules):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    specs = []
+    for kp, leaf in flat:
+        path = "/".join(_key(k) for k in kp)
+        # scan-stacked caches carry a leading layer dim
+        shape = leaf.shape
+        if "scan" in path and len(shape) >= 1:
+            inner = _cache_leaf_spec(path, shape[1:], rules)
+            specs.append(P(*([None] + list(inner))))
+        else:
+            specs.append(_cache_leaf_spec(path, shape, rules))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _key(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, aw: adamw.AdamWConfig,
+                    opts: StepOptions, grad_transform=None):
+    def loss_fn(params, batch):
+        return tfm.train_loss(params, cfg, batch, kv_repeat=opts.kv_repeat,
+                              remat=opts.remat, loss_chunk=opts.loss_chunk)
+
+    def step(params, opt_state, batch):
+        if opts.microbatch > 1:
+            grads, (loss, metrics) = _accum_grads(loss_fn, params, batch,
+                                                  opts.microbatch)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        params, opt_state, om = adamw.update(grads, opt_state, params, aw,
+                                             grad_transform=grad_transform)
+        metrics = dict(metrics, loss=loss, **om)
+        return params, opt_state, metrics
+
+    return step
+
+
+def _accum_grads(loss_fn, params, batch, n_micro: int):
+    def split(x):
+        b = x.shape[0]
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+    micro = jax.tree.map(split, batch)
+
+    def body(carry, mb):
+        gsum, lsum = carry
+        (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, mb)
+        gsum = jax.tree.map(lambda a, b_: a + b_.astype(jnp.float32), gsum, g)
+        return (gsum, lsum + loss), metrics
+
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (gsum, lsum), ms = jax.lax.scan(body, (g0, jnp.float32(0.0)), micro)
+    grads = jax.tree.map(lambda g: g / n_micro, gsum)
+    metrics = jax.tree.map(lambda m: m[-1], ms)
+    return grads, (lsum / n_micro, metrics)
+
+
+def make_prefill_step(cfg: ModelConfig, cell: ShapeCell, opts: StepOptions):
+    def step(params, batch):
+        return tfm.prefill(
+            params, cfg, batch["tokens"],
+            max_seq=(cell.seq_len // 2 if cfg.is_encdec else cell.seq_len),
+            frontend_embeds=batch.get("frontend_embeds"),
+            enc_embeds=batch.get("enc_embeds"),
+            kv_repeat=opts.kv_repeat)
+
+    return step
+
+
+def make_decode_step(cfg: ModelConfig, opts: StepOptions):
+    def step(params, cache, batch):
+        return tfm.decode_step(params, cfg, cache, batch["tokens"],
+                               batch["t"], kv_repeat=opts.kv_repeat)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Lowering driver (the dry-run entry)
+# ---------------------------------------------------------------------------
+
+
+def lower_step(cfg: ModelConfig, mesh: Mesh, cell: ShapeCell,
+               opts: Optional[StepOptions] = None,
+               aw: Optional[adamw.AdamWConfig] = None,
+               grad_transform=None):
+    """Lower the cell's step on the mesh.  Returns (lowered, info dict)."""
+    multi_pod = "pod" in mesh.axis_names
+    if opts is None:
+        opts = pick_options(cfg, mesh, cell)
+    table = default_table(multi_pod, seq_shard=opts.seq_shard)
+    if opts.mla_seq_shard:
+        table["kvseq"] = ("model",)
+    rules = Rules(mesh, table, fsdp=opts.fsdp)
+
+    pshapes = jax.eval_shape(partial(tfm.init_params, cfg=cfg),
+                             jax.random.PRNGKey(0))
+    if cell.step != "train":
+        # serving stores weights in the compute dtype (bf16); fp32 master
+        # copies only exist in the training job
+        cdt = jnp.dtype(cfg.dtype)
+        pshapes = jax.tree.map(
+            lambda l: (jax.ShapeDtypeStruct(l.shape, cdt)
+                       if jnp.issubdtype(l.dtype, jnp.floating) else l),
+            pshapes)
+    pspecs = tree_param_specs(pshapes, rules)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                       is_leaf=lambda s: isinstance(s, P))
+    bstruct = batch_struct(cfg, cell)
+    bspecs = batch_pspec(cfg, cell, rules)
+    bsh = {k: NamedSharding(mesh, v) for k, v in bspecs.items()}
+
+    info = {"options": dataclasses.asdict(opts),
+            "params": param_count(cfg),
+            "active_params": active_param_count(cfg)}
+    if cell.step in ("decode", "prefill"):
+        cs = cache_struct(cfg, cell, opts)
+        info["cache_bytes"] = int(sum(
+            math.prod(l.shape) * l.dtype.itemsize
+            for l in jax.tree.leaves(cs)))
+
+    with use_rules(rules):
+        if cell.step == "train":
+            aw = aw or adamw.AdamWConfig()
+            ostruct = jax.eval_shape(adamw.init, pshapes)
+            ospecs = adamw.OptState(pspecs, pspecs, P())
+            osh = jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs,
+                               is_leaf=lambda s: isinstance(s, P))
+            fn = make_train_step(cfg, aw, opts, grad_transform)
+            jfn = jax.jit(fn, in_shardings=(psh, osh, bsh),
+                          out_shardings=(psh, osh, None))
+            lowered = jfn.lower(pshapes, ostruct, bstruct)
+        elif cell.step == "prefill":
+            cstruct = cache_struct(cfg, cell, opts)
+            cspecs = cache_pspecs(cstruct, rules)
+            csh = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs,
+                               is_leaf=lambda s: isinstance(s, P))
+            fn = make_prefill_step(cfg, cell, opts)
+            jfn = jax.jit(fn, in_shardings=(psh, bsh),
+                          out_shardings=(None, csh))
+            lowered = jfn.lower(pshapes, bstruct)
+        else:  # decode
+            cstruct = cache_struct(cfg, cell, opts)
+            cspecs = cache_pspecs(cstruct, rules)
+            csh = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs,
+                               is_leaf=lambda s: isinstance(s, P))
+            fn = make_decode_step(cfg, opts)
+            jfn = jax.jit(fn, in_shardings=(psh, csh, bsh),
+                          out_shardings=(None, csh))
+            lowered = jfn.lower(pshapes, cstruct, bstruct)
+    return lowered, info

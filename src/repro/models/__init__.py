@@ -1,0 +1,1 @@
+from repro.models import config, transformer  # noqa: F401

@@ -1,0 +1,159 @@
+"""Shared building blocks: inits, norms, embeddings, positions, MLPs.
+
+Parameters are nested dicts of fp32 arrays; compute casts to the config
+dtype at use.  All inits are traceable (dry-run builds parameter trees via
+``jax.eval_shape`` — no allocation).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def rng_for(rng, name: str):
+    """Deterministic per-parameter rng (stable under refactoring)."""
+    h = 0
+    for ch in name:
+        h = (h * 131 + ord(ch)) % (2**31 - 1)
+    return jax.random.fold_in(rng, h)
+
+
+def dense_init(rng, shape, scale: float = 0.02):
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32)
+            * scale)
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(rng, cfg: ModelConfig, dim: int):
+    if cfg.norm_kind == "layernorm":
+        return {"scale": jnp.ones((dim,), jnp.float32),
+                "bias": jnp.zeros((dim,), jnp.float32)}
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_kind == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"] + p["bias"]
+    else:
+        var = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(scale, x, eps: float = 1e-6):
+    """qk-norm over the head_dim axis: x (..., Dh), scale (Dh,)."""
+    xf = x.astype(jnp.float32)
+    var = (xf * xf).mean(-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / positions / head
+# ---------------------------------------------------------------------------
+
+
+def init_embed(rng, cfg: ModelConfig):
+    p = {"table": dense_init(rng_for(rng, "embed"), (cfg.padded_vocab,
+                                                     cfg.d_model), 1.0)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(rng_for(rng, "lm_head"),
+                               (cfg.d_model, cfg.padded_vocab))
+    return p
+
+
+def embed_tokens(p, tokens, cfg: ModelConfig):
+    h = jnp.take(p["table"], tokens, axis=0).astype(cdtype(cfg))
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model**0.5, cdtype(cfg))
+    return h
+
+
+def lm_logits(p, h, cfg: ModelConfig):
+    """h (..., d) -> logits (..., padded_vocab), fp32."""
+    if cfg.tie_embeddings:
+        w = p["table"].astype(cdtype(cfg)).T
+    else:
+        w = p["head"].astype(cdtype(cfg))
+    logits = jnp.einsum("...d,dv->...v", h, w,
+                        preferred_element_type=jnp.float32)
+    if cfg.final_logit_softcap:
+        c = cfg.final_logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits
+
+
+def sinusoidal_pos(seq_len: int, dim: int, offset=0):
+    pos = jnp.arange(seq_len)[:, None] + offset
+    i = jnp.arange(dim // 2)[None, :]
+    ang = pos / jnp.power(10000.0, 2.0 * i / dim)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim // 2, dtype=jnp.float32)
+                     / (head_dim // 2))
+
+
+def apply_rope(x, positions, theta: float):
+    """x (..., S, H, Dh) with positions (..., S) or (S,)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    sin = jnp.sin(ang)[..., None, :]                    # (..., S, 1, Dh/2)
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(rng, cfg: ModelConfig, d_ff: int, name: str = "mlp"):
+    d = cfg.d_model
+    return {
+        "w_gate": dense_init(rng_for(rng, name + "/gate"), (d, d_ff)),
+        "w_up": dense_init(rng_for(rng, name + "/up"), (d, d_ff)),
+        "w_down": dense_init(rng_for(rng, name + "/down"), (d_ff, d)),
+    }
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    dt = cdtype(cfg)
+    act = jax.nn.gelu if cfg.mlp_kind == "geglu" else jax.nn.silu
+    g = act(x @ p["w_gate"].astype(dt))
+    u = x @ p["w_up"].astype(dt)
+    return (g * u) @ p["w_down"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Frontend stubs (vision / audio): precomputed embeddings -> d_model
+# ---------------------------------------------------------------------------
+
+
+def init_frontend(rng, cfg: ModelConfig):
+    if cfg.frontend is None:
+        return None
+    return {"proj": dense_init(rng_for(rng, "frontend/proj"),
+                               (cfg.d_model, cfg.d_model))}
+
+
+def apply_frontend(p, embeds, cfg: ModelConfig):
+    return embeds.astype(cdtype(cfg)) @ p["proj"].astype(cdtype(cfg))

@@ -1,0 +1,313 @@
+"""Mixture-of-Experts layer: shared + routed top-k, capacity-based dispatch.
+
+Dispatch is the sort-rank/capacity-buffer scheme (GShard-style, static
+shapes, token-dropping above capacity): tokens are ranked within their
+chosen expert, scattered into an (E, C, d) buffer, run through a batched
+expert matmul (EP: the E axis shards over the model mesh axis when
+divisible — DeepSeek's 256; otherwise the expert FFN width shards — Qwen2
+MoE's 60), and combined back with router weights.
+
+Routers: softmax (Qwen2-MoE, no top-k renorm) and sigmoid with selection
+bias (DeepSeek-V3 aux-loss-free balancing; the bias is a non-gradient
+buffer updated from expert load by the trainer).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_mlp, cdtype, dense_init, init_mlp, rng_for
+from repro.sharding import annotate, annotate_prio
+
+
+def init_moe(rng, cfg: ModelConfig, name: str = "moe"):
+    m = cfg.moe
+    d = cfg.d_model
+    p = {
+        "router": dense_init(rng_for(rng, name + "/router"), (d, m.n_routed)),
+        "bias": jnp.zeros((m.n_routed,), jnp.float32),
+        "w_gate": dense_init(rng_for(rng, name + "/wg"),
+                             (m.n_routed, d, m.d_expert)),
+        "w_up": dense_init(rng_for(rng, name + "/wu"),
+                           (m.n_routed, d, m.d_expert)),
+        "w_down": dense_init(rng_for(rng, name + "/wd"),
+                             (m.n_routed, m.d_expert, d)),
+    }
+    if m.n_shared > 0:
+        width = m.d_shared or m.d_expert * m.n_shared
+        p["shared"] = init_mlp(rng, cfg, width, name + "/shared")
+    return p
+
+
+def route(p, x_flat, cfg: ModelConfig):
+    """x_flat (T, d) → (weights (T, K), idx (T, K), probs (T, E))."""
+    m = cfg.moe
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    if m.router == "sigmoid":
+        probs = jax.nn.sigmoid(logits)
+        sel = probs + p["bias"][None, :]
+        _, idx = jax.lax.top_k(sel, m.top_k)
+        w = jnp.take_along_axis(probs, idx, axis=1)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, idx = jax.lax.top_k(probs, m.top_k)
+    if m.norm_topk:
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-20)
+    return w.astype(jnp.float32), idx.astype(jnp.int32), probs
+
+
+def update_router_bias(bias, expert_load, gamma: float = 1e-3):
+    """DeepSeek-V3 aux-loss-free balancing: nudge the (non-gradient)
+    selection bias toward under-loaded experts.  Called by the trainer
+    from the step metrics: bias += γ·sign(mean_load − load)."""
+    load = expert_load.astype(jnp.float32)
+    return bias + gamma * jnp.sign(load.mean() - load)
+
+
+def capacity(cfg: ModelConfig, t: int) -> int:
+    m = cfg.moe
+    c = int(m.capacity_factor * t * m.top_k / m.n_routed)
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def _n_data_shards() -> int:
+    """Data-parallel shard count from the active rules context (1 when no
+    mesh is active, e.g. CPU unit tests)."""
+    from repro.sharding import current_rules
+    r = current_rules()
+    if r is None:
+        return 1
+    n = 1
+    for ax in (r.table.get("batch") or ()):
+        n *= r.mesh.shape[ax]
+    return n
+
+
+def _a2a_geometry(cfg: ModelConfig, t: int):
+    """Returns (ep_axes, n_ep, batch_axes, n_batch) when the explicit
+    all-to-all dispatch applies: one routed expert per EP-group device and
+    token count divisible across (batch × model) chunks."""
+    from repro.sharding import current_rules
+    r = current_rules()
+    if r is None:
+        return None
+    ep_axes = ("model", "data")
+    n_ep = 1
+    for ax in ep_axes:
+        n_ep *= r.mesh.shape[ax]
+    batch_axes = tuple(r.table.get("batch") or ())
+    n_batch = 1
+    for ax in batch_axes:
+        n_batch *= r.mesh.shape[ax]
+    if cfg.moe.n_routed != n_ep:
+        return None
+    t_loc = t // max(n_batch, 1)
+    if t % max(n_batch, 1) != 0 or t_loc % r.mesh.shape["model"] != 0:
+        return None
+    return r, ep_axes, n_ep, batch_axes
+
+
+def apply_moe(p, x, cfg: ModelConfig):
+    """x (B, S, d) → (y (B, S, d), metrics dict with aux loss & load).
+
+    impl="a2a": explicit shard_map dispatch — each device owns ONE routed
+    expert (EP over model×data); tokens are packed into per-destination
+    send buffers and exchanged with ``lax.all_to_all``, processed by the
+    owner, and returned by the inverse all-to-all.  Wire volume is
+    Θ(tokens·top_k·d) per round trip — the physical minimum — instead of
+    the buffer all-gathers GSPMD synthesizes.  Requires n_routed ==
+    model×data (DeepSeek's 256 on the 16×16 pod); otherwise falls back to:
+
+    impl="sharded" (default): per-data-shard capacity buffers (DS, E,
+    C_loc, d) under pure GSPMD.  The token→buffer scatter is local to the
+    data shard, so cross-device traffic reduces to the expert-dim
+    resharding of the buffers instead of the all-reduce of a fully-
+    replicated global buffer that the naive formulation (impl="global")
+    provokes.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    if m.impl == "a2a":
+        geo = _a2a_geometry(cfg, t)
+        if geo is not None:
+            return _apply_moe_a2a(p, x, cfg, geo)
+    ds = _n_data_shards() if m.impl in ("sharded", "a2a") else 1
+    if t % ds != 0:
+        ds = 1
+    y, counts, probs, keep_mean = _dispatch_compute(p, x.reshape(t, d), cfg,
+                                                    ds)
+    y = y.reshape(b, s, d)
+    if m.n_shared > 0:
+        y = y + apply_mlp(p["shared"], x, cfg)
+
+    # load-balance metrics: f_e = dispatch fraction, P_e = mean router prob
+    f = counts.astype(jnp.float32) / jnp.maximum(t * m.top_k, 1)
+    pbar = probs
+    aux = (m.n_routed * jnp.sum(f * pbar)) * m.aux_loss_coef
+    return y, {"aux_loss": aux, "expert_load": counts,
+               "drop_frac": 1.0 - keep_mean}
+
+
+def _apply_moe_a2a(p, x, cfg: ModelConfig, geo):
+    """Explicit EP all-to-all dispatch under shard_map (see apply_moe)."""
+    from jax.sharding import PartitionSpec as P
+
+    m = cfg.moe
+    dt = cdtype(cfg)
+    rules, ep_axes, n_ep, batch_axes = geo
+    mesh = rules.mesh
+    b, s, d = x.shape
+    model_n = mesh.shape["model"]
+    act = jax.nn.silu if cfg.mlp_kind == "swiglu" else jax.nn.gelu
+    all_axes = tuple(mesh.axis_names)
+
+    def block(xb, router, bias, wg, wu, wd):
+        # xb (B_loc, S, d); wg/wu/wd (1, d, f)/(1, f, d) — my expert
+        bl = xb.shape[0]
+        t_loc = bl * s
+        tc = t_loc // model_n                            # my chunk size
+        j = jax.lax.axis_index("model")
+        xf = xb.reshape(t_loc, d)
+        chunk = jax.lax.dynamic_slice(xf, (j * tc, 0), (tc, d))
+
+        # route my chunk
+        logits = jnp.einsum("td,de->te", chunk.astype(jnp.float32),
+                            router.astype(jnp.float32))
+        if m.router == "sigmoid":
+            probs = jax.nn.sigmoid(logits)
+            _, idx = jax.lax.top_k(probs + bias[None, :], m.top_k)
+            w = jnp.take_along_axis(probs, idx, axis=1)
+        else:
+            probs = jax.nn.softmax(logits, axis=-1)
+            w, idx = jax.lax.top_k(probs, m.top_k)
+        if m.norm_topk:
+            w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-20)
+
+        k = m.top_k
+        tk = tc * k
+        flat_e = idx.reshape(tk)                         # dst device per slot
+        cap = max(8, int(-(-m.capacity_factor * tk // n_ep)))
+        sort_idx = jnp.argsort(flat_e)
+        ranks = jnp.zeros((tk,), jnp.int32).at[sort_idx].set(
+            jnp.arange(tk, dtype=jnp.int32))
+        counts = jnp.bincount(flat_e, length=n_ep)
+        starts = jnp.cumsum(counts) - counts
+        pos = ranks - starts[flat_e]
+        keep = (pos < cap).astype(jnp.float32)
+        pos_c = jnp.clip(pos, 0, cap - 1)
+        token_id = jnp.arange(tk, dtype=jnp.int32) // k
+
+        send = jnp.zeros((n_ep, cap, d), dt).at[flat_e, pos_c].add(
+            jnp.take(chunk, token_id, axis=0)
+            * keep[:, None].astype(dt))
+        # exchange: slot [i] of recv = buffer destined to me from device i
+        recv = jax.lax.all_to_all(send, ep_axes, split_axis=0,
+                                  concat_axis=0, tiled=True)
+
+        # my (single) expert over everything I received
+        rows = recv.reshape(n_ep * cap, d)
+        g = act(rows @ wg[0])
+        u = rows @ wu[0]
+        out_rows = (g * u) @ wd[0]
+        ret = jax.lax.all_to_all(out_rows.reshape(n_ep, cap, d), ep_axes,
+                                 split_axis=0, concat_axis=0, tiled=True)
+
+        y_slots = ret[flat_e, pos_c]                     # (TK, d)
+        wk = (w.reshape(tk) * keep).astype(dt)
+        y_chunk = jnp.zeros((tc, d), dt).at[token_id].add(
+            y_slots * wk[:, None])
+        y_full = jax.lax.all_gather(y_chunk, "model", axis=0,
+                                    tiled=True)          # (T_loc, d)
+
+        # metrics (replicated): global expert load + mean probs + keep
+        load = jax.lax.psum(counts.astype(jnp.float32), all_axes)
+        psum_probs = jax.lax.psum(probs.sum(0), all_axes)
+        n_tok = jax.lax.psum(jnp.float32(tc), all_axes)
+        keep_mean = jax.lax.psum(keep.sum(), all_axes) / jnp.maximum(
+            jax.lax.psum(jnp.float32(tk), all_axes), 1.0)
+        return (y_full.reshape(bl, s, d), load, psum_probs / n_tok,
+                keep_mean)
+
+    bspec = P(batch_axes if batch_axes else None, None, None)
+    espec = P(ep_axes, None, None)
+    y, load, pbar, keep_mean = jax.shard_map(
+        block, mesh=mesh,
+        in_specs=(bspec, P(None, None), P(None), espec, espec, espec),
+        out_specs=(bspec, P(), P(), P()),
+        check_vma=False,
+    )(x, p["router"].astype(jnp.float32), p["bias"].astype(jnp.float32),
+      p["w_gate"].astype(dt), p["w_up"].astype(dt), p["w_down"].astype(dt))
+
+    if m.n_shared > 0:
+        y = y + apply_mlp(p["shared"], x, cfg)
+    t = b * s
+    f = load / jnp.maximum(t * m.top_k, 1)
+    aux = (m.n_routed * jnp.sum(f * pbar)) * m.aux_loss_coef
+    return y, {"aux_loss": aux, "expert_load": load,
+               "drop_frac": 1.0 - keep_mean}
+
+
+def _dispatch_compute(p, x_flat, cfg: ModelConfig, ds: int):
+    """Per-data-shard capacity-buffer dispatch (ds=1 == global baseline).
+
+    Returns (y (T, d), counts (E,), mean_probs (E,), keep_mean scalar).
+    """
+    m = cfg.moe
+    dt = cdtype(cfg)
+    t, d = x_flat.shape
+    e, k = m.n_routed, m.top_k
+    tl = t // ds                                         # tokens per shard
+
+    w, idx, probs = route(p, x_flat, cfg)                # (T,K),(T,K),(T,E)
+
+    cap = capacity(cfg, tl)
+    xs = x_flat.reshape(ds, tl, d)
+    xs = annotate(xs, "batch", None, "d_model")
+    flat_e = idx.reshape(ds, tl * k)                     # (DS, TK)
+    w_flat = w.reshape(ds, tl * k)
+    tk = tl * k
+    row = jnp.arange(ds, dtype=jnp.int32)[:, None]       # (DS, 1)
+    token_id = (jnp.arange(tk, dtype=jnp.int32) // k)[None, :]  # (1, TK)
+
+    sort_idx = jnp.argsort(flat_e, axis=1)               # stable per shard
+    ranks = jnp.zeros((ds, tk), jnp.int32).at[
+        jnp.broadcast_to(row, (ds, tk)), sort_idx].set(
+        jnp.broadcast_to(jnp.arange(tk, dtype=jnp.int32)[None], (ds, tk)))
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.float32)  # (DS, TK, E)
+    counts_s = onehot.sum(axis=1)                        # (DS, E)
+    starts = jnp.cumsum(counts_s, axis=1) - counts_s     # (DS, E)
+    pos_in_e = ranks - jnp.take_along_axis(
+        starts, flat_e, axis=1).astype(jnp.int32)
+    keep = (pos_in_e < cap).astype(jnp.float32)          # (DS, TK)
+    pos_c = jnp.clip(pos_in_e, 0, cap - 1)
+
+    gathered = jnp.take_along_axis(
+        xs, jnp.broadcast_to(token_id, (ds, tk))[..., None], axis=1)
+    gathered = gathered * keep[..., None].astype(dt)     # (DS, TK, d)
+    buf = jnp.zeros((ds, e, cap, d), dt).at[
+        jnp.broadcast_to(row, (ds, tk)), flat_e, pos_c].add(gathered)
+    buf = annotate_prio(buf, ("batch", "experts", None, "d_model"),
+                        priority=(1,))
+
+    act = jax.nn.silu if cfg.mlp_kind == "swiglu" else jax.nn.gelu
+    g = act(jnp.einsum("becd,edf->becf", buf, p["w_gate"].astype(dt)))
+    u = jnp.einsum("becd,edf->becf", buf, p["w_up"].astype(dt))
+    h = annotate_prio(g * u, ("batch", "experts", None, "expert_ff"),
+                      priority=(1,))
+    out_buf = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(dt))
+    out_buf = annotate_prio(out_buf, ("batch", "experts", None, "d_model"),
+                            priority=(1,))
+
+    y_slots = out_buf[jnp.broadcast_to(row, (ds, tk)), flat_e, pos_c]
+    wk = (w_flat * keep).astype(dt)
+    y = jnp.zeros((ds, tl, d), dt).at[
+        jnp.broadcast_to(row, (ds, tk)),
+        jnp.broadcast_to(token_id, (ds, tk))].add(y_slots * wk[..., None])
+    y = annotate(y, "batch", None, "d_model")
+
+    counts = counts_s.sum(axis=0)
+    return y.reshape(t, d), counts, probs.mean(0), keep.mean()

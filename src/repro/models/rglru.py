@@ -1,0 +1,128 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Temporal mixing branch: linear → causal conv1d(4) → RG-LRU, gated by a
+parallel GeLU branch, then an output projection.  Training/prefill uses a
+log-depth ``associative_scan`` over the first-order linear recurrence
+h_t = a_t ⊙ h_{t-1} + b_t; decode is the O(1) single-step update.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import cdtype, dense_init, rng_for
+from repro.sharding import annotate
+
+_C = 8.0  # Griffin's fixed recurrence-sharpness constant
+
+
+def init_rglru(rng, cfg: ModelConfig, name: str = "rg"):
+    d, w = cfg.d_model, cfg.lru_width
+    return {
+        "wg": dense_init(rng_for(rng, name + "/wg"), (d, w)),
+        "wx": dense_init(rng_for(rng, name + "/wx"), (d, w)),
+        "conv_w": dense_init(rng_for(rng, name + "/convw"), (4, w), 0.2),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "wa_gate": dense_init(rng_for(rng, name + "/wa"), (w, w)),
+        "ba_gate": jnp.zeros((w,), jnp.float32),
+        "wi_gate": dense_init(rng_for(rng, name + "/wi"), (w, w)),
+        "bi_gate": jnp.zeros((w,), jnp.float32),
+        "lam": jnp.full((w,), 1.0, jnp.float32),  # Λ (learned, via softplus)
+        "rg_out": dense_init(rng_for(rng, name + "/out"), (w, d)),
+    }
+
+
+def _conv_train(p, u, k: int = 4):
+    w = p["conv_w"].astype(u.dtype)
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u.shape[1], :] * w[i] for i in range(k))
+    return out + p["conv_b"].astype(u.dtype)
+
+
+def _gates(p, u, cfg: ModelConfig):
+    """RG-LRU gates from the post-conv input u (B, ..., W) in fp32."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["wa_gate"] + p["ba_gate"])
+    i = jax.nn.sigmoid(uf @ p["wi_gate"] + p["bi_gate"])
+    log_a = -_C * r * jax.nn.softplus(p["lam"])          # ≤ 0
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+    return a, gated_in
+
+
+def rglru_train(p, x, cfg: ModelConfig):
+    """x (B, S, d) → y (B, S, d)."""
+    dt = cdtype(cfg)
+    b, s, _ = x.shape
+    gate = jax.nn.gelu(x @ p["wg"].astype(dt))
+    u = _conv_train(p, x @ p["wx"].astype(dt))
+    u = annotate(u, "batch", "seq", "lru")
+    a, bterm = _gates(p, u, cfg)                         # (B,S,W) fp32
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, bterm), axis=1)
+    y = (gate.astype(jnp.float32) * h).astype(dt)
+    return y @ p["rg_out"].astype(dt)
+
+
+def init_cache_rglru(cfg: ModelConfig, batch: int, dtype=None):
+    dt = dtype or cdtype(cfg)
+    return {
+        "conv": jnp.zeros((batch, 3, cfg.lru_width), dt),
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+    }
+
+
+def rglru_prefill(p, x, cfg: ModelConfig):
+    """Returns (y, cache) — final recurrent state + conv tail."""
+    dt = cdtype(cfg)
+    gate = jax.nn.gelu(x @ p["wg"].astype(dt))
+    ux = x @ p["wx"].astype(dt)
+    u = _conv_train(p, ux)
+    a, bterm = _gates(p, u, cfg)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, bterm), axis=1)
+    y = (gate.astype(jnp.float32) * h).astype(dt) @ p["rg_out"].astype(dt)
+    s = x.shape[1]
+    tail = ux[:, -3:] if s >= 3 else jnp.pad(ux, ((0, 0), (3 - s, 0), (0, 0)))
+    return y, {"conv": tail.astype(dt), "h": h[:, -1]}
+
+
+def rglru_decode(p, x, cfg: ModelConfig, cache):
+    """x (B, 1, d) → (y, cache')."""
+    dt = cdtype(cfg)
+    b = x.shape[0]
+    gate = jax.nn.gelu(x @ p["wg"].astype(dt))           # (B,1,W)
+    ux = x @ p["wx"].astype(dt)                          # (B,1,W)
+    buf = jnp.concatenate([cache["conv"], ux.astype(cache["conv"].dtype)],
+                          axis=1)                        # (B,4,W)
+    w = p["conv_w"].astype(dt)
+    ut = (buf * w[None]).sum(axis=1) + p["conv_b"].astype(dt)  # (B,W)
+    a, bterm = _gates(p, ut, cfg)                        # (B,W)
+    h = a * cache["h"] + bterm
+    y = (gate[:, 0].astype(jnp.float32) * h).astype(dt) @ p["rg_out"].astype(dt)
+    return y[:, None, :], {"conv": buf[:, 1:], "h": h}
+
+
+def rglru_sequential_ref(p, x, cfg: ModelConfig):
+    """Step-by-step oracle for tests."""
+    b, s, _ = x.shape
+    cache = init_cache_rglru(cfg, b)
+
+    def step(cache, xt):
+        y, cache = rglru_decode(p, xt[:, None, :], cfg, cache)
+        return cache, y[:, 0]
+
+    _, ys = jax.lax.scan(step, cache, x.transpose(1, 0, 2))
+    return ys.transpose(1, 0, 2)

@@ -1,0 +1,229 @@
+"""Mamba-2 (SSD — state-space duality) block.
+
+Training/prefill uses the chunked SSD algorithm (intra-chunk quadratic
+attention-like term + inter-chunk linear state recurrence), so cost is
+O(S·Q) with chunk Q and the state never materializes per position.
+Decode is the O(1)-per-token recurrence on an (H, hd, N) state with a
+rolling depthwise-conv buffer.  Validated against a sequential-scan oracle
+in tests/test_models_parity.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import cdtype, dense_init, rng_for
+from repro.sharding import annotate
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    h = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    return d_in, h, conv_ch
+
+
+def init_ssm(rng, cfg: ModelConfig, name: str = "ssm"):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, h, conv_ch = _dims(cfg)
+    proj_out = 2 * d_in + 2 * s.n_groups * s.d_state + h
+    return {
+        "in_proj": dense_init(rng_for(rng, name + "/in"), (d, proj_out)),
+        "conv_w": dense_init(rng_for(rng, name + "/convw"),
+                             (s.d_conv, conv_ch), 0.2),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(rng_for(rng, name + "/out"), (d_in, d)),
+    }
+
+
+def _split(p, x, cfg: ModelConfig):
+    s = cfg.ssm
+    d_in, h, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    zxbcdt = x @ p["in_proj"].astype(cdtype(cfg))
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:2 * d_in + 2 * gn]
+    dt_raw = zxbcdt[..., 2 * d_in + 2 * gn:]
+    return z, xbc, dt_raw
+
+
+def _conv_train(p, xbc, cfg: ModelConfig):
+    """Causal depthwise conv over time: xbc (B, S, C)."""
+    k = cfg.ssm.d_conv
+    w = p["conv_w"].astype(xbc.dtype)                    # (k, C)
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + p["conv_b"].astype(xbc.dtype))
+
+
+def _segsum(a):
+    """Within-chunk cumulative-decay matrix: a (..., Q) →
+    L (..., Q, Q) with L[i, j] = sum(a[j+1..i]) for i >= j, -inf otherwise."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]           # (..., i, j)
+    iq = jnp.arange(q)
+    mask = iq[:, None] >= iq[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int):
+    """SSD forward.
+
+    x (B, S, H, P), dt (B, S, H) (post-softplus), A (H,) (negative),
+    B, C (B, S, G, N), D (H,) → y (B, S, H, P) and final state
+    (B, H, P, N).  Heads are grouped: G divides H.
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (s + pad) // chunk
+    rep = h // g
+
+    xc = x.reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, chunk, g, n).astype(jnp.float32)
+    Cc = C.reshape(b, nc, chunk, g, n).astype(jnp.float32)
+
+    a = dtc * A                                          # (B,Nc,Q,H) ≤ 0
+    cum = jnp.cumsum(a, axis=2)                          # within-chunk
+
+    # --- intra-chunk (diagonal blocks) ---
+    L = jnp.exp(_segsum(a.transpose(0, 1, 3, 2)))        # (B,Nc,H,Q,Q)
+    scores = jnp.einsum("bcqgn,bcsgn->bcgqs", Cc, Bc)    # (B,Nc,G,Q,S)
+    scores = jnp.repeat(scores, rep, axis=2)             # (B,Nc,H,Q,S)
+    y_diag = jnp.einsum("bchqs,bcsh,bcshp->bcqhp",
+                        scores * L, dtc, xc)
+
+    # --- chunk states ---
+    Bh = jnp.repeat(Bc, rep, axis=3)                     # (B,Nc,Q,H,N)
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)         # (B,Nc,Q,H)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn",
+                        Bh, decay_out * dtc, xc)
+
+    # --- inter-chunk recurrence ---
+    chunk_decay = jnp.exp(cum[:, :, -1, :])              # (B,Nc,H)
+
+    def scan_fn(carry, xs):
+        st, = (carry,)
+        dec, snew = xs                                   # (B,H), (B,H,P,N)
+        out = st
+        st = st * dec[:, :, None, None] + snew
+        return st, out
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final, prefix = jax.lax.scan(
+        scan_fn, init,
+        (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)))
+    prefix = prefix.transpose(1, 0, 2, 3, 4)             # state BEFORE chunk
+
+    decay_in = jnp.exp(cum)                              # (B,Nc,Q,H)
+    Ch = jnp.repeat(Cc, rep, axis=3)                     # (B,Nc,Q,H,N)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Ch, prefix, decay_in)
+
+    y = (y_diag + y_off).reshape(b, s + pad, h, p)[:, :s]
+    y = y + (D[None, None, :, None] * x[:, :s].astype(jnp.float32))
+    return y, final
+
+
+def ssm_train(p, x, cfg: ModelConfig):
+    """x (B, S, d) → y (B, S, d)."""
+    s_cfg = cfg.ssm
+    dt_ = cdtype(cfg)
+    d_in, h, _ = _dims(cfg)
+    gn = s_cfg.n_groups * s_cfg.d_state
+    z, xbc, dt_raw = _split(p, x, cfg)
+    xbc = _conv_train(p, xbc, cfg)
+    xh = xbc[..., :d_in]
+    Bm = xbc[..., d_in:d_in + gn]
+    Cm = xbc[..., d_in + gn:]
+    b, s, _ = x.shape
+    xh = annotate(xh.reshape(b, s, h, s_cfg.head_dim),
+                  "batch", "seq", "ssm_heads", "head_dim")
+    Bm = Bm.reshape(b, s, s_cfg.n_groups, s_cfg.d_state)
+    Cm = Cm.reshape(b, s, s_cfg.n_groups, s_cfg.d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, _ = ssd_chunked(xh, dt, A, Bm, Cm, p["D"], s_cfg.chunk)
+    y = y.reshape(b, s, d_in).astype(dt_)
+    # gated RMSNorm (mamba2's norm-before-out-proj)
+    gated = y * jax.nn.silu(z)
+    var = (gated.astype(jnp.float32) ** 2).mean(-1, keepdims=True)
+    gated = (gated.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+             * p["norm"]).astype(dt_)
+    return gated @ p["out_proj"].astype(dt_)
+
+
+def init_cache_ssm(cfg: ModelConfig, batch: int, dtype=None):
+    s = cfg.ssm
+    dt = dtype or cdtype(cfg)
+    d_in, h, conv_ch = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_ch), dt),
+        "ssm": jnp.zeros((batch, h, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def ssm_decode(p, x, cfg: ModelConfig, cache):
+    """x (B, 1, d) → (y (B, 1, d), cache')."""
+    s_cfg = cfg.ssm
+    dt_ = cdtype(cfg)
+    d_in, h, conv_ch = _dims(cfg)
+    gn = s_cfg.n_groups * s_cfg.d_state
+    b = x.shape[0]
+    z, xbc, dt_raw = _split(p, x, cfg)                   # (B,1,·)
+
+    conv_buf = jnp.concatenate([cache["conv"],
+                                xbc.astype(cache["conv"].dtype)], axis=1)
+    w = p["conv_w"].astype(dt_)                          # (k, C)
+    xbc_t = jax.nn.silu((conv_buf * w[None]).sum(axis=1)
+                        + p["conv_b"].astype(dt_))       # (B, C)
+    new_conv = conv_buf[:, 1:]
+
+    xh = xbc_t[:, :d_in].reshape(b, h, s_cfg.head_dim).astype(jnp.float32)
+    Bm = xbc_t[:, d_in:d_in + gn].reshape(b, s_cfg.n_groups, s_cfg.d_state)
+    Cm = xbc_t[:, d_in + gn:].reshape(b, s_cfg.n_groups, s_cfg.d_state)
+    rep = h // s_cfg.n_groups
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)  # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                             # (H,)
+    decay = jnp.exp(dt * A)                              # (B,H)
+    st = cache["ssm"]
+    st = (st * decay[:, :, None, None]
+          + jnp.einsum("bh,bhn,bhp->bhpn", dt, Bh, xh))
+    y = jnp.einsum("bhpn,bhn->bhp", st, Ch) + p["D"][None, :, None] * xh
+    y = y.reshape(b, 1, d_in).astype(dt_)
+    gated = y * jax.nn.silu(z)
+    var = (gated.astype(jnp.float32) ** 2).mean(-1, keepdims=True)
+    gated = (gated.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+             * p["norm"]).astype(dt_)
+    out = gated @ p["out_proj"].astype(dt_)
+    return out, {"conv": new_conv, "ssm": st}
+
+
+def ssm_sequential_ref(p, x, cfg: ModelConfig):
+    """Sequential-recurrence oracle (tests only): step ssm_decode over S."""
+    b, s, _ = x.shape
+    cache = init_cache_ssm(cfg, b)
+
+    def step(cache, xt):
+        y, cache = ssm_decode(p, xt[:, None, :], cfg, cache)
+        return cache, y[:, 0]
+
+    _, ys = jax.lax.scan(step, cache, x.transpose(1, 0, 2))
+    return ys.transpose(1, 0, 2)

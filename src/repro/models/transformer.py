@@ -1,0 +1,608 @@
+"""Model assembly: decoder-only / encoder–decoder stacks over the sub-layer
+zoo (GQA global/local attention, MLA, MoE, Mamba2 SSD, RG-LRU), with
+``lax.scan`` over homogeneous layer groups (compile time stays O(1) in
+depth), remat for training, chunked cross-entropy (full logits are never
+materialized), KV/state caches for serving, and DeepSeek-style MTP.
+
+Layer layout: ``prefix`` (unrolled, e.g. DeepSeek's 3 dense layers) →
+``scan`` (n_rep repeats of the layer_pattern group) → ``tail`` (pattern
+remainder, unrolled).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rg_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import (apply_frontend, apply_mlp, apply_norm,
+                                 cdtype, dense_init, embed_tokens,
+                                 init_embed, init_frontend, init_mlp,
+                                 init_norm, lm_logits, rng_for,
+                                 sinusoidal_pos)
+from repro.sharding import annotate
+
+
+# ---------------------------------------------------------------------------
+# Layer-count bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def layout(cfg: ModelConfig):
+    """(n_prefix, n_rep, tail_kinds) for the decoder stack."""
+    n_prefix = cfg.moe.n_dense_layers if cfg.moe else 0
+    rest = cfg.n_layers - n_prefix
+    plen = len(cfg.layer_pattern)
+    n_rep = rest // plen
+    tail = [cfg.layer_pattern[i % plen] for i in range(n_rep * plen, rest)]
+    return n_prefix, n_rep, tail
+
+
+# ---------------------------------------------------------------------------
+# Single sub-layer (params + apply in all three modes)
+# ---------------------------------------------------------------------------
+
+
+def init_sublayer(rng, cfg: ModelConfig, kind: str, use_moe: bool,
+                  d_ff: Optional[int] = None, cross: bool = False):
+    p = {"norm1": init_norm(rng, cfg, cfg.d_model)}
+    if kind in ("G", "L"):
+        if cfg.attn_kind == "mla":
+            p["attn"] = attn.init_mla(rng_for(rng, "attn"), cfg)
+        else:
+            p["attn"] = attn.init_attn(rng_for(rng, "attn"), cfg)
+        if cfg.post_norms:
+            p["post_attn_norm"] = init_norm(rng, cfg, cfg.d_model)
+        if cross:
+            p["xnorm"] = init_norm(rng, cfg, cfg.d_model)
+            p["xattn"] = attn.init_cross_attn(rng_for(rng, "xattn"), cfg)
+        p["norm2"] = init_norm(rng, cfg, cfg.d_model)
+        if use_moe:
+            p["moe"] = moe_mod.init_moe(rng_for(rng, "moe"), cfg)
+        else:
+            p["mlp"] = init_mlp(rng_for(rng, "mlp"), cfg,
+                                d_ff or cfg.d_ff)
+        if cfg.post_norms:
+            p["post_mlp_norm"] = init_norm(rng, cfg, cfg.d_model)
+    elif kind == "M":
+        p["ssm"] = ssm_mod.init_ssm(rng_for(rng, "ssm"), cfg)
+    elif kind == "R":
+        p["rg"] = rg_mod.init_rglru(rng_for(rng, "rg"), cfg)
+        p["norm2"] = init_norm(rng, cfg, cfg.d_model)
+        p["mlp"] = init_mlp(rng_for(rng, "mlp"), cfg, d_ff or cfg.d_ff)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _ffn(p, h, cfg: ModelConfig):
+    """norm2 → (moe|mlp) → residual (+sandwich norm).  Returns (h, aux)."""
+    x = apply_norm(p["norm2"], h, cfg)
+    if "moe" in p:
+        y, metrics = moe_mod.apply_moe(p["moe"], x, cfg)
+        aux = metrics["aux_loss"]
+    else:
+        y = apply_mlp(p["mlp"], x, cfg)
+        aux = jnp.float32(0.0)
+    if cfg.post_norms:
+        y = apply_norm(p["post_mlp_norm"], y, cfg)
+    return h + y, aux
+
+
+def sublayer_train(p, h, cfg: ModelConfig, kind: str, *, positions,
+                   kv_repeat: int, causal: bool = True, enc_kv=None):
+    """Full-sequence forward. Returns (h, aux_loss)."""
+    aux = jnp.float32(0.0)
+    if kind in ("G", "L"):
+        x = apply_norm(p["norm1"], h, cfg)
+        if cfg.attn_kind == "mla":
+            y = attn.mla_train(p["attn"], x, cfg, positions=positions)
+        else:
+            y = attn.attn_train(p["attn"], x, cfg, layer_kind=kind,
+                                positions=positions, kv_repeat=kv_repeat,
+                                causal=causal)
+        if cfg.post_norms:
+            y = apply_norm(p["post_attn_norm"], y, cfg)
+        h = h + y
+        if enc_kv is not None:
+            x = apply_norm(p["xnorm"], h, cfg)
+            h = h + attn.cross_attn_apply(p["xattn"], x, enc_kv, cfg)
+        h, aux = _ffn(p, h, cfg)
+    elif kind == "M":
+        x = apply_norm(p["norm1"], h, cfg)
+        h = h + ssm_mod.ssm_train(p["ssm"], x, cfg)
+    elif kind == "R":
+        x = apply_norm(p["norm1"], h, cfg)
+        h = h + rg_mod.rglru_train(p["rg"], x, cfg)
+        h, aux = _ffn(p, h, cfg)
+    return h, aux
+
+
+def init_sublayer_cache(cfg: ModelConfig, kind: str, batch: int,
+                        max_seq: int, kv_repeat: int,
+                        kv_mode: str = "exact", kv_clusters: int = 512,
+                        kv_tail: int = 256):
+    if kind in ("G", "L"):
+        if cfg.attn_kind == "mla":
+            return attn.init_cache_mla(cfg, batch, max_seq)
+        if kind == "G" and kv_mode == "clustered":
+            return attn.init_cache_attn_clustered(
+                cfg, batch, n_clusters=kv_clusters, tail=kv_tail,
+                kv_repeat=kv_repeat)
+        return attn.init_cache_attn(cfg, kind, batch, max_seq, kv_repeat,
+                                    quantized=(kv_mode == "int8"))
+    if kind == "M":
+        return ssm_mod.init_cache_ssm(cfg, batch)
+    if kind == "R":
+        return rg_mod.init_cache_rglru(cfg, batch)
+    raise ValueError(kind)
+
+
+def sublayer_prefill(p, h, cfg: ModelConfig, kind: str, *, positions,
+                     kv_repeat: int, max_seq: int, enc_kv=None):
+    """Returns (h, cache, aux)."""
+    aux = jnp.float32(0.0)
+    if kind in ("G", "L"):
+        x = apply_norm(p["norm1"], h, cfg)
+        if cfg.attn_kind == "mla":
+            y, cache = attn.mla_prefill(p["attn"], x, cfg,
+                                        positions=positions, max_seq=max_seq)
+        else:
+            y, cache = attn.attn_prefill(p["attn"], x, cfg, layer_kind=kind,
+                                         positions=positions,
+                                         kv_repeat=kv_repeat)
+            # pad non-window caches out to max_seq for decode
+            if cache["k"].shape[1] < max_seq and kind == "G":
+                padn = max_seq - cache["k"].shape[1]
+                cache = {
+                    "k": jnp.pad(cache["k"],
+                                 ((0, 0), (0, padn), (0, 0), (0, 0))),
+                    "v": jnp.pad(cache["v"],
+                                 ((0, 0), (0, padn), (0, 0), (0, 0))),
+                }
+        if cfg.post_norms:
+            y = apply_norm(p["post_attn_norm"], y, cfg)
+        h = h + y
+        if enc_kv is not None:
+            x = apply_norm(p["xnorm"], h, cfg)
+            h = h + attn.cross_attn_apply(p["xattn"], x, enc_kv, cfg)
+        h, aux = _ffn(p, h, cfg)
+        return h, cache, aux
+    if kind == "M":
+        # prefill == train pass + terminal state via the sequential tail:
+        # run chunked SSD for outputs; rebuild the state with a short
+        # decode burn-in is wasteful, so recompute final state directly.
+        x = apply_norm(p["norm1"], h, cfg)
+        y, cache = _ssm_prefill(p["ssm"], x, cfg)
+        return h + y, cache, aux
+    if kind == "R":
+        x = apply_norm(p["norm1"], h, cfg)
+        y, cache = rg_mod.rglru_prefill(p["rg"], x, cfg)
+        h = h + y
+        h, aux = _ffn(p, h, cfg)
+        return h, cache, aux
+    raise ValueError(kind)
+
+
+def _ssm_prefill(p, x, cfg: ModelConfig):
+    """Chunked SSD forward + final (conv, ssm) state for decode."""
+    s_cfg = cfg.ssm
+    dt_ = cdtype(cfg)
+    d_in, hh, conv_ch = ssm_mod._dims(cfg)
+    gn = s_cfg.n_groups * s_cfg.d_state
+    z, xbc_raw, dt_raw = ssm_mod._split(p, x, cfg)
+    xbc = ssm_mod._conv_train(p, xbc_raw, cfg)
+    b, s, _ = x.shape
+    xh = xbc[..., :d_in].reshape(b, s, hh, s_cfg.head_dim)
+    Bm = xbc[..., d_in:d_in + gn].reshape(b, s, s_cfg.n_groups, s_cfg.d_state)
+    Cm = xbc[..., d_in + gn:].reshape(b, s, s_cfg.n_groups, s_cfg.d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, final_state = ssm_mod.ssd_chunked(xh, dt, A, Bm, Cm, p["D"],
+                                         s_cfg.chunk)
+    y = y.reshape(b, s, d_in).astype(dt_)
+    gated = y * jax.nn.silu(z)
+    var = (gated.astype(jnp.float32) ** 2).mean(-1, keepdims=True)
+    gated = (gated.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+             * p["norm"]).astype(dt_)
+    out = gated @ p["out_proj"].astype(dt_)
+    conv_tail = (xbc_raw[:, -(s_cfg.d_conv - 1):]
+                 if s >= s_cfg.d_conv - 1 else
+                 jnp.pad(xbc_raw, ((0, 0), (s_cfg.d_conv - 1 - s, 0), (0, 0))))
+    cache = {"conv": conv_tail.astype(dt_), "ssm": final_state}
+    return out, cache
+
+
+def sublayer_decode(p, h, cfg: ModelConfig, kind: str, cache, t, *,
+                    kv_repeat: int, enc_kv=None):
+    """h (B,1,d). Returns (h, cache')."""
+    if kind in ("G", "L"):
+        x = apply_norm(p["norm1"], h, cfg)
+        if cfg.attn_kind == "mla":
+            y, cache = attn.mla_decode(p["attn"], x, cfg, cache=cache, t=t)
+        else:
+            y, cache = attn.attn_decode(p["attn"], x, cfg, layer_kind=kind,
+                                        cache=cache, t=t,
+                                        kv_repeat=kv_repeat)
+        if cfg.post_norms:
+            y = apply_norm(p["post_attn_norm"], y, cfg)
+        h = h + y
+        if enc_kv is not None:
+            x = apply_norm(p["xnorm"], h, cfg)
+            h = h + attn.cross_attn_apply(p["xattn"], x, enc_kv, cfg)
+        h, _ = _ffn(p, h, cfg)
+        return h, cache
+    if kind == "M":
+        x = apply_norm(p["norm1"], h, cfg)
+        y, cache = ssm_mod.ssm_decode(p["ssm"], x, cfg, cache)
+        return h + y, cache
+    if kind == "R":
+        x = apply_norm(p["norm1"], h, cfg)
+        y, cache = rg_mod.rglru_decode(p["rg"], x, cfg, cache)
+        h = h + y
+        h, _ = _ffn(p, h, cfg)
+        return h, cache
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Full-model params
+# ---------------------------------------------------------------------------
+
+
+def init_params(rng, cfg: ModelConfig):
+    n_prefix, n_rep, tail = layout(cfg)
+    use_moe = cfg.moe is not None
+    p = {"embed": init_embed(rng_for(rng, "embed"), cfg)}
+    fe = init_frontend(rng_for(rng, "frontend"), cfg)
+    if fe is not None:
+        p["frontend"] = fe
+
+    cross = cfg.is_encdec
+    p["prefix"] = [
+        init_sublayer(rng_for(rng, f"prefix{i}"), cfg, "G", False,
+                      d_ff=cfg.moe.d_ff_dense if cfg.moe else None,
+                      cross=cross)
+        for i in range(n_prefix)
+    ]
+
+    def group_init(r):
+        return {
+            f"sub{j}": init_sublayer(
+                jax.random.fold_in(r, j), cfg, cfg.layer_pattern[j],
+                use_moe and cfg.layer_pattern[j] in "GL", cross=cross)
+            for j in range(len(cfg.layer_pattern))
+        }
+
+    if n_rep > 0:
+        p["scan"] = jax.vmap(group_init)(
+            jax.random.split(rng_for(rng, "scan"), n_rep))
+    p["tail"] = [
+        init_sublayer(rng_for(rng, f"tail{i}"), cfg, k,
+                      use_moe and k in "GL", cross=cross)
+        for i, k in enumerate(tail)
+    ]
+    p["final_norm"] = init_norm(rng, cfg, cfg.d_model)
+
+    if cfg.is_encdec:
+        enc = {}
+        enc["scan"] = jax.vmap(
+            lambda r: {"sub0": init_sublayer(r, cfg, "G", False)})(
+                jax.random.split(rng_for(rng, "enc"), cfg.enc_layers))
+        enc["final_norm"] = init_norm(rng, cfg, cfg.d_model)
+        p["encoder"] = enc
+
+    if cfg.mtp_depth > 0:
+        p["mtp"] = {
+            "proj": dense_init(rng_for(rng, "mtp/proj"),
+                               (2 * cfg.d_model, cfg.d_model)),
+            "norm_h": init_norm(rng, cfg, cfg.d_model),
+            "norm_e": init_norm(rng, cfg, cfg.d_model),
+            "layer": init_sublayer(rng_for(rng, "mtp/layer"), cfg, "G",
+                                   use_moe),
+            "final_norm": init_norm(rng, cfg, cfg.d_model),
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Trunk forward (training)
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, cfg: ModelConfig, tokens, frontend_embeds):
+    h = embed_tokens(params["embed"], tokens, cfg)
+    if frontend_embeds is not None:
+        fe = apply_frontend(params["frontend"], frontend_embeds, cfg)
+        h = jnp.concatenate([fe, h], axis=1)
+    if cfg.pos_kind == "abs_sinusoidal":
+        h = h + sinusoidal_pos(h.shape[1], cfg.d_model).astype(h.dtype)[None]
+    return annotate(h, "batch", "seq", "d_model")
+
+
+def encode(params, cfg: ModelConfig, enc_embeds):
+    """Encoder stack over stub frame embeddings (B, S_enc, d)."""
+    enc = params["encoder"]
+    h = apply_frontend(params["frontend"], enc_embeds, cfg)
+    if cfg.pos_kind == "abs_sinusoidal":
+        h = h + sinusoidal_pos(h.shape[1], cfg.d_model).astype(h.dtype)[None]
+    positions = jnp.arange(h.shape[1])
+
+    def body(hh, lp):
+        hh, _ = sublayer_train(lp["sub0"], hh, cfg, "G", positions=positions,
+                               kv_repeat=1, causal=False)
+        return hh, None
+
+    h, _ = jax.lax.scan(body, h, enc["scan"])
+    return apply_norm(enc["final_norm"], h, cfg)
+
+
+def forward_trunk(params, cfg: ModelConfig, tokens, *, frontend_embeds=None,
+                  enc_out=None, kv_repeat: int = 1, remat: bool = True,
+                  positions=None):
+    """Returns (h (B, S, d), aux_loss_sum)."""
+    h = _embed_inputs(params, cfg, tokens, frontend_embeds)
+    if positions is None:
+        positions = jnp.arange(h.shape[1])
+    enc_kv = None
+
+    aux_total = jnp.float32(0.0)
+
+    def run(p, h, kind, ekv):
+        return sublayer_train(p, h, cfg, kind, positions=positions,
+                              kv_repeat=kv_repeat, enc_kv=ekv)
+
+    for i, lp in enumerate(params["prefix"]):
+        ekv = _layer_enc_kv(lp, enc_out, cfg)
+        h, aux = run(lp, h, "G", ekv)
+        aux_total += aux
+
+    if "scan" in params:
+        def group_body(carry, lp):
+            hh, aux_sum = carry
+            for j, kind in enumerate(cfg.layer_pattern):
+                ekv = _layer_enc_kv(lp[f"sub{j}"], enc_out, cfg)
+                hh, aux = sublayer_train(lp[f"sub{j}"], hh, cfg, kind,
+                                         positions=positions,
+                                         kv_repeat=kv_repeat, enc_kv=ekv)
+                aux_sum = aux_sum + aux
+            return (hh, aux_sum), None
+
+        body = jax.checkpoint(group_body) if remat else group_body
+        (h, aux_total), _ = jax.lax.scan(body, (h, aux_total), params["scan"])
+
+    _, _, tail = layout(cfg)
+    for lp, kind in zip(params["tail"], tail):
+        ekv = _layer_enc_kv(lp, enc_out, cfg)
+        h, aux = run(lp, h, kind, ekv)
+        aux_total += aux
+
+    h = apply_norm(params["final_norm"], h, cfg)
+    return h, aux_total
+
+
+def _layer_enc_kv(lp, enc_out, cfg):
+    if enc_out is None or "xattn" not in lp:
+        return None
+    return attn.cross_kv(lp["xattn"], enc_out, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Loss (chunked cross-entropy; logits never materialized over full S)
+# ---------------------------------------------------------------------------
+
+
+def chunked_ce(params, cfg: ModelConfig, h, labels, chunk: int = 256):
+    """h (B, S, d), labels (B, S) int32 (−1 = masked) → (sum_nll, n_valid).
+    Frontend positions (if any) must already be stripped from h."""
+    b, s, _ = h.shape
+    pad = (-s) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = (s + pad) // chunk
+    hc = h.reshape(b, nc, chunk, -1).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        nll, nv = carry
+        hh, ll = xs
+        logits = lm_logits(params["embed"], hh, cfg)     # (B, C, V) fp32
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(ll, 0)[..., None], axis=-1)[..., 0]
+        valid = (ll >= 0).astype(jnp.float32)
+        nll = nll + ((logz - gold) * valid).sum()
+        nv = nv + valid.sum()
+        return (nll, nv), None
+
+    (nll, nv), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)),
+                                (hc, lc))
+    return nll, nv
+
+
+def train_loss(params, cfg: ModelConfig, batch, *, kv_repeat: int = 1,
+               remat: bool = True, loss_chunk: int = 256):
+    """batch: {tokens (B,St), labels (B,St), frontend_embeds?, enc_embeds?}.
+    Returns (loss, metrics)."""
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = encode(params, cfg, batch["enc_embeds"])
+        h, aux = forward_trunk(params, cfg, batch["tokens"], enc_out=enc_out,
+                               kv_repeat=kv_repeat, remat=remat)
+    else:
+        h, aux = forward_trunk(params, cfg, batch["tokens"],
+                               frontend_embeds=batch.get("frontend_embeds"),
+                               kv_repeat=kv_repeat, remat=remat)
+    if cfg.n_frontend_tokens and not cfg.is_encdec:
+        h = h[:, cfg.n_frontend_tokens:]
+    nll, nv = chunked_ce(params, cfg, h, batch["labels"], loss_chunk)
+    loss = nll / jnp.maximum(nv, 1.0)
+    metrics = {"nll": loss, "aux_loss": aux, "n_valid": nv}
+
+    if cfg.mtp_depth > 0:
+        mtp_loss = _mtp_loss(params, cfg, h, batch, kv_repeat, loss_chunk)
+        metrics["mtp_loss"] = mtp_loss
+        loss = loss + 0.3 * mtp_loss
+    loss = loss + aux
+    return loss, metrics
+
+
+def _mtp_loss(params, cfg: ModelConfig, h, batch, kv_repeat, loss_chunk):
+    """DeepSeek MTP depth-1: predict token t+2 from (h_t, emb(token_{t+1}))."""
+    mtp = params["mtp"]
+    tokens, labels = batch["tokens"], batch["labels"]
+    h_in = apply_norm(mtp["norm_h"], h[:, :-1], cfg)
+    e_in = apply_norm(mtp["norm_e"],
+                      embed_tokens(params["embed"], tokens[:, 1:], cfg), cfg)
+    x = jnp.concatenate([h_in, e_in], axis=-1) @ mtp["proj"].astype(
+        cdtype(cfg))
+    positions = jnp.arange(x.shape[1])
+    x, _ = sublayer_train(mtp["layer"], x, cfg, "G", positions=positions,
+                          kv_repeat=kv_repeat)
+    x = apply_norm(mtp["final_norm"], x, cfg)
+    # position t predicts labels[t+1] (i.e. token t+2); length S-1 matches x
+    mtp_labels = labels[:, 1:]
+    nll, nv = chunked_ce(params, cfg, x, mtp_labels, loss_chunk)
+    return nll / jnp.maximum(nv, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def _all_kinds(cfg: ModelConfig):
+    n_prefix, n_rep, tail = layout(cfg)
+    return n_prefix, n_rep, tail
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               kv_repeat: int = 1, kv_mode: str = "exact",
+               kv_clusters: int = 512, kv_tail: int = 256):
+    n_prefix, n_rep, tail = layout(cfg)
+    mk = lambda kind: init_sublayer_cache(  # noqa: E731
+        cfg, kind, batch, max_seq, kv_repeat, kv_mode, kv_clusters, kv_tail)
+    cache = {
+        "prefix": [mk("G") for _ in range(n_prefix)],
+        "tail": [mk(k) for k in tail],
+    }
+    if n_rep > 0:
+        group = {f"sub{j}": mk(cfg.layer_pattern[j])
+                 for j in range(len(cfg.layer_pattern))}
+        cache["scan"] = jax.tree.map(
+            lambda l: jnp.zeros((n_rep,) + l.shape, l.dtype), group)
+    return cache
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, max_seq: int,
+            frontend_embeds=None, enc_embeds=None, kv_repeat: int = 1):
+    """Full-sequence prefill.  Returns (last_logits (B, V), cache)."""
+    enc_out = None
+    cross_cache = None
+    if cfg.is_encdec:
+        enc_out = encode(params, cfg, enc_embeds)
+    h = _embed_inputs(params, cfg, tokens, frontend_embeds)
+    positions = jnp.arange(h.shape[1])
+
+    caches = {"prefix": [], "tail": []}
+    cross = {"prefix": [], "tail": []}
+    for lp in params["prefix"]:
+        ekv = _layer_enc_kv(lp, enc_out, cfg)
+        h, c, _ = sublayer_prefill(lp, h, cfg, "G", positions=positions,
+                                   kv_repeat=kv_repeat, max_seq=max_seq,
+                                   enc_kv=ekv)
+        caches["prefix"].append(c)
+        cross["prefix"].append(ekv)
+
+    if "scan" in params:
+        def group_body(hh, lp):
+            cs = {}
+            for j, kind in enumerate(cfg.layer_pattern):
+                ekv = _layer_enc_kv(lp[f"sub{j}"], enc_out, cfg)
+                hh, c, _ = sublayer_prefill(
+                    lp[f"sub{j}"], hh, cfg, kind, positions=positions,
+                    kv_repeat=kv_repeat, max_seq=max_seq, enc_kv=ekv)
+                cs[f"sub{j}"] = c
+                if ekv is not None:
+                    cs[f"xkv{j}"] = ekv
+            return hh, cs
+
+        h, scan_caches = jax.lax.scan(group_body, h, params["scan"])
+        caches["scan"] = scan_caches
+
+    _, _, tail = layout(cfg)
+    for lp, kind in zip(params["tail"], tail):
+        ekv = _layer_enc_kv(lp, enc_out, cfg)
+        h, c, _ = sublayer_prefill(lp, h, cfg, kind, positions=positions,
+                                   kv_repeat=kv_repeat, max_seq=max_seq,
+                                   enc_kv=ekv)
+        caches["tail"].append(c)
+        cross["tail"].append(ekv)
+
+    if cfg.is_encdec:
+        caches["cross_prefix"] = [c for c in cross["prefix"]]
+        caches["cross_tail"] = [c for c in cross["tail"]]
+
+    h = apply_norm(params["final_norm"], h, cfg)
+    logits = lm_logits(params["embed"], h[:, -1:], cfg)[:, 0]
+    return logits, caches
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, t, *,
+                kv_repeat: int = 1):
+    """One decode step.  tokens (B, 1), t scalar int32 (current position).
+    Returns (logits (B, V), cache')."""
+    h = embed_tokens(params["embed"], tokens, cfg)
+    if cfg.embed_scale:
+        pass  # already applied in embed_tokens
+    if cfg.pos_kind == "abs_sinusoidal":
+        h = h + sinusoidal_pos(1, cfg.d_model, offset=t).astype(h.dtype)[None]
+    h = annotate(h, "batch", "seq", "d_model")
+
+    new_cache = {"prefix": [], "tail": []}
+    for lp, c in zip(params["prefix"], cache["prefix"]):
+        ekv = cache.get("cross_prefix", [None] * len(params["prefix"]))
+        h, c2 = sublayer_decode(lp, h, cfg, "G", c, t, kv_repeat=kv_repeat,
+                                enc_kv=ekv[len(new_cache["prefix"])]
+                                if cfg.is_encdec else None)
+        new_cache["prefix"].append(c2)
+
+    if "scan" in params:
+        def group_body(hh, xs):
+            lp, cs = xs
+            cs2 = dict(cs)
+            for j, kind in enumerate(cfg.layer_pattern):
+                ekv = cs.get(f"xkv{j}")
+                hh, cnew = sublayer_decode(lp[f"sub{j}"], hh, cfg, kind,
+                                           cs[f"sub{j}"], t,
+                                           kv_repeat=kv_repeat, enc_kv=ekv)
+                cs2[f"sub{j}"] = cnew
+            return hh, cs2
+
+        h, scan_caches = jax.lax.scan(group_body, h,
+                                      (params["scan"], cache["scan"]))
+        new_cache["scan"] = scan_caches
+
+    _, _, tail = layout(cfg)
+    for i, (lp, kind) in enumerate(zip(params["tail"], tail)):
+        ekv = (cache.get("cross_tail", [None] * len(tail))[i]
+               if cfg.is_encdec else None)
+        h, c2 = sublayer_decode(lp, h, cfg, kind, cache["tail"][i], t,
+                                kv_repeat=kv_repeat, enc_kv=ekv)
+        new_cache["tail"].append(c2)
+
+    if cfg.is_encdec:
+        new_cache["cross_prefix"] = cache["cross_prefix"]
+        new_cache["cross_tail"] = cache["cross_tail"]
+
+    h = apply_norm(params["final_norm"], h, cfg)
+    logits = lm_logits(params["embed"], h, cfg)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,101 @@
+"""AdamW with global-norm clipping and warmup+cosine schedule.
+
+Self-contained (no optax dependency).  Moments are fp32 pytrees with the
+same partition specs as the parameters (ZeRO-style when FSDP rules are on).
+An optional gradient-compression hook (k-means codebook, the paper's engine)
+is applied to gradients before the update — see core/grad_compress.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    m: object
+    v: object
+    step: jnp.ndarray
+
+
+def init(params) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(jax.tree.map(zeros, params), jax.tree.map(zeros, params),
+                    jnp.zeros((), jnp.int32))
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1.0 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    factor = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda l: (l.astype(jnp.float32) * factor), tree), norm
+
+
+def update(grads, state: OptState, params, cfg: AdamWConfig,
+           grad_transform: Optional[Callable] = None):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    if grad_transform is not None:
+        grads = grad_transform(grads)
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32)
+        return m, v, (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    flat_p = jax.tree.leaves(params)
+    new_m, new_v, new_p = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        m2, v2, p2 = upd(g, m, v, p)
+        new_m.append(m2)
+        new_v.append(v2)
+        new_p.append(p2)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return (tdef.unflatten(new_p),
+            OptState(tdef.unflatten(new_m), tdef.unflatten(new_v), step),
+            metrics)

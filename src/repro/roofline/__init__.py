@@ -1,0 +1,1 @@
+from repro.roofline import hlo_parse  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.runtime import trainer  # noqa: F401

@@ -1,0 +1,163 @@
+"""Serving runtime: request queue → clustering batcher → decode loop,
+with optional clustered-KV cache compression (memory management).
+
+This is the "request processing" half of the paper's title made concrete:
+  1. requests arrive in a queue with (prompt_len, max_new_tokens),
+  2. the batcher clusters them (core/request_cluster.py) to minimize
+     padding waste, 3. each batch is prefillled then decoded step by step,
+  4. long caches can be compacted with the bit-serial k-medians compressor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kv_compress
+from repro.core.request_cluster import BatchPlan, Request, plan_batches, plan_fifo
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class ServerConfig:
+    batch_size: int = 4
+    max_seq: int = 256
+    use_clustered_batching: bool = True
+    n_request_clusters: int = 4
+    greedy: bool = True
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    tokens: List[int]
+    prefill_ms: float
+    decode_ms: float
+
+
+def _tail_ring(tail_chrono, t: int, r: int):
+    """Re-lay a chronological tail (positions t-r..t-1) into ring order
+    (position p at slot p % r) so decode's ring indexing stays valid."""
+    slots = np.mod(np.arange(t - r, t), r)
+    inv = np.argsort(slots)
+    return tail_chrono[:, inv]
+
+
+class Server:
+    def __init__(self, cfg: ModelConfig, scfg: ServerConfig, params):
+        self.cfg = cfg
+        self.scfg = scfg
+        self.params = params
+        self._decode = jax.jit(
+            lambda c, tk, t: tfm.decode_step(params, cfg, c, tk, t))
+
+    def serve(self, requests: Sequence[Request],
+              prompts: Dict[int, np.ndarray]) -> List[Completion]:
+        """prompts: uid -> token array.  Returns completions per request."""
+        scfg = self.scfg
+        if scfg.use_clustered_batching:
+            plan = plan_batches(requests, scfg.batch_size,
+                                scfg.n_request_clusters)
+        else:
+            plan = plan_fifo(requests, scfg.batch_size)
+        by_uid = {r.uid: r for r in requests}
+        out: List[Completion] = []
+        for batch_uids in plan.batches:
+            out.extend(self._serve_batch(batch_uids, by_uid, prompts))
+        return out
+
+    def compact_kv(self, cache, t: int, ccfg: "kv_compress.KVCompressConfig"):
+        """Memory-management maintenance pass: compress every global-
+        attention layer's exact KV prefix into clustered form (median
+        centroids + counts + exact tail).  Called between decode bursts
+        (e.g. every ``ccfg.keep_recent`` steps); the returned cache plugs
+        straight into decode_step (the clustered path dispatches on the
+        cache contents)."""
+        def compress_leaf_pair(c):
+            if not (isinstance(c, dict) and "k" in c and "v" in c):
+                return c
+            k, v = c["k"], c["v"]
+            if k.shape[1] <= ccfg.n_clusters + ccfg.keep_recent:
+                return c  # not worth compressing
+            b = k.shape[0]
+            outs = []
+            for i in range(b):
+                outs.append(kv_compress.compress_cache(
+                    jnp.asarray(k[i][:t]), jnp.asarray(v[i][:t]), ccfg))
+            return {
+                "k_cents": jnp.stack([o.k_cents.transpose(1, 0, 2)
+                                      for o in outs]),
+                "v_cents": jnp.stack([o.v_cents.transpose(1, 0, 2)
+                                      for o in outs]),
+                "counts": jnp.stack([o.counts.T for o in outs]),
+                "k_tail": _tail_ring(
+                    jnp.stack([o.k_tail.transpose(1, 0, 2) for o in outs]),
+                    t, ccfg.keep_recent),
+                "v_tail": _tail_ring(
+                    jnp.stack([o.v_tail.transpose(1, 0, 2) for o in outs]),
+                    t, ccfg.keep_recent),
+            }
+
+        def walk(node):
+            if isinstance(node, dict) and "k" in node and "v" in node:
+                if node["k"].ndim == 4:
+                    return compress_leaf_pair(node)
+                if node["k"].ndim == 5:  # scan-stacked: (layers, B, S, H, D)
+                    n_rep = node["k"].shape[0]
+                    per_layer = [compress_leaf_pair(
+                        {"k": node["k"][i], "v": node["v"][i]})
+                        for i in range(n_rep)]
+                    if any("k_cents" not in pl for pl in per_layer):
+                        return node  # too short to compress: keep exact
+                    return {kk: jnp.stack([pl[kk] for pl in per_layer])
+                            for kk in per_layer[0]}
+            if isinstance(node, dict):
+                return {kk: walk(vv) for kk, vv in node.items()}
+            if isinstance(node, list):
+                return [walk(vv) for vv in node]
+            return node
+
+        return walk(cache)
+
+    def _serve_batch(self, uids, by_uid, prompts) -> List[Completion]:
+        cfg, scfg = self.cfg, self.scfg
+        reqs = [by_uid[u] for u in uids]
+        plen = max(r.prompt_len for r in reqs)
+        gen = max(r.max_new_tokens for r in reqs)
+        b = len(reqs)
+        toks = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(reqs):
+            p = prompts[r.uid][-plen:]
+            toks[i, plen - len(p):] = p  # left-pad
+
+        t0 = time.perf_counter()
+        logits, cache = jax.jit(
+            lambda tk: tfm.prefill(self.params, cfg, tk,
+                                   max_seq=scfg.max_seq))(jnp.asarray(toks))
+        jax.block_until_ready(logits)
+        t1 = time.perf_counter()
+
+        new = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        gen_toks = [new]
+        for i in range(gen - 1):
+            logits, cache = self._decode(cache, new, jnp.int32(plen + i))
+            new = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+            gen_toks.append(new)
+        jax.block_until_ready(new)
+        t2 = time.perf_counter()
+
+        gen_arr = np.concatenate([np.asarray(g) for g in gen_toks], axis=1)
+        outs = []
+        for i, r in enumerate(reqs):
+            outs.append(Completion(
+                uid=r.uid,
+                tokens=gen_arr[i, :r.max_new_tokens].tolist(),
+                prefill_ms=(t1 - t0) * 1e3 / b,
+                decode_ms=(t2 - t1) * 1e3 / b))
+        return outs

@@ -1,0 +1,4 @@
+from repro.sharding.rules import (Rules, annotate, annotate_prio,
+                                  current_rules, default_table, param_spec,
+                                  shardings_from_specs, tree_param_specs,
+                                  use_rules)  # noqa: F401

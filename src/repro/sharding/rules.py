@@ -1,0 +1,258 @@
+"""Logical-axis sharding rules (MaxText-style), divisibility-aware.
+
+Models annotate intermediates with *logical* axis names via ``annotate``;
+a rules context (installed by the launcher around tracing) maps logical
+names to mesh axes and applies ``with_sharding_constraint``.  Outside a
+context ``annotate`` is a no-op, so model code never depends on a mesh.
+
+Parameter partition specs are derived from leaf *names* + shapes
+(``param_spec``) with the same divisibility rule: a dimension is sharded
+only when its size divides evenly; otherwise it is replicated (never
+crash — small models on big meshes degrade gracefully to partial TP).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+import re
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class Rules:
+    mesh: Mesh
+    table: dict                      # logical axis -> mesh axis tuple | None
+    fsdp: bool = False               # shard params/opt-state over data axis
+
+    def axes_for(self, logical: Optional[str], dim: int):
+        if logical is None:
+            return None
+        axes = self.table.get(logical)
+        if not axes:
+            return None
+        total = math.prod(self.mesh.shape[a] for a in axes)
+        if dim % total != 0:
+            # try a prefix of the axes (e.g. batch over ("pod","data") but
+            # dim only divisible by pod count)
+            for cut in range(len(axes) - 1, 0, -1):
+                sub = axes[:cut]
+                t = math.prod(self.mesh.shape[a] for a in sub)
+                if dim % t == 0:
+                    return tuple(sub)
+            return None
+        return tuple(axes)
+
+
+_ACTIVE: list = []
+
+
+@contextlib.contextmanager
+def use_rules(rules: Rules):
+    _ACTIVE.append(rules)
+    try:
+        yield rules
+    finally:
+        _ACTIVE.pop()
+
+
+def current_rules() -> Optional[Rules]:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def annotate(x, *logical_axes):
+    """Constrain intermediate ``x`` (ndim == len(logical_axes)) if a rules
+    context is active; otherwise identity.  A mesh axis may appear at most
+    once — the first (leftmost) logical axis that claims it wins (e.g. the
+    MoE expert dim takes ``model`` and the expert-FFN dim then replicates)."""
+    r = current_rules()
+    if r is None:
+        return x
+    assert x.ndim == len(logical_axes), (x.shape, logical_axes)
+    used = set()
+    dims = []
+    for ax, d in zip(logical_axes, x.shape):
+        res = r.axes_for(ax, d)
+        tup = (res,) if isinstance(res, str) else tuple(res or ())
+        if not tup or any(a in used for a in tup):
+            dims.append(None)
+        else:
+            used.update(tup)
+            dims.append(res)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(r.mesh, P(*dims)))
+
+
+def annotate_prio(x, logical_axes, priority):
+    """Like ``annotate`` but resolves logical axes in ``priority`` order
+    (indices into logical_axes), so e.g. the MoE expert dim claims the
+    (model, data) axes before the dispatch-shard dim claims data."""
+    r = current_rules()
+    if r is None:
+        return x
+    assert x.ndim == len(logical_axes), (x.shape, logical_axes)
+    used = set()
+    dims = [None] * x.ndim
+    order = list(priority) + [i for i in range(x.ndim) if i not in priority]
+    for i in order:
+        ax = logical_axes[i]
+        if ax is None:
+            continue
+        res = r.axes_for(ax, x.shape[i])
+        tup = (res,) if isinstance(res, str) else tuple(res or ())
+        if not tup or any(a in used for a in tup):
+            continue
+        used.update(tup)
+        dims[i] = res
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(r.mesh, P(*dims)))
+
+
+# ---------------------------------------------------------------------------
+# Mesh-axis tables
+# ---------------------------------------------------------------------------
+
+
+def default_table(multi_pod: bool, *, seq_shard: bool = False) -> dict:
+    batch = ("pod", "data") if multi_pod else ("data",)
+    model = ("model",)
+    t = {
+        "batch": batch,
+        "seq": None,
+        "kvseq": batch if seq_shard else None,  # sequence-parallel KV (SP)
+        "d_model": None,
+        "heads": model,
+        "kv_heads": model,
+        "ff": model,
+        "vocab": model,
+        # full expert parallelism: spread experts over model×data when the
+        # count divides (DeepSeek 256 → 1 expert/chip; axes_for falls back
+        # to ("model",) then replication for awkward counts like Qwen2's 60)
+        "experts": ("model", "data"),
+        "expert_ff": model,
+        "expert_cap": batch,
+        "lru": model,
+        "ssm_heads": model,
+        "state": None,
+        "head_dim": None,
+    }
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition specs (name-based)
+# ---------------------------------------------------------------------------
+
+# rule: regex on the leaf path -> logical axes for the TRAILING dims
+_PARAM_RULES = [
+    # MoE expert banks: (E, d, f) / (E, f, d)
+    (re.compile(r"moe/(w_gate|w_up)$"), ("experts", "fsdp", "expert_ff")),
+    (re.compile(r"moe/w_down$"), ("experts", "expert_ff", "fsdp")),
+    (re.compile(r"moe/router$"), (None, None)),
+    (re.compile(r"moe/bias$"), (None,)),
+    # embeddings / heads
+    (re.compile(r"embed/table$"), ("vocab", "fsdp")),
+    (re.compile(r"embed/head$"), ("fsdp", "vocab")),
+    # attention projections
+    (re.compile(r"(wq|wk|wv|wuq|wukv)$"), ("fsdp", "model_out")),
+    (re.compile(r"(wdq|wdkv|wkr)$"), ("fsdp", None)),
+    (re.compile(r"wo$"), ("model_out", "fsdp")),
+    # mlp
+    (re.compile(r"(w_gate|w_up)$"), ("fsdp", "ff")),
+    (re.compile(r"w_down$"), ("ff", "fsdp")),
+    # recurrent / ssm
+    (re.compile(r"(wx|wg|wa_gate|wi_gate)$"), ("fsdp", "lru")),
+    (re.compile(r"rg_out$"), ("lru", "fsdp")),
+    (re.compile(r"in_proj$"), ("fsdp", "ssm_ch")),
+    (re.compile(r"out_proj$"), ("ssm_ch", "fsdp")),
+    (re.compile(r"frontend/proj$"), (None, "fsdp")),
+]
+
+
+def param_spec(path: str, shape: Sequence[int], rules: Rules) -> P:
+    """Partition spec for parameter leaf ``path`` with ``shape``.
+
+    Trailing dims follow the matched rule; extra leading dims (layer-stacking
+    from scan) are unsharded.  ``fsdp`` resolves to the data axis when the
+    rules enable it (ZeRO-style), else replicated.  ``model_out``/``ff`` etc.
+    resolve to the model axis when divisible.
+    """
+    logical = None
+    for rx, ax in _PARAM_RULES:
+        if rx.search(path):
+            logical = ax
+            break
+    if logical is None:
+        return P()  # norms, biases, conv kernels, A_log… replicated
+
+    def resolve(name, dim):
+        if name is None:
+            return None
+        if name == "fsdp":
+            if not rules.fsdp:
+                return None
+            axes = rules.table.get("batch") or ()
+            # fsdp uses the data axis only (not pod — pods replicate params
+            # unless fsdp spans pods; keep intra-pod to bound cross-pod
+            # traffic, cross-pod handled by gradient compression)
+            axes = tuple(a for a in axes if a == "data")
+            total = math.prod(rules.mesh.shape[a] for a in axes) if axes else 0
+            return axes if axes and dim % total == 0 else None
+        if name == "experts":
+            return rules.axes_for("experts", dim)
+        if name in ("model_out", "ff", "expert_ff", "vocab", "lru",
+                    "ssm_ch", "heads"):
+            axes = ("model",)
+            total = rules.mesh.shape["model"]
+            return axes if dim % total == 0 else None
+        axes = rules.table.get(name)
+        if not axes:
+            return None
+        total = math.prod(rules.mesh.shape[a] for a in axes)
+        return tuple(axes) if dim % total == 0 else None
+
+    trailing = [resolve(n, d) for n, d in zip(logical, shape[-len(logical):])]
+    lead = [None] * (len(shape) - len(logical))
+    used = set()
+    final = list(lead)
+    # a mesh axis may appear at most once in a spec; drop duplicates (e.g.
+    # fsdp=data colliding with expert_cap) keeping the first occurrence
+    for ax in trailing:
+        if ax is None:
+            final.append(None)
+            continue
+        tup = (ax,) if isinstance(ax, str) else tuple(ax)
+        if any(a in used for a in tup):
+            final.append(None)
+        else:
+            used.update(tup)
+            final.append(ax)
+    return P(*final)
+
+
+def tree_param_specs(params, rules: Rules):
+    """PartitionSpec pytree for a parameter pytree (path-aware)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for kp, leaf in flat:
+        path = "/".join(_key_str(k) for k in kp)
+        specs.append(param_spec(path, leaf.shape, rules))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def shardings_from_specs(mesh: Mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,142 @@
+"""Clustered-KV decode path tests.
+
+With empty centroids (counts=0) the clustered path must EXACTLY match
+exact-cache decode while positions fit in the tail ring — pins masking,
+ring indexing, and the count-bias math.  A second test fills centroids
+from the paper's compressor and checks the approximation is close."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import attention as attn
+from repro.models import transformer as tfm
+from repro.core import kv_compress
+
+
+def f32(cfg):
+    return dataclasses.replace(cfg, dtype="float32")
+
+
+def test_empty_centroids_match_exact_within_tail():
+    cfg = f32(configs.get_reduced("qwen3-4b"))
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, size=(2, 10)), jnp.int32)
+
+    cache_e = tfm.init_cache(cfg, 2, 32)
+    cache_c = tfm.init_cache(cfg, 2, 32, kv_mode="clustered",
+                             kv_clusters=8, kv_tail=16)
+    step = lambda c, tk, t: tfm.decode_step(params, cfg, c, tk, t)
+    for t in range(10):
+        le, cache_e = step(cache_e, toks[:, t:t + 1], jnp.int32(t))
+        lc, cache_c = step(cache_c, toks[:, t:t + 1], jnp.int32(t))
+        np.testing.assert_allclose(np.asarray(le), np.asarray(lc),
+                                   rtol=1e-4, atol=1e-4,
+                                   err_msg=f"t={t}")
+
+
+def test_compressed_centroids_approximate_attention():
+    cfg = f32(configs.get_reduced("qwen3-4b"))
+    p = attn.init_attn(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(1)
+    b, s = 1, 96
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    # clustery keys
+    centers = rng.normal(size=(6, dh)) * 2
+    k = jnp.asarray(centers[rng.integers(0, 6, size=(b, s, hkv))]
+                    + rng.normal(size=(b, s, hkv, dh)) * 0.1, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, dh)), jnp.float32)
+
+    # exact decode attention at t = s
+    q = jnp.asarray(rng.normal(size=(b, cfg.n_heads, dh)), jnp.float32)
+    out_e = attn.decode_attention(q, k, v, t=s, scale=dh**-0.5)
+
+    # compress prefix (no tail for comparability), build clustered cache
+    ccfg = kv_compress.KVCompressConfig(n_clusters=12, iters=8,
+                                        keep_recent=16)
+    ckv = kv_compress.compress_cache(k[0], v[0], ccfg)
+    cache = {
+        "k_cents": ckv.k_cents.transpose(1, 0, 2)[None],   # (1, C, H, Dh)
+        "v_cents": ckv.v_cents.transpose(1, 0, 2)[None],
+        "counts": ckv.counts.T[None],                      # (1, C, H)
+        "k_tail": jnp.zeros((b, 16, hkv, dh), jnp.float32).at[:, :16].set(
+            ckv.k_tail.transpose(1, 0, 2)[None]),
+        "v_tail": jnp.zeros((b, 16, hkv, dh), jnp.float32).at[:, :16].set(
+            ckv.v_tail.transpose(1, 0, 2)[None]),
+    }
+    # clustered attention via the layer path needs x; test the math directly
+    from repro.models.attention import attn_decode_clustered  # noqa: F401
+    # score/combine mirror kv_compress.clustered_attention per head group:
+    out_c = []
+    for h in range(cfg.n_heads):
+        kvh = h * hkv // cfg.n_heads
+        ck = kv_compress.CompressedKV(
+            k_cents=ckv.k_cents[kvh:kvh + 1], v_cents=ckv.v_cents[kvh:kvh + 1],
+            counts=ckv.counts[kvh:kvh + 1], k_tail=ckv.k_tail[kvh:kvh + 1],
+            v_tail=ckv.v_tail[kvh:kvh + 1])
+        out_c.append(kv_compress.clustered_attention(
+            q[0, h:h + 1], ck, scale=dh**-0.5))
+    out_c = jnp.stack(out_c, 0)[None, :, 0]
+    rel = float(jnp.linalg.norm(out_c - out_e)
+                / jnp.maximum(jnp.linalg.norm(out_e), 1e-9))
+    assert rel < 0.25, rel
+
+
+def test_int8_kv_decode_close_to_bf16():
+    """int8 KV cache with per-head scales ≈ exact decode (scales set from
+    observed key/value ranges)."""
+    cfg = f32(configs.get_reduced("qwen3-4b"))
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, size=(2, 12)), jnp.int32)
+
+    cache_e = tfm.init_cache(cfg, 2, 32)
+    cache_q = tfm.init_cache(cfg, 2, 32, kv_mode="int8")
+    # set plausible static scales (production: calibrated at prefill)
+    cache_q = jax.tree.map(
+        lambda l: (jnp.full(l.shape, 0.05, l.dtype)
+                   if l.dtype == jnp.float32 and l.ndim == 1 else l), cache_q)
+    step = lambda c, tk, t: tfm.decode_step(params, cfg, c, tk, t)
+    ok = 0
+    for t in range(12):
+        le, cache_e = step(cache_e, toks[:, t:t + 1], jnp.int32(t))
+        lq, cache_q = step(cache_q, toks[:, t:t + 1], jnp.int32(t))
+        # logits drift slightly; top-1 agreement is the serving criterion
+        ok += int((jnp.argmax(le, -1) == jnp.argmax(lq, -1)).all())
+    assert ok >= 10, f"top-1 agreement only {ok}/12"
+
+
+def test_server_compact_kv_roundtrip():
+    """Server.compact_kv turns exact prefix/tail-layer caches into
+    clustered ones that decode_step accepts and produces sane logits."""
+    from repro.runtime.server import Server, ServerConfig
+    # config with NO scan region (tail layers only) so compaction applies
+    cfg = dataclasses.replace(
+        configs.get_reduced("qwen3-4b"), n_layers=1, dtype="float32")
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(5)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, size=(1, 96)), jnp.int32)
+    logits_p, cache = tfm.prefill(params, cfg, toks, max_seq=128)
+
+    srv = Server(cfg, ServerConfig(max_seq=128), params)
+    ccfg = kv_compress.KVCompressConfig(n_clusters=12, iters=6,
+                                        keep_recent=16)
+    cache_c = srv.compact_kv(cache, t=96, ccfg=ccfg)
+    # compacted leaves exist and shrank (single layer lives in the scan
+    # region → stacked (layers, B, C, H, Dh))
+    sc = cache_c["scan"]["sub0"]
+    assert "k_cents" in sc and sc["k_cents"].shape[2] == 12
+    assert sc["k_tail"].shape[2] == 16
+
+    le, _ = tfm.decode_step(params, cfg, cache, toks[:, -1:], jnp.int32(96))
+    lc, _ = tfm.decode_step(params, cfg, cache_c, toks[:, -1:],
+                            jnp.int32(96))
+    assert bool(jnp.isfinite(lc).all())
+    # approximation keeps the distribution close (cosine of logits)
+    cos = float(jnp.sum(le * lc)
+                / (jnp.linalg.norm(le) * jnp.linalg.norm(lc)))
+    assert cos > 0.98, cos

@@ -1,0 +1,124 @@
+"""Clustering engine tests: Lloyd convergence, robustness, paper protocols."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import clustering
+from repro.core.clustering import ClusterConfig
+
+
+def make_blobs(rng, n_per, centers, std=0.3):
+    centers = np.asarray(centers, np.float32)
+    k, d = centers.shape
+    xs, ys = [], []
+    for c in range(k):
+        xs.append(rng.normal(size=(n_per, d)).astype(np.float32) * std + centers[c])
+        ys.append(np.full((n_per,), c, np.int32))
+    x = np.concatenate(xs)
+    y = np.concatenate(ys)
+    perm = rng.permutation(len(x))
+    return x[perm], y[perm]
+
+
+CENTERS = [[0.0, 0.0], [5.0, 5.0], [-5.0, 5.0], [5.0, -5.0]]
+
+
+class TestFit:
+    @pytest.mark.parametrize("centroid,metric", [("mean", "l2"), ("median", "l1")])
+    def test_recovers_blobs(self, centroid, metric):
+        rng = np.random.default_rng(0)
+        x, y = make_blobs(rng, 64, CENTERS)
+        cfg = ClusterConfig(k=4, centroid=centroid, metric=metric, seed=3)
+        res = clustering.fit(jnp.asarray(x), cfg)
+        rate = clustering.recognition_rate(res.assign, jnp.asarray(y), 4, 4)
+        assert float(rate) > 0.97, f"recognition {float(rate)}"
+        assert int(res.n_iters) < cfg.max_iters
+
+    def test_median_robust_to_outliers_vs_mean(self):
+        rng = np.random.default_rng(1)
+        x, _ = make_blobs(rng, 100, [[0.0, 0.0]], std=0.2)
+        x[:5] = 1000.0  # gross outliers
+        init = jnp.asarray([[0.5, 0.5]], jnp.float32)
+        cfg_med = ClusterConfig(k=1, centroid="median", metric="l1", max_iters=5)
+        cfg_mean = ClusterConfig(k=1, centroid="mean", metric="l2", max_iters=5)
+        cm = clustering.fit(jnp.asarray(x), cfg_med, init).centroids
+        ca = clustering.fit(jnp.asarray(x), cfg_mean, init).centroids
+        err_med = float(jnp.abs(cm).max())
+        err_mean = float(jnp.abs(ca).max())
+        assert err_med < 0.2, err_med         # median ignores outliers
+        assert err_mean > 5.0, err_mean       # mean is dragged away
+
+    def test_convergence_flag_and_inertia_decreases(self):
+        rng = np.random.default_rng(2)
+        x, _ = make_blobs(rng, 50, CENTERS)
+        cfg = ClusterConfig(k=4, centroid="mean", metric="l2", max_iters=1)
+        r1 = clustering.fit(jnp.asarray(x), cfg)
+        cfg50 = dataclasses.replace(cfg, max_iters=50)
+        r50 = clustering.fit(jnp.asarray(x), cfg50)
+        assert float(r50.inertia) <= float(r1.inertia) + 1e-3
+
+    def test_jit_fit(self):
+        rng = np.random.default_rng(3)
+        x, _ = make_blobs(rng, 32, CENTERS)
+        from functools import partial
+        f = jax.jit(partial(clustering.fit, cfg=ClusterConfig(k=4)))
+        res = f(jnp.asarray(x))
+        assert res.centroids.shape == (4, 2)
+        assert not bool(jnp.isnan(res.centroids).any())
+
+
+class TestMiniBatch:
+    def test_minibatch_converges(self):
+        rng = np.random.default_rng(4)
+        x, y = make_blobs(rng, 256, CENTERS)
+        res = clustering.fit_minibatch(
+            jax.random.PRNGKey(0), jnp.asarray(x),
+            ClusterConfig(k=4, centroid="median", metric="l1"),
+            batch_size=128, n_steps=30)
+        rate = clustering.recognition_rate(res.assign, jnp.asarray(y), 4, 4)
+        assert float(rate) > 0.9
+
+
+class TestModelSelection:
+    def test_select_k_finds_true_k(self):
+        rng = np.random.default_rng(5)
+        x, _ = make_blobs(rng, 60, CENTERS, std=0.25)
+        k_opt, scores = clustering.select_k(jnp.asarray(x), 2, 6,
+                                            ClusterConfig(k=2, centroid="mean",
+                                                          metric="l2"))
+        assert k_opt == 4, (k_opt, scores)
+
+    def test_recognition_rate_perfect_and_chance(self):
+        assign = jnp.asarray([0, 0, 1, 1], jnp.int32)
+        labels = jnp.asarray([1, 1, 0, 0], jnp.int32)
+        assert float(clustering.recognition_rate(assign, labels, 2, 2)) == 1.0
+
+
+class TestAssignment:
+    def test_kernel_vs_jnp_paths_agree(self):
+        rng = np.random.default_rng(6)
+        x = rng.normal(size=(300, 8)).astype(np.float32)
+        c = rng.normal(size=(5, 8)).astype(np.float32)
+        for metric in ("l1", "l2"):
+            a1, m1 = clustering.assign_points(jnp.asarray(x), jnp.asarray(c),
+                                              metric, use_kernel=True)
+            a2, m2 = clustering.assign_points(jnp.asarray(x), jnp.asarray(c),
+                                              metric, use_kernel=False)
+            np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+            np.testing.assert_allclose(np.asarray(m1), np.asarray(m2),
+                                       rtol=1e-4, atol=1e-4)
+
+    def test_chunked_assignment(self):
+        rng = np.random.default_rng(7)
+        x = rng.normal(size=(1000, 4)).astype(np.float32)
+        c = rng.normal(size=(3, 4)).astype(np.float32)
+        a, m = clustering._assign_points_jnp(jnp.asarray(x), jnp.asarray(c),
+                                             "l2", chunk=256)
+        from repro.kernels import ref
+        ea, em = ref.distance_argmin_ref(x, c, "l2")
+        np.testing.assert_array_equal(np.asarray(a), ea)
+        np.testing.assert_allclose(np.asarray(m), em, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,149 @@
+"""Hypothesis property tests on system invariants."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitserial, clustering, grad_compress, quantizer
+from repro.core.clustering import ClusterConfig
+from repro.core.request_cluster import Request, plan_batches
+from repro.models.attention import ring_slot_positions
+from repro.optim import adamw
+
+ints32 = st.integers(-(2**30), 2**30 - 1)
+
+
+class TestQuantizerProperties:
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(ints32, min_size=2, max_size=40))
+    def test_unsigned_order_preserves_order(self, vals):
+        """numeric order == lexicographic bit order after the sign flip —
+        the invariant the whole bit-serial scan rests on."""
+        q = jnp.asarray(vals, jnp.int32)
+        u = np.asarray(quantizer.to_unsigned_order(q))
+        order_q = np.argsort(np.asarray(q), kind="stable")
+        order_u = np.argsort(u, kind="stable")
+        np.testing.assert_array_equal(np.asarray(q)[order_q],
+                                      np.asarray(q)[order_u])
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(ints32, min_size=1, max_size=20), st.sampled_from([16, 32]))
+    def test_roundtrip(self, vals, bits):
+        lim = 2 ** (bits - 1)
+        vals = [max(-lim, min(lim - 1, v)) for v in vals]
+        q = jnp.asarray(vals, jnp.int32)
+        u = quantizer.to_unsigned_order(q, bits=bits)
+        back = quantizer.from_unsigned_order(u, bits=bits)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
+
+
+class TestMedianProperties:
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(ints32, min_size=1, max_size=31))
+    def test_median_is_element_and_rank_correct(self, vals):
+        x = np.asarray(vals, np.int32)
+        u = quantizer.to_unsigned_order(jnp.asarray(x)[:, None])
+        med = int(quantizer.from_unsigned_order(bitserial.median_bits(u))[0])
+        assert med in x.tolist()
+        n = len(x)
+        below = int((x < med).sum())
+        at_most = int((x <= med).sum())
+        rank = (n + 1) // 2  # lower median, 1-based
+        assert below < rank <= at_most
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(ints32, min_size=1, max_size=31),
+           st.integers(-(2**10), 2**10))
+    def test_translation_equivariance(self, vals, shift):
+        x = np.asarray(vals, np.int64)
+        xs = np.clip(x + shift, -(2**30), 2**30 - 1).astype(np.int32)
+        x = (xs - shift).astype(np.int32)  # keep pair consistent
+        m1 = int(quantizer.from_unsigned_order(bitserial.median_bits(
+            quantizer.to_unsigned_order(jnp.asarray(x)[:, None])))[0])
+        m2 = int(quantizer.from_unsigned_order(bitserial.median_bits(
+            quantizer.to_unsigned_order(jnp.asarray(xs)[:, None])))[0])
+        assert m2 - m1 == shift
+
+
+class TestClusteringProperties:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_lloyd_inertia_never_increases(self, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(60, 3)).astype(np.float32))
+        cfg = ClusterConfig(k=4, centroid="mean", metric="l2", max_iters=1,
+                            seed=seed % 7)
+        inertias = []
+        cents = clustering.init_kmeanspp(jax.random.PRNGKey(seed % 5), x, 4)
+        for _ in range(5):
+            res = clustering.fit(x, cfg, cents, use_kernel=False)
+            inertias.append(float(res.inertia))
+            cents = res.centroids
+        for a, b in zip(inertias, inertias[1:]):
+            assert b <= a + 1e-3, inertias
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_assignment_is_nearest(self, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=(40, 2)).astype(np.float32)
+        c = rng.normal(size=(5, 2)).astype(np.float32)
+        a, mind = clustering.assign_points(jnp.asarray(x), jnp.asarray(c),
+                                           "l2", use_kernel=False)
+        d = ((x[:, None, :] - c[None]) ** 2).sum(-1)
+        np.testing.assert_array_equal(np.asarray(a), d.argmin(1))
+
+
+class TestBatcherProperties:
+    @settings(max_examples=15, deadline=None)
+    @given(st.lists(st.tuples(st.integers(1, 2048), st.integers(1, 64)),
+                    min_size=1, max_size=60),
+           st.integers(1, 16))
+    def test_every_request_scheduled_once(self, lens, bs):
+        reqs = [Request(i, l, g) for i, (l, g) in enumerate(lens)]
+        plan = plan_batches(reqs, batch_size=bs)
+        seen = sorted(u for b in plan.batches for u in b)
+        assert seen == list(range(len(reqs)))
+        assert all(len(b) <= bs for b in plan.batches)
+        assert 0.0 <= plan.waste < 1.0
+
+
+class TestOptimizerProperties:
+    @settings(max_examples=15, deadline=None)
+    @given(st.floats(0.1, 100.0), st.integers(1, 5))
+    def test_clipped_norm_bounded(self, scale, dims):
+        g = {"w": jnp.full((dims, 4), scale)}
+        clipped, _ = adamw.clip_by_global_norm(g, 1.0)
+        assert float(adamw.global_norm(clipped)) <= 1.0 + 1e-5
+
+
+class TestRingBuffer:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(1, 64), st.integers(0, 500))
+    def test_ring_positions_cover_live_window(self, size, t):
+        pos = np.asarray(ring_slot_positions(size, jnp.int32(t)))
+        live = pos[(pos >= 0) & (pos < t)]
+        expect = np.arange(max(0, t - size), t)
+        np.testing.assert_array_equal(np.sort(live), expect)
+
+
+class TestGradCompressProperties:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 1000))
+    def test_fixed_codebook_assignment_idempotent(self, seed):
+        """With a FIXED codebook, dequantize→requantize is exact (nearest-
+        level assignment is idempotent).  (Refitting the codebook is NOT
+        idempotent — hypothesis found Lloyd merging near levels, which is
+        why error feedback exists.)"""
+        rng = np.random.default_rng(seed)
+        g = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
+        cfg = grad_compress.CompressConfig(k=8, iters=6)
+        idx1, cents = grad_compress.quantize_tensor(g, cfg)
+        g1 = grad_compress.dequantize_tensor(idx1, cents)
+        d = jnp.abs(g1.reshape(-1)[:, None] - cents[None, :])
+        idx2 = jnp.argmin(d, axis=1).astype(jnp.uint8).reshape(g.shape)
+        g2 = grad_compress.dequantize_tensor(idx2, cents)
+        np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2))

@@ -1,0 +1,120 @@
+"""End-to-end system behaviour tests.
+
+  * training loop: loss decreases on the synthetic corpus,
+  * fault tolerance: a mid-run crash + restart resumes from the last
+    committed checkpoint and reproduces the uninterrupted run exactly
+    (deterministic data pipeline + deterministic update),
+  * serving: request-clustered batching produces well-formed completions,
+  * paper pipeline: k-medians clustering on the paper-style table with
+    recognition-rate evaluation.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import clustering
+from repro.core.clustering import ClusterConfig
+from repro.core.request_cluster import Request
+from repro.data import pipeline
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.runtime.server import Server, ServerConfig
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+TINY = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                   n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab=64,
+                   pad_vocab_multiple=16, dtype="float32")
+
+
+def make_pieces(tmpdir, n_steps, fail_at=None, seed=7):
+    dc = pipeline.DataConfig(seed=seed, global_batch=8, seq_len=32)
+    data = pipeline.SyntheticLM(TINY, dc)
+    aw = adamw.AdamWConfig(lr=1e-2, warmup_steps=5, total_steps=n_steps,
+                           weight_decay=0.01)
+
+    def loss_fn(params, batch):
+        b = {k: jnp.asarray(v) for k, v in batch.items()}
+        return tfm.train_loss(params, TINY, b, remat=False)
+
+    @jax.jit
+    def step_fn(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, opt_state, om = adamw.update(grads, opt_state, params, aw)
+        return params, opt_state, dict(metrics, loss=loss, **om)
+
+    tcfg = TrainerConfig(n_steps=n_steps, ckpt_dir=str(tmpdir),
+                         ckpt_every=10, log_every=100, fail_at_step=fail_at)
+    return Trainer(TINY, tcfg, aw, step_fn, data)
+
+
+class TestTraining:
+    def test_loss_decreases(self, tmp_path):
+        tr = make_pieces(tmp_path / "a", 30)
+        tr.run()
+        first = np.mean(tr.losses[:5])
+        last = np.mean(tr.losses[-5:])
+        assert last < first - 0.2, (first, last)
+
+    def test_crash_resume_reproduces_uninterrupted_run(self, tmp_path):
+        # clean run
+        tr_clean = make_pieces(tmp_path / "clean", 25)
+        p_clean, _ = tr_clean.run()
+
+        # crashing run: dies at step 17 (after ckpt at 10)
+        tr_crash = make_pieces(tmp_path / "crash", 25, fail_at=17)
+        with pytest.raises(RuntimeError, match="injected failure"):
+            tr_crash.run()
+
+        # restart: resumes from step 10 and completes
+        tr_resume = make_pieces(tmp_path / "crash", 25)
+        p_resumed, _ = tr_resume.run()
+
+        for a, b in zip(jax.tree.leaves(p_clean), jax.tree.leaves(p_resumed)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=1e-5, atol=1e-5)
+
+
+class TestServing:
+    def test_serve_clustered_batches(self):
+        params = tfm.init_params(jax.random.PRNGKey(0), TINY)
+        srv = Server(TINY, ServerConfig(batch_size=2, max_seq=64), params)
+        rng = np.random.default_rng(0)
+        reqs = [Request(i, int(l), 4) for i, l in
+                enumerate([5, 6, 20, 22, 5, 21])]
+        prompts = {r.uid: rng.integers(0, 64, size=(r.prompt_len,)).astype(
+            np.int32) for r in reqs}
+        outs = srv.serve(reqs, prompts)
+        assert sorted(o.uid for o in outs) == list(range(6))
+        for o in outs:
+            assert len(o.tokens) == 4
+            assert all(0 <= t < TINY.padded_vocab for t in o.tokens)
+
+
+class TestPaperPipeline:
+    def test_kmedians_on_wine_like_table(self):
+        x, y = pipeline.wine_like(n=600, seed=0)
+        xs = (x - x.mean(0)) / (x.std(0) + 1e-6)
+        cfg = ClusterConfig(k=3, centroid="median", metric="l1", seed=1)
+        res = clustering.fit(jnp.asarray(xs), cfg)
+        rate = clustering.recognition_rate(res.assign, jnp.asarray(y), 3, 3)
+        assert float(rate) > 0.6, float(rate)
+
+    def test_median_beats_mean_with_outliers(self):
+        x, y = pipeline.census_like(n=1000, seed=2, outlier_frac=0.05)
+        xs = jnp.asarray(x)
+        med = clustering.fit(xs, ClusterConfig(k=5, centroid="median",
+                                               metric="l1", seed=3))
+        mean = clustering.fit(xs, ClusterConfig(k=5, centroid="mean",
+                                                metric="l2", seed=3))
+        r_med = float(clustering.recognition_rate(med.assign, jnp.asarray(y),
+                                                  5, 5))
+        r_mean = float(clustering.recognition_rate(mean.assign,
+                                                   jnp.asarray(y), 5, 5))
+        assert r_med >= r_mean - 0.02, (r_med, r_mean)
