@@ -16,6 +16,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
   request_batching         padding waste: clustered vs FIFO batching
   grad_compress            codebook gradient compression: wire ratio +
                            quantization error
+  serve                    end-to-end serving engine: tokens/s + padded-
+                           token waste for FIFO vs clustered batching,
+                           static vs continuous, and continuous with
+                           clustered-KV compaction (fused Pallas
+                           clustered_decode path, interpret mode on CPU)
   roofline_summary         headline numbers from the dry-run artifacts
 
 Run: ``PYTHONPATH=src python -m benchmarks.run [--quick]``
@@ -210,6 +215,56 @@ def grad_compress_bench(quick=False):
          f"wire_ratio={wire['ratio']:.1f}x;rel_err={rel:.4f}")
 
 
+def serve_bench(quick=False):
+    from repro.models import transformer as tfm
+    from repro.models.config import ModelConfig
+    from repro.runtime.server import Server, ServerConfig
+
+    SMALL = ModelConfig(name="serve-lm", family="dense", n_layers=2,
+                        d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+                        d_ff=256, vocab=256, pad_vocab_multiple=128,
+                        dtype="float32")
+    params = tfm.init_params(jax.random.PRNGKey(0), SMALL)
+    rng = np.random.default_rng(7)
+    n = 12 if quick else 32
+    lens = np.where(rng.random(n) < 0.5,
+                    rng.integers(8, 24, n), rng.integers(72, 120, n))
+    reqs = [Request(i, int(l), int(rng.integers(4, 9)))
+            for i, l in enumerate(lens)]
+    prompts = {r.uid: rng.integers(0, 256, size=(r.prompt_len,)).astype(
+        np.int32) for r in reqs}
+    ccfg = kv_compress.KVCompressConfig(n_clusters=16, iters=4,
+                                        keep_recent=32, refresh_every=16)
+    variants = [
+        ("serve_static_fifo", ServerConfig(
+            batch_size=4, max_seq=256, engine="static",
+            use_clustered_batching=False)),
+        ("serve_static_clustered", ServerConfig(
+            batch_size=4, max_seq=256, engine="static")),
+        ("serve_cont_fifo", ServerConfig(
+            batch_size=4, max_seq=256, use_clustered_batching=False)),
+        ("serve_cont_clustered", ServerConfig(batch_size=4, max_seq=256)),
+        ("serve_cont_clustered_compact", ServerConfig(
+            batch_size=4, max_seq=256, kv_compress=ccfg)),
+    ]
+    for name, scfg in variants:
+        srv = Server(SMALL, scfg, params)
+        t0 = time.perf_counter()
+        outs = srv.serve(reqs, prompts)
+        wall = time.perf_counter() - t0
+        toks = sum(len(o.tokens) for o in outs)
+        st = srv.last_stats
+        if scfg.engine == "static":
+            waste = st.get("plan_waste", 0.0)
+            derived = (f"tokens_per_s={toks / wall:.1f};"
+                       f"prompt_pad_waste={waste:.4f}")
+        else:
+            derived = (f"tokens_per_s={st['tokens_per_s']:.1f};"
+                       f"slot_waste={st['slot_waste']:.4f};"
+                       f"prefill_pad_frac={st['prefill_pad_frac']:.4f}")
+        emit(name, wall * 1e6, derived)
+
+
 def roofline_summary(quick=False):
     arts = sorted(glob.glob("artifacts/dryrun/*.json"))
     if not arts:
@@ -240,7 +295,8 @@ def roofline_summary(quick=False):
 
 BENCHES = [t1_median_throughput, t2_recognition_rate, t3_fixed_point,
            t4_optimal_k, t5_kmedians_end2end, kv_compress_bench,
-           request_batching_bench, grad_compress_bench, roofline_summary]
+           request_batching_bench, grad_compress_bench, serve_bench,
+           roofline_summary]
 
 
 def main() -> None:

@@ -65,7 +65,9 @@ def median_bits(u, *, weights=None, bits: int = 32, axis_name: Optional[str] = N
     # fori_loop carry vma types are stable under shard_map
     active = u == u
     forced = (u & jnp.uint32(0)).astype(jnp.float32)
-    med = jnp.zeros(u.shape[1:], jnp.uint32)
+    # seed med from the (already psum-merged) totals so its replication type
+    # matches the in-loop value under shard_map
+    med = (total * 0.0).astype(jnp.uint32)
 
     def body(i, carry):
         active, forced, med = carry
@@ -114,7 +116,9 @@ def grouped_median_bits(
 
     active = u == u
     forced = (u & jnp.uint32(0)).astype(jnp.float32)
-    med = jnp.zeros((k, d), jnp.uint32)
+    # seed med from the (already psum-merged) totals so its replication type
+    # matches the in-loop value under shard_map
+    med = jnp.zeros((k, d), jnp.uint32) | (total * 0.0).astype(jnp.uint32)[:, None]
 
     def body(i, carry):
         active, forced, med = carry
@@ -160,8 +164,10 @@ def median_bits64(hi, lo, *, weights=None, axis_name: Optional[str] = None):
 
     active = hi == hi
     forced = (hi & jnp.uint32(0)).astype(jnp.float32)
-    med_hi = jnp.zeros(hi.shape[1:], jnp.uint32)
-    med_lo = jnp.zeros(lo.shape[1:], jnp.uint32)
+    # seed medians from the (already psum-merged) totals so their replication
+    # type matches the in-loop value under shard_map
+    med_hi = (total * 0.0).astype(jnp.uint32)
+    med_lo = (total * 0.0).astype(jnp.uint32)
 
     def body(i, carry):
         active, forced, med_hi, med_lo = carry

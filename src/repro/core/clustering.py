@@ -98,11 +98,19 @@ def init_random(rng, x, k: int):
     return x[idx]
 
 
-def init_kmeanspp(rng, x, k: int, metric: str = "l2"):
-    """k-means++ (D^2 sampling; D^1 for L1/k-medians)."""
+def init_kmeanspp(rng, x, k: int, metric: str = "l2", weights=None):
+    """k-means++ (D^2 sampling; D^1 for L1/k-medians).  Optional point
+    ``weights`` (N,) scale the sampling probabilities — zero-weight points
+    (padding / masked slots) are never chosen as seeds."""
     n, d = x.shape
     r0, rloop = jax.random.split(rng)
-    first = x[jax.random.randint(r0, (), 0, n)]
+    if weights is None:
+        first = x[jax.random.randint(r0, (), 0, n)]
+    else:
+        wsum = weights.sum()
+        probs0 = jnp.where(wsum > 0, weights / jnp.maximum(wsum, 1e-30),
+                           jnp.full((n,), 1.0 / n))
+        first = x[jax.random.choice(r0, n, p=probs0)]
     cents = jnp.zeros((k, d), x.dtype).at[0].set(first)
     mind = pairwise_dist(x, first[None, :], metric)[:, 0]
 
@@ -110,7 +118,11 @@ def init_kmeanspp(rng, x, k: int, metric: str = "l2"):
         cents, mind, key = carry
         key, sub = jax.random.split(key)
         w = mind if metric == "l2" else jnp.maximum(mind, 0.0)
-        probs = w / jnp.maximum(w.sum(), 1e-30)
+        if weights is not None:
+            w = w * weights
+        wsum = w.sum()
+        probs = jnp.where(wsum > 0, w / jnp.maximum(wsum, 1e-30),
+                          jnp.full((n,), 1.0 / n))
         idx = jax.random.choice(sub, n, p=probs)
         c = x[idx]
         cents = cents.at[i].set(c)
@@ -135,9 +147,10 @@ def update_mean(x, assign, k: int, prev):
 
 
 def update_median(x, assign, k: int, prev, *, bits: int = 32, scale=None,
-                  axis_name: Optional[str] = None):
+                  weights=None, axis_name: Optional[str] = None):
     med, counts = bitserial.grouped_median(
-        x, assign, k, bits=bits, scale=scale, axis_name=axis_name
+        x, assign, k, bits=bits, scale=scale, weights=weights,
+        axis_name=axis_name
     )
     return jnp.where(counts[:, None] > 0, med, prev), counts
 
@@ -156,11 +169,13 @@ class ClusterResult(NamedTuple):
 
 
 def _one_iter(cfg: ClusterConfig, x, cents, scale, axis_name=None,
-              use_kernel=True):
+              use_kernel=True, weights=None):
     assign, mind = assign_points(x, cents, cfg.metric, cfg.assign_chunk,
                                  use_kernel=use_kernel)
     if cfg.centroid == "mean":
         onehot = jax.nn.one_hot(assign, cfg.k, dtype=jnp.float32)
+        if weights is not None:
+            onehot = onehot * weights[:, None]
         sums = onehot.T @ x
         counts = onehot.sum(axis=0)
         if axis_name is not None:
@@ -170,16 +185,22 @@ def _one_iter(cfg: ClusterConfig, x, cents, scale, axis_name=None,
         new = jnp.where(counts[:, None] > 0, new, cents)
     else:
         new, counts = update_median(x, assign, cfg.k, cents, bits=cfg.bits,
-                                    scale=scale, axis_name=axis_name)
-    inertia = mind.sum()
+                                    scale=scale, weights=weights,
+                                    axis_name=axis_name)
+    inertia = mind.sum() if weights is None else (mind * weights).sum()
     if axis_name is not None:
         inertia = jax.lax.psum(inertia, axis_name)
     return new, assign, counts, inertia
 
 
 def fit(x, cfg: ClusterConfig, init_centroids=None, *, use_kernel: bool = True,
-        axis_name: Optional[str] = None) -> ClusterResult:
+        weights=None, axis_name: Optional[str] = None) -> ClusterResult:
     """Full-batch Lloyd iterations until convergence (jit-compatible).
+
+    Optional ``weights`` (N,) ≥ 0 make this a weighted clustering: padded /
+    masked points get weight 0 and never influence centroids, counts, or
+    inertia; integer weights > 1 treat a point as a pre-aggregated summary
+    of that many originals (streaming re-clustering of cluster summaries).
 
     Under shard_map, pass ``axis_name`` and per-device shards of x; init
     centroids must then be provided (replicated) by the caller.
@@ -189,12 +210,14 @@ def fit(x, cfg: ClusterConfig, init_centroids=None, *, use_kernel: bool = True,
         if axis_name is not None:
             raise ValueError("distributed fit requires init_centroids")
         init_centroids = (
-            init_kmeanspp(rng, x, cfg.k, cfg.metric)
+            init_kmeanspp(rng, x, cfg.k, cfg.metric, weights=weights)
             if cfg.init == "kmeanspp"
             else init_random(rng, x, cfg.k)
         )
-    # one shared fixed-point scale for the whole run (paper: single 2^f)
-    scale = quantizer.auto_scale(x, cfg.bits)
+    # one shared fixed-point scale for the whole run (paper: single 2^f);
+    # zero-weight (masked) points must not widen the scale
+    x_scale = x if weights is None else x * (weights > 0)[:, None].astype(x.dtype)
+    scale = quantizer.auto_scale(x_scale, cfg.bits)
     if axis_name is not None:
         # global per-feature scale: max over shards
         scale = jax.lax.pmin(scale, axis_name)  # min scale = max |x| wins
@@ -206,24 +229,50 @@ def fit(x, cfg: ClusterConfig, init_centroids=None, *, use_kernel: bool = True,
     def body(state):
         cents, _, it, _, _, _ = state
         new, assign, counts, inertia = _one_iter(
-            cfg, x, cents, scale, axis_name=axis_name, use_kernel=use_kernel
+            cfg, x, cents, scale, axis_name=axis_name, use_kernel=use_kernel,
+            weights=weights
         )
         moved = jnp.max(jnp.abs(new - cents))
         return new, assign, it + 1, moved, counts, inertia
 
-    n = x.shape[0]
     # assign is per-shard (device-varying under shard_map): derive the
-    # initial value from x so the while_loop carry types are stable
+    # initial value from x so the loop carry types are stable
     assign0 = (x[:, 0] * 0).astype(jnp.int32)
-    state0 = (
-        init_centroids,
-        assign0,
-        jnp.int32(0),
-        jnp.float32(jnp.inf),
-        jnp.zeros((cfg.k,), jnp.float32),
-        jnp.float32(0.0),
-    )
-    cents, assign, it, _, counts, inertia = jax.lax.while_loop(cond, body, state0)
+    if axis_name is None:
+        state0 = (
+            init_centroids,
+            assign0,
+            jnp.int32(0),
+            jnp.float32(jnp.inf),
+            jnp.zeros((cfg.k,), jnp.float32),
+            jnp.float32(0.0),
+        )
+        cents, assign, it, _, counts, inertia = jax.lax.while_loop(
+            cond, body, state0)
+    else:
+        # while_loop has no shard_map replication rule: run a fixed-trip
+        # fori_loop and freeze the state once converged — same fixpoint as
+        # the early-exit loop, and scan-lowered so the per-bit psum carries
+        # keep consistent replication types.
+        rzero = jax.lax.psum(jnp.zeros((), jnp.float32), axis_name)
+
+        def fori_body(_, state):
+            converged = ~cond(state)
+            new_state = body(state)
+            return jax.tree_util.tree_map(
+                lambda old, new: jnp.where(converged, old, new),
+                state, new_state)
+
+        state0 = (
+            init_centroids,
+            assign0,
+            rzero.astype(jnp.int32),
+            jnp.float32(jnp.inf) + rzero,
+            jnp.zeros((cfg.k,), jnp.float32) + rzero,
+            rzero,
+        )
+        cents, assign, it, _, counts, inertia = jax.lax.fori_loop(
+            0, cfg.max_iters, fori_body, state0)
     return ClusterResult(cents, assign, inertia, it, counts)
 
 

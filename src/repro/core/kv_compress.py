@@ -32,6 +32,17 @@ class KVCompressConfig:
     metric: str = "l2"        # assignment metric for keys
     bits: int = 16            # fixed-point width for median centroids
     keep_recent: int = 128    # exact tail (recency window kept uncompressed)
+    refresh_every: int = 0    # serving: decode steps between compactions
+                              # (0 = one-shot compaction, full exact tail);
+                              # effectively clamped to keep_recent.  The
+                              # centroid coverage frontier advances to
+                              # t - keep_recent + refresh_every so every ring
+                              # entry is folded into centroids before the
+                              # next refresh_every decode steps evict it.
+
+    @property
+    def refresh(self) -> int:
+        return min(self.refresh_every, self.keep_recent)
 
 
 class CompressedKV(NamedTuple):
@@ -42,13 +53,21 @@ class CompressedKV(NamedTuple):
     v_tail: jnp.ndarray       # (H, R, Dh)
 
 
-def compress_head(keys, values, cfg: KVCompressConfig, seed: int = 0):
-    """keys/values (S, Dh) → centroids for one head."""
+def compress_head(keys, values, cfg: KVCompressConfig, seed: int = 0,
+                  weights=None, init_centroids=None):
+    """keys/values (S, Dh) → centroids for one head.
+
+    ``weights`` (S,) ≥ 0 mask padded positions (weight 0) or carry counts of
+    pre-aggregated summaries; ``init_centroids`` warm-starts Lloyd for
+    incremental re-compaction between decode bursts."""
     ccfg = ClusterConfig(k=cfg.n_clusters, metric=cfg.metric,
                          centroid="median", max_iters=cfg.iters,
                          bits=cfg.bits, init="kmeanspp", seed=seed)
-    res = clustering.fit(keys.astype(jnp.float32), ccfg, use_kernel=False)
+    res = clustering.fit(keys.astype(jnp.float32), ccfg, init_centroids,
+                         use_kernel=False, weights=weights)
     onehot = jax.nn.one_hot(res.assign, cfg.n_clusters, dtype=jnp.float32)
+    if weights is not None:
+        onehot = onehot * weights.astype(jnp.float32)[:, None]
     vsum = onehot.T @ values.astype(jnp.float32)
     counts = onehot.sum(0)
     v_cents = vsum / jnp.maximum(counts, 1.0)[:, None]
@@ -75,6 +94,127 @@ def compress_cache(k_cache, v_cache, cfg: KVCompressConfig):
 @partial(jax.jit, static_argnames=("cfg",))
 def compress_head_jit(keys, values, cfg: KVCompressConfig):
     return compress_head(keys, values, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Batched, device-resident compaction (serving path)
+#
+# Cache-layout leaves: k/v_cents (B, C, H, Dh), counts (B, C, H),
+# k/v_tail (B, R, H, Dh) in ring order (position p at slot p % R), and
+# cov (B,) int32 — centroids summarize positions [0, cov); the tail is
+# exact for [cov, t).  Masking the tail at pos >= cov removes the seed's
+# double-count/data-loss ambiguity at the ring-eviction boundary: every
+# position is represented exactly once, and a position is only ever
+# evicted from the ring after a compaction has folded it into centroids
+# (guaranteed by refresh_every <= keep_recent).
+# ---------------------------------------------------------------------------
+
+
+def ring_positions(r: int, t):
+    """Absolute position held by each of the r ring slots at time t
+    (next write goes to slot t % r).  t scalar or (B,) → (..., r).
+    Canonical ring math — models/attention.ring_slot_positions delegates
+    here so compaction coverage and the attention mask can't drift."""
+    s = jnp.arange(r)
+    tb = jnp.asarray(t)[..., None]
+    wrapped = tb - r + jnp.mod(s - tb, r)
+    return jnp.where(tb <= r, jnp.broadcast_to(s, wrapped.shape), wrapped)
+
+
+def _tail_ring_slice(kb, vb, lb, r: int):
+    """Last r positions of one slot's chronological cache, laid out in ring
+    order.  kb/vb (S, H, Dh), lb scalar valid length."""
+    start = jnp.maximum(lb - r, 0)
+    tk = jax.lax.dynamic_slice_in_dim(kb, start, r, 0)   # chrono (r, H, Dh)
+    tv = jax.lax.dynamic_slice_in_dim(vb, start, r, 0)
+    slots = jnp.mod(start + jnp.arange(r), r)
+    return (jnp.zeros_like(tk).at[slots].set(tk),
+            jnp.zeros_like(tv).at[slots].set(tv))
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def compress_cache_batched(k, v, lengths, cfg: KVCompressConfig):
+    """Exact slot caches → clustered layout, one jitted call.
+
+    k/v (B, S, H, Dh) chronological slot buffers, lengths (B,) valid
+    counts.  vmap over batch ⊕ head — no Python loops, one trace.  Padded
+    positions are excluded via point weights, so ragged slots batch
+    cleanly (the MapReduce-style "cluster many independent streams at
+    once" regime)."""
+    b, s, h, dh = k.shape
+    r = min(cfg.keep_recent, s)
+    cov = jnp.clip(lengths - r + cfg.refresh, 0, lengths)
+    pos = jnp.arange(s)
+    w = (pos[None, :] < cov[:, None]).astype(jnp.float32)      # (B, S)
+
+    kT = k.transpose(0, 2, 1, 3).astype(jnp.float32)           # (B, H, S, Dh)
+    vT = v.transpose(0, 2, 1, 3).astype(jnp.float32)
+
+    def one_slot(kb, vb, wb):
+        return jax.vmap(
+            lambda kk, vv: compress_head(kk, vv, cfg, weights=wb))(kb, vb)
+
+    k_cents, v_cents, counts = jax.vmap(one_slot)(kT, vT, w)
+    k_tail, v_tail = jax.vmap(
+        lambda kb, vb, lb: _tail_ring_slice(kb, vb, lb, r))(k, v, lengths)
+    return {
+        "k_cents": k_cents.transpose(0, 2, 1, 3).astype(k.dtype),
+        "v_cents": v_cents.transpose(0, 2, 1, 3).astype(v.dtype),
+        "counts": counts.transpose(0, 2, 1),                   # (B, C, H)
+        "k_tail": k_tail.astype(k.dtype),
+        "v_tail": v_tail.astype(v.dtype),
+        "cov": cov.astype(jnp.int32),
+    }
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def recompact_clustered(cache, lengths, cfg: KVCompressConfig):
+    """Incremental re-compaction of an already-clustered cache.
+
+    The points to recluster are the old centroids (weighted by their
+    counts — each is a pre-aggregated summary) plus the ring entries that
+    have aged past the new coverage frontier.  Warm-started from the old
+    centroids, so between decode bursts Lloyd only has to absorb the ≤
+    refresh_every new keys — the streaming-clustering update."""
+    k_cents = cache["k_cents"].astype(jnp.float32)     # (B, C, H, Dh)
+    v_cents = cache["v_cents"].astype(jnp.float32)
+    counts = cache["counts"]                           # (B, C, H)
+    k_tail = cache["k_tail"].astype(jnp.float32)       # (B, R, H, Dh)
+    v_tail = cache["v_tail"].astype(jnp.float32)
+    cov = cache["cov"]                                 # (B,)
+    b, c, h, dh = k_cents.shape
+    r = k_tail.shape[1]
+    lengths = jnp.asarray(lengths)
+    # frontier is monotone even for drained slots (engine passes length 0
+    # for finished slots; their cov must not regress and re-admit tail
+    # entries already folded into centroids)
+    new_cov = jnp.maximum(cov, jnp.clip(lengths - r + cfg.refresh,
+                                        0, lengths))
+
+    ring_pos = ring_positions(r, lengths)              # (B, R)
+    w_tail = ((ring_pos >= cov[:, None])
+              & (ring_pos < new_cov[:, None])).astype(jnp.float32)
+
+    def one_head(kc, vc, cnt, kt, vt, wt):
+        x = jnp.concatenate([kc, kt], axis=0)          # (C + R, Dh)
+        vals = jnp.concatenate([vc, vt], axis=0)
+        wgt = jnp.concatenate([cnt, wt], axis=0)
+        return compress_head(x, vals, cfg, weights=wgt, init_centroids=kc)
+
+    def one_slot(kc, vc, cnt, kt, vt, wt):
+        return jax.vmap(lambda *a: one_head(*a, wt))(
+            kc.transpose(1, 0, 2), vc.transpose(1, 0, 2), cnt.T,
+            kt.transpose(1, 0, 2), vt.transpose(1, 0, 2))
+
+    nk, nv, ncnt = jax.vmap(one_slot)(k_cents, v_cents, counts,
+                                      k_tail, v_tail, w_tail)
+    return dict(
+        cache,
+        k_cents=nk.transpose(0, 2, 1, 3).astype(cache["k_cents"].dtype),
+        v_cents=nv.transpose(0, 2, 1, 3).astype(cache["v_cents"].dtype),
+        counts=ncnt.transpose(0, 2, 1),
+        cov=new_cov.astype(jnp.int32),
+    )
 
 
 def clustered_attention(q, ckv: CompressedKV, *, scale: float):

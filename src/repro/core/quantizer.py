@@ -53,9 +53,10 @@ def auto_scale(x, bits: int = 32, margin_bits: int = 2):
     """
     absmax = jnp.max(jnp.abs(x), axis=0)
     absmax = jnp.maximum(absmax, 1e-30)
-    # largest f with absmax * 2^f <= 2^(bits-1-margin)
+    # largest f with absmax * 2^f <= 2^(bits-1-margin); cap so the scale
+    # stays finite in float32 even for all-zero (fully masked) features
     f = jnp.floor((bits - 1 - margin_bits) - jnp.log2(absmax))
-    return jnp.exp2(f)
+    return jnp.exp2(jnp.minimum(f, 126.0))
 
 
 def quantize(x, spec: FixedPointSpec):

@@ -48,9 +48,10 @@ def plan_batches(reqs: Sequence[Request], batch_size: int,
     if not reqs:
         return BatchPlan([], 0.0)
     x = features(reqs)
-    if len(reqs) < 4 * batch_size:
-        # tiny queue: a global length sort is optimal; clustering pays off
-        # on large queues where the 2-D (len, gen) structure matters
+    if len(reqs) < max(4 * batch_size, n_clusters * batch_size):
+        # small queue (clusters could not each fill a batch on average):
+        # a global length sort is optimal; clustering pays off on large
+        # queues where the 2-D (len, gen) structure matters
         order = np.argsort(x[:, 0], kind="stable").tolist()
         batches = [order[i:i + batch_size]
                    for i in range(0, len(order), batch_size)]
@@ -62,17 +63,29 @@ def plan_batches(reqs: Sequence[Request], batch_size: int,
     res = clustering.fit(jnp.asarray(x), cfg, use_kernel=False)
     assign = np.asarray(res.assign)
 
-    # order clusters by median prompt length; inside a cluster sort by length
-    order = []
+    # inside a cluster sort by length; order clusters by median prompt length
+    # so any spill between adjacent clusters pairs similar lengths
+    clusters = []
     for c in range(k):
         idx = np.where(assign == c)[0]
         if len(idx) == 0:
             continue
-        idx = idx[np.argsort(x[idx, 0], kind="stable")]
-        order.extend(idx.tolist())
+        clusters.append(idx[np.argsort(x[idx, 0], kind="stable")])
+    clusters.sort(key=lambda idx: float(np.median(x[idx, 0])))
 
-    batches = [order[i:i + batch_size]
-               for i in range(0, len(order), batch_size)]
+    # fill full batches strictly within each cluster; cluster remainders are
+    # merged across clusters in length order, so a mixed batch only ever
+    # combines adjacent-length leftovers instead of straddling modes
+    batches: List[List[int]] = []
+    leftover: List[int] = []
+    for idx in clusters:
+        n_full = (len(idx) // batch_size) * batch_size
+        batches.extend(idx[i:i + batch_size].tolist()
+                       for i in range(0, n_full, batch_size))
+        leftover.extend(idx[n_full:].tolist())
+    leftover.sort(key=lambda i: (x[i, 0], i))
+    batches.extend(leftover[i:i + batch_size]
+                   for i in range(0, len(leftover), batch_size))
     waste = padding_waste([[reqs[i] for i in b] for b in batches])
     return BatchPlan([[reqs[i].uid for i in b] for b in batches], waste)
 

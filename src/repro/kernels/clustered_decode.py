@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: fused clustered-KV decode attention.
+
+One-token attention over [median centroids ⊕ exact tail ring] — the
+clustered-attention estimator of the paper's memory manager — in a single
+VMEM-resident pass per (batch, kv-head) grid instance:
+
+  * centroid logits get the +log(count) bias (a centroid standing for m
+    keys receives the softmax mass of m identical-score keys); empty
+    clusters (count == 0) are masked,
+  * tail logits are masked by ring validity (position in [cov, t]; the
+    positions below ``cov`` are already summarized by centroids, so the
+    partition is exact — nothing double-counted, nothing lost),
+  * one joint softmax over the concatenated score row and two MXU
+    combines against v_cents / v_tail.
+
+Per-slot ``t`` / ``cov`` vectors come in through SMEM, so a continuous
+batcher with slots at different depths runs in the same launch.
+
+Layout (grid = (B, Hkv)):
+  t, cov   (1,)  SMEM  — this slot's valid length / centroid coverage
+  q        (1, 1, G, Dh)   VMEM  — this kv-head's query group
+  k_cents  (1, C, 1, Dh)   VMEM     v_cents same
+  counts   (1, 1, C)       VMEM  — pre-transposed (B, Hkv, C)
+  k_tail   (1, R, 1, Dh)   VMEM     v_tail same (ring order)
+  out      (1, 1, G, Dh)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(t_ref, cov_ref, q_ref, kc_ref, vc_ref, cnt_ref, kt_ref, vt_ref,
+            o_ref, *, r: int, scale: float, softcap):
+    t = t_ref[0]
+    cov = cov_ref[0]
+    q = q_ref[0, 0].astype(jnp.float32)                  # (G, Dh)
+    kc = kc_ref[0, :, 0].astype(jnp.float32)             # (C, Dh)
+    vc = vc_ref[0, :, 0].astype(jnp.float32)
+    cnt = cnt_ref[0, 0].astype(jnp.float32)              # (C,)
+    kt = kt_ref[0, :, 0].astype(jnp.float32)             # (R, Dh)
+    vt = vt_ref[0, :, 0].astype(jnp.float32)
+
+    s_c = jax.lax.dot_general(q, kc, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s_c = jnp.tanh(s_c / softcap) * softcap
+    cnt_row = cnt[None, :]                               # (1, C)
+    s_c = jnp.where(cnt_row > 0,
+                    s_c + jnp.log(jnp.maximum(cnt_row, 1e-9)), NEG)
+
+    s_t = jax.lax.dot_general(q, kt, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s_t = jnp.tanh(s_t / softcap) * softcap
+    # ring slot s holds position s while t+1 <= R, else the wrapped window
+    sl = jax.lax.broadcasted_iota(jnp.int32, (1, r), 1)
+    tp1 = t + 1
+    wrapped = tp1 - r + jnp.mod(sl - tp1, r)
+    pos = jnp.where(tp1 <= r, sl, wrapped)
+    ok = (pos >= 0) & (pos < tp1) & (pos >= cov)
+    s_t = jnp.where(ok, s_t, NEG)
+
+    m = jnp.maximum(s_c.max(-1, keepdims=True), s_t.max(-1, keepdims=True))
+    p_c = jnp.exp(s_c - m)
+    p_t = jnp.exp(s_t - m)
+    l = p_c.sum(-1, keepdims=True) + p_t.sum(-1, keepdims=True)
+    acc = (jax.lax.dot_general(p_c, vc, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+           + jax.lax.dot_general(p_t, vt, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def clustered_decode_pallas(q, k_cents, v_cents, counts, k_tail, v_tail,
+                            t, cov, *, scale: float, softcap=None,
+                            interpret: bool = False):
+    """q (B, Hq, Dh); k/v_cents (B, C, Hkv, Dh); counts (B, C, Hkv);
+    k/v_tail (B, R, Hkv, Dh) ring-ordered; t, cov (B,) int32
+    → (B, Hq, Dh)."""
+    b, hq, dh = q.shape
+    c = k_cents.shape[1]
+    r = k_tail.shape[1]
+    hkv = k_cents.shape[2]
+    g = hq // hkv
+    qh = q.reshape(b, hkv, g, dh)
+    cnt_t = counts.transpose(0, 2, 1)                    # (B, Hkv, C)
+    t = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (b,))
+    cov = jnp.broadcast_to(jnp.asarray(cov, jnp.int32), (b,))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, r=r, scale=scale, softcap=softcap),
+        grid=(b, hkv),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, h: (i,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1,), lambda i, h: (i,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, dh), lambda i, h: (i, h, 0, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, c, 1, dh), lambda i, h: (i, 0, h, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, c, 1, dh), lambda i, h: (i, 0, h, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, 1, c), lambda i, h: (i, h, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, r, 1, dh), lambda i, h: (i, 0, h, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, r, 1, dh), lambda i, h: (i, 0, h, 0),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh), lambda i, h: (i, h, 0, 0),
+                               memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), q.dtype),
+        interpret=interpret,
+    )(t, cov, qh, k_cents, v_cents, cnt_t, k_tail, v_tail)
+    return out.reshape(b, hq, dh)

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.core import bitserial
 from repro.kernels import bitserial_median as _bsm
+from repro.kernels import clustered_decode as _cd
 from repro.kernels import distance_argmin as _da
 
 # points that fit the VMEM-resident kernel comfortably (u + active + forced
@@ -61,3 +62,18 @@ def distance_argmin(x, cents, *, metric: str = "l2", n_block: int = 1024,
     nb = min(n_block, max(8, x.shape[0]))
     return _da.distance_argmin_pallas(x, cents, metric=metric, n_block=nb,
                                       interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("scale", "softcap", "interpret"))
+def clustered_decode(q, k_cents, v_cents, counts, k_tail, v_tail, t, cov, *,
+                     scale: float, softcap: float | None = None,
+                     interpret: bool | None = None):
+    """Fused clustered-KV decode attention (centroids ⊕ tail ring).
+
+    q (B, Hq, Dh); k/v_cents (B, C, Hkv, Dh); counts (B, C, Hkv);
+    k/v_tail (B, R, Hkv, Dh); t, cov scalar or (B,) → (B, Hq, Dh)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _cd.clustered_decode_pallas(
+        q, k_cents, v_cents, counts, k_tail, v_tail, t, cov,
+        scale=scale, softcap=softcap, interpret=interpret)

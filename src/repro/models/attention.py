@@ -98,11 +98,12 @@ def ring_slot_positions(cache_size: int, t):
     """Absolute position stored in each ring slot at time t (next write = t).
 
     For t <= cache_size slot s holds position s (s < t valid); afterwards the
-    live window is [t - W, t) with slot(p) = p % W.
+    live window is [t - W, t) with slot(p) = p % W.  ``t`` may be a scalar
+    (→ (W,)) or a per-slot (B,) vector (→ (B, W)) for continuous batching.
+    Delegates to the canonical ring math in core.kv_compress.
     """
-    s = jnp.arange(cache_size)
-    wrapped = t - cache_size + jnp.mod(s - t, cache_size)
-    return jnp.where(t <= cache_size, s, wrapped)
+    from repro.core.kv_compress import ring_positions
+    return ring_positions(cache_size, t)
 
 
 def decode_attention(q, k_cache, v_cache, *, t, scale: float,
@@ -113,8 +114,9 @@ def decode_attention(q, k_cache, v_cache, *, t, scale: float,
 
     q (B, Hq, Dh), k_cache (B, Sc, Hkv, Dh), v_cache (B, Sc, Hkv, Dv).
     ``t`` = current absolute position (the query's position; cache entries
-    with position < t participate).  Under pjit the Sc axis may be sharded
-    (sequence-parallel long-context decode).
+    with position < t participate); scalar or per-slot (B,) for continuous
+    batching.  Under pjit the Sc axis may be sharded (sequence-parallel
+    long-context decode).
     """
     b, hq, dh = q.shape
     _, sc, hkv, _ = k_cache.shape
@@ -124,13 +126,15 @@ def decode_attention(q, k_cache, v_cache, *, t, scale: float,
     s = jnp.einsum("bhgd,bshd->bhgs", qh,
                    k_cache.astype(jnp.float32)) * scale
     s = _softcap(s, softcap)
-    pos = ring_slot_positions(sc, t) if ring else jnp.arange(sc)
-    ok = (pos >= 0) & (pos < t)
+    tb = jnp.broadcast_to(jnp.asarray(t), (b,))[:, None]         # (B, 1)
+    pos = ring_slot_positions(sc, tb[:, 0]) if ring else jnp.arange(sc)
+    pos = jnp.broadcast_to(pos, (b, sc))
+    ok = (pos >= 0) & (pos < tb)
     if window is not None:
         # query position is t-1; training mask is qpos - kpos < window,
         # i.e. kpos >= (t-1) - window + 1 = t - window
-        ok = ok & (pos >= t - window)
-    s = jnp.where(ok[None, None, None, :], s, NEG)
+        ok = ok & (pos >= tb - window)
+    s = jnp.where(ok[:, None, None, :], s, NEG)
     m = s.max(-1, keepdims=True)
     p = jnp.exp(s - m)
     l = p.sum(-1, keepdims=True)
@@ -229,8 +233,11 @@ def _cache_read(cache, cfg):
     return k, v
 
 
-def _cache_write(cache, k_new, v_new, idx):
-    """Quantize-on-write for int8 caches (static per-head scale)."""
+def _cache_write(cache, k_new, v_new, slot):
+    """Quantize-on-write for int8 caches (static per-head scale).
+
+    k/v_new (B, 1, Hkv, Dh); ``slot`` (B,) per-slot write position (a
+    scatter, so continuous-batching slots at different depths coexist)."""
     if "k_scale" in cache:
         ks = cache["k_scale"][None, None, :, None]
         vs = cache["v_scale"][None, None, :, None]
@@ -238,10 +245,10 @@ def _cache_write(cache, k_new, v_new, idx):
                          -127, 127).astype(jnp.int8)
         v_new = jnp.clip(jnp.round(v_new.astype(jnp.float32) / vs),
                          -127, 127).astype(jnp.int8)
-    kc = jax.lax.dynamic_update_slice(
-        cache["k"], k_new.astype(cache["k"].dtype), idx)
-    vc = jax.lax.dynamic_update_slice(
-        cache["v"], v_new.astype(cache["v"].dtype), idx)
+    b = k_new.shape[0]
+    rows = jnp.arange(b)
+    kc = cache["k"].at[rows, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+    vc = cache["v"].at[rows, slot].set(v_new[:, 0].astype(cache["v"].dtype))
     return kc, vc
 
 
@@ -291,54 +298,78 @@ def init_cache_attn_clustered(cfg: ModelConfig, batch: int, *,
         "counts": jnp.zeros((batch, n_clusters, hkv), jnp.float32),
         "k_tail": jnp.zeros((batch, tail, hkv, dh), dt),
         "v_tail": jnp.zeros((batch, tail, hkv, dh), dt),
+        # centroids summarize positions [0, cov); tail is exact for
+        # [cov, t) — the partition makes compaction loss-free at the
+        # ring-eviction boundary
+        "cov": jnp.zeros((batch,), jnp.int32),
     }
 
 
+USE_CLUSTERED_KERNEL = True  # Pallas fused path (interpret mode off-TPU)
+
+
 def attn_decode_clustered(p, x, cfg: ModelConfig, *, cache, t,
-                          kv_repeat: int = 1):
+                          kv_repeat: int = 1, use_kernel: bool = None):
     """One-token attention over [median centroids ⊕ exact tail ring].
 
     Centroid c with m keys gets a +log(m) logit bias (clustered-attention
     estimator).  The new key/value is written into the tail ring at
-    t % tail; centroid refresh happens outside the step (runtime)."""
-    positions = jnp.full((1,), t, jnp.int32)
-    q, k, v = _qkv(p, x, cfg, positions, "G", kv_repeat)
+    t % tail; centroid refresh happens outside the step (runtime).  ``t``
+    may be scalar or per-slot (B,).  Tail entries at positions < cov are
+    already summarized by centroids and masked out (no double counting).
+    Dispatches to the fused Pallas ``clustered_decode`` kernel."""
     b = x.shape[0]
+    tb = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (b,))
+    positions = tb[:, None]
+    q, k, v = _qkv(p, x, cfg, positions, "G", kv_repeat)
     tail = cache["k_tail"].shape[1]
-    slot = jnp.mod(t, tail)
-    k_tail = jax.lax.dynamic_update_slice(
-        cache["k_tail"], k.astype(cache["k_tail"].dtype), (0, slot, 0, 0))
-    v_tail = jax.lax.dynamic_update_slice(
-        cache["v_tail"], v.astype(cache["v_tail"].dtype), (0, slot, 0, 0))
+    slot = jnp.mod(tb, tail)
+    rows = jnp.arange(b)
+    k_tail = cache["k_tail"].at[rows, slot].set(
+        k[:, 0].astype(cache["k_tail"].dtype))
+    v_tail = cache["v_tail"].at[rows, slot].set(
+        v[:, 0].astype(cache["v_tail"].dtype))
+    cov = jnp.broadcast_to(jnp.asarray(cache.get("cov", 0), jnp.int32), (b,))
 
     hq = cfg.n_heads
     hkv = cache["k_tail"].shape[2]
     g = hq // hkv
-    qh = q[:, 0].astype(jnp.float32).reshape(b, hkv, g, -1)
     scale = _scale(cfg)
+    if use_kernel is None:
+        use_kernel = USE_CLUSTERED_KERNEL
 
-    s_c = jnp.einsum("bhgd,bchd->bhgc", qh,
-                     cache["k_cents"].astype(jnp.float32)) * scale
-    s_c = _softcap(s_c, cfg.attn_logit_softcap)
-    cnt = cache["counts"].transpose(0, 2, 1)[:, :, None, :]  # (B,Hkv,1,C)
-    s_c = jnp.where(cnt > 0, s_c + jnp.log(jnp.maximum(cnt, 1e-9)), NEG)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        out = kops.clustered_decode(
+            q[:, 0], cache["k_cents"], cache["v_cents"], cache["counts"],
+            k_tail, v_tail, tb, cov, scale=scale,
+            softcap=cfg.attn_logit_softcap)
+        out = out.reshape(b, hkv, g, cfg.head_dim)
+    else:
+        qh = q[:, 0].astype(jnp.float32).reshape(b, hkv, g, -1)
+        s_c = jnp.einsum("bhgd,bchd->bhgc", qh,
+                         cache["k_cents"].astype(jnp.float32)) * scale
+        s_c = _softcap(s_c, cfg.attn_logit_softcap)
+        cnt = cache["counts"].transpose(0, 2, 1)[:, :, None, :]  # (B,Hkv,1,C)
+        s_c = jnp.where(cnt > 0, s_c + jnp.log(jnp.maximum(cnt, 1e-9)), NEG)
 
-    s_t = jnp.einsum("bhgd,bshd->bhgs", qh,
-                     k_tail.astype(jnp.float32)) * scale
-    s_t = _softcap(s_t, cfg.attn_logit_softcap)
-    pos = ring_slot_positions(tail, t + 1)
-    ok = (pos >= 0) & (pos < t + 1)
-    s_t = jnp.where(ok[None, None, None, :], s_t, NEG)
+        s_t = jnp.einsum("bhgd,bshd->bhgs", qh,
+                         k_tail.astype(jnp.float32)) * scale
+        s_t = _softcap(s_t, cfg.attn_logit_softcap)
+        pos = ring_slot_positions(tail, tb + 1)                  # (B, R)
+        ok = ((pos >= 0) & (pos < (tb + 1)[:, None])
+              & (pos >= cov[:, None]))
+        s_t = jnp.where(ok[:, None, None, :], s_t, NEG)
 
-    s = jnp.concatenate([s_c, s_t], axis=-1)
-    m = s.max(-1, keepdims=True)
-    pw = jnp.exp(s - m)
-    pw = pw / jnp.maximum(pw.sum(-1, keepdims=True), 1e-30)
-    nc = cache["k_cents"].shape[1]
-    out = (jnp.einsum("bhgc,bchd->bhgd", pw[..., :nc],
-                      cache["v_cents"].astype(jnp.float32))
-           + jnp.einsum("bhgs,bshd->bhgd", pw[..., nc:],
-                        v_tail.astype(jnp.float32)))
+        s = jnp.concatenate([s_c, s_t], axis=-1)
+        m = s.max(-1, keepdims=True)
+        pw = jnp.exp(s - m)
+        pw = pw / jnp.maximum(pw.sum(-1, keepdims=True), 1e-30)
+        nc = cache["k_cents"].shape[1]
+        out = (jnp.einsum("bhgc,bchd->bhgd", pw[..., :nc],
+                          cache["v_cents"].astype(jnp.float32))
+               + jnp.einsum("bhgs,bshd->bhgd", pw[..., nc:],
+                            v_tail.astype(jnp.float32)))
     y = out.reshape(b, 1, hq * cfg.head_dim).astype(x.dtype) @ \
         p["wo"].astype(cdtype(cfg))
     new_cache = dict(cache, k_tail=k_tail, v_tail=v_tail)
@@ -347,19 +378,22 @@ def attn_decode_clustered(p, x, cfg: ModelConfig, *, cache, t,
 
 def attn_decode(p, x, cfg: ModelConfig, *, layer_kind: str, cache, t,
                 kv_repeat: int = 1):
-    """x (B, 1, d); cache {'k','v'} (B, Sc, Hkv, Dh); t scalar int32."""
+    """x (B, 1, d); cache {'k','v'} (B, Sc, Hkv, Dh); t scalar int32 or a
+    per-slot (B,) vector (continuous batching)."""
     if "k_cents" in cache:
         return attn_decode_clustered(p, x, cfg, cache=cache, t=t,
                                      kv_repeat=kv_repeat)
-    positions = jnp.full((1,), t, jnp.int32)
+    b = x.shape[0]
+    tb = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (b,))
+    positions = tb[:, None]                               # (B, 1)
     q, k, v = _qkv(p, x, cfg, positions, layer_kind, kv_repeat)
     window = cfg.sliding_window if layer_kind == "L" else None
     sc = cache["k"].shape[1]
-    slot = jnp.mod(t, sc) if window else t
-    kc, vc = _cache_write(cache, k, v, (0, slot, 0, 0))
+    slot = jnp.mod(tb, sc) if window else jnp.minimum(tb, sc - 1)
+    kc, vc = _cache_write(cache, k, v, slot)
     new_cache = dict(cache, k=kc, v=vc)
     k_read, v_read = _cache_read(new_cache, cfg)
-    out = decode_attention(q[:, 0], k_read, v_read, t=t + 1,
+    out = decode_attention(q[:, 0], k_read, v_read, t=tb + 1,
                            scale=_scale(cfg),
                            window=window, softcap=cfg.attn_logit_softcap,
                            ring=window is not None)
@@ -495,13 +529,15 @@ def mla_decode(p, x, cfg: ModelConfig, *, cache, t):
     dt = cdtype(cfg)
     b = x.shape[0]
     h = cfg.n_heads
-    positions = jnp.full((1,), t, jnp.int32)
+    tb = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (b,))
+    positions = tb[:, None]
     q_nope, q_rope = _mla_q(p, x, cfg, positions)        # (B,1,H,·)
     ckv_new, kpe_new = _mla_latent(p, x, cfg, positions)
-    ckv = jax.lax.dynamic_update_slice(
-        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), (0, t, 0))
-    kpe = jax.lax.dynamic_update_slice(
-        cache["kpe"], kpe_new.astype(cache["kpe"].dtype), (0, t, 0))
+    rows = jnp.arange(b)
+    ckv = cache["ckv"].at[rows, tb].set(
+        ckv_new[:, 0].astype(cache["ckv"].dtype))
+    kpe = cache["kpe"].at[rows, tb].set(
+        kpe_new[:, 0].astype(cache["kpe"].dtype))
 
     wukv = p["wukv"].astype(dt).reshape(
         m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim)
@@ -516,7 +552,7 @@ def mla_decode(p, x, cfg: ModelConfig, *, cache, t):
          + jnp.einsum("bhe,bse->bhs", q_rope[:, 0].astype(jnp.float32),
                       kpe.astype(jnp.float32))) * scale
     pos = jnp.arange(ckv.shape[1])
-    s = jnp.where((pos < t + 1)[None, None, :], s, NEG)
+    s = jnp.where((pos[None, :] < (tb + 1)[:, None])[:, None, :], s, NEG)
     pmax = s.max(-1, keepdims=True)
     w = jnp.exp(s - pmax)
     w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-30)

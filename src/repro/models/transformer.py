@@ -503,8 +503,14 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
 
 
 def prefill(params, cfg: ModelConfig, tokens, *, max_seq: int,
-            frontend_embeds=None, enc_embeds=None, kv_repeat: int = 1):
-    """Full-sequence prefill.  Returns (last_logits (B, V), cache)."""
+            frontend_embeds=None, enc_embeds=None, kv_repeat: int = 1,
+            last_pos=None):
+    """Full-sequence prefill.  Returns (last_logits (B, V), cache).
+
+    ``last_pos`` (traced scalar ok) selects which position's logits to
+    return — needed when prompts are right-padded to a bucket length (the
+    continuous batcher): the causal mask makes position last_pos exact
+    regardless of the padding behind it."""
     enc_out = None
     cross_cache = None
     if cfg.is_encdec:
@@ -552,7 +558,9 @@ def prefill(params, cfg: ModelConfig, tokens, *, max_seq: int,
         caches["cross_tail"] = [c for c in cross["tail"]]
 
     h = apply_norm(params["final_norm"], h, cfg)
-    logits = lm_logits(params["embed"], h[:, -1:], cfg)[:, 0]
+    h_last = (h[:, -1:] if last_pos is None
+              else jax.lax.dynamic_slice_in_dim(h, last_pos, 1, axis=1))
+    logits = lm_logits(params["embed"], h_last, cfg)[:, 0]
     return logits, caches
 
 
@@ -564,7 +572,11 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, t, *,
     if cfg.embed_scale:
         pass  # already applied in embed_tokens
     if cfg.pos_kind == "abs_sinusoidal":
-        h = h + sinusoidal_pos(1, cfg.d_model, offset=t).astype(h.dtype)[None]
+        # t may be scalar or per-slot (B,) under continuous batching
+        tb = jnp.broadcast_to(jnp.asarray(t), (h.shape[0],))
+        pe = jax.vmap(lambda ti: sinusoidal_pos(1, cfg.d_model,
+                                                offset=ti))(tb)   # (B, 1, d)
+        h = h + pe.astype(h.dtype)
     h = annotate(h, "batch", "seq", "d_model")
 
     new_cache = {"prefix": [], "tail": []}

@@ -1,11 +1,18 @@
-"""Serving runtime: request queue → clustering batcher → decode loop,
-with optional clustered-KV cache compression (memory management).
+"""Serving runtime: continuous-batching engine with device-resident
+clustered-KV compaction (the paper's "memory management and request
+processing" made concrete).
 
-This is the "request processing" half of the paper's title made concrete:
-  1. requests arrive in a queue with (prompt_len, max_new_tokens),
-  2. the batcher clusters them (core/request_cluster.py) to minimize
-     padding waste, 3. each batch is prefillled then decoded step by step,
-  4. long caches can be compacted with the bit-serial k-medians compressor.
+Request processing: requests arrive with (prompt_len, max_new_tokens); the
+batcher clusters them (core/request_cluster.py) into a padding-minimal
+admission order; a slot-based continuous batcher then admits a request the
+moment a decode slot frees (per-slot position/length tracking, early exit
+at each request's own max_new_tokens) instead of padding every request in
+a static batch to the longest member.
+
+Memory management: the clustered-KV cache is compressed/refreshed with one
+jitted, vmap-over-(batch ⊕ head) call (core/kv_compress.py) — no host
+loops — and decode attention over [centroids ⊕ tail ring] runs in the
+fused Pallas ``clustered_decode`` kernel (interpret-mode on CPU).
 """
 
 from __future__ import annotations
@@ -26,11 +33,22 @@ from repro.models.config import ModelConfig
 
 @dataclasses.dataclass
 class ServerConfig:
-    batch_size: int = 4
+    batch_size: int = 4            # decode slots
     max_seq: int = 256
     use_clustered_batching: bool = True
     n_request_clusters: int = 4
     greedy: bool = True
+    engine: str = "continuous"     # "continuous" | "static"
+    prefill_bucket: int = 16       # admission prompts are right-padded to a
+                                   # multiple of this (bounds jit retraces;
+                                   # causal masking keeps logits exact for
+                                   # global attention / clustered KV; models
+                                   # with sliding-window 'L' layers or SSM/
+                                   # RG-LRU state should use 1 — pad tokens
+                                   # enter the ring/recurrent state there)
+    kv_compress: Optional[kv_compress.KVCompressConfig] = None
+    # when set, the engine serves from a clustered KV cache end to end and
+    # re-compacts every kv_compress.refresh decode steps
 
 
 @dataclasses.dataclass
@@ -41,12 +59,13 @@ class Completion:
     decode_ms: float
 
 
-def _tail_ring(tail_chrono, t: int, r: int):
-    """Re-lay a chronological tail (positions t-r..t-1) into ring order
-    (position p at slot p % r) so decode's ring indexing stays valid."""
-    slots = np.mod(np.arange(t - r, t), r)
-    inv = np.argsort(slots)
-    return tail_chrono[:, inv]
+def _is_exact_kv(node) -> bool:
+    return (isinstance(node, dict) and "k" in node and "v" in node
+            and "k_scale" not in node)
+
+
+def _is_clustered_kv(node) -> bool:
+    return isinstance(node, dict) and "k_cents" in node
 
 
 class Server:
@@ -54,76 +73,309 @@ class Server:
         self.cfg = cfg
         self.scfg = scfg
         self.params = params
+        if scfg.kv_compress is not None:
+            if scfg.engine != "continuous":
+                raise ValueError(
+                    "kv_compress serving requires the continuous engine "
+                    "(the static path would silently ignore it)")
+            if scfg.kv_compress.refresh < 1:
+                raise ValueError(
+                    "continuous serving with kv_compress needs "
+                    "refresh_every >= 1 (ring entries must reach "
+                    "centroids before eviction)")
+        self.last_stats: Dict[str, float] = {}
+        # bucket-padded prefill is only exact for global attention (causal
+        # mask + masked decode); sliding-window rings and SSM/RG-LRU state
+        # absorb pad tokens, so those models admit at exact prompt length
+        self._bucket = (1 if set(cfg.layer_pattern) & set("LMR")
+                        else scfg.prefill_bucket)
+        self._compact_templates: Dict[tuple, object] = {}
         self._decode = jax.jit(
             lambda c, tk, t: tfm.decode_step(params, cfg, c, tk, t))
+        self._prefill = jax.jit(
+            lambda tk, lp: tfm.prefill(params, cfg, tk,
+                                       max_seq=scfg.max_seq, last_pos=lp))
+        # donate the engine cache: admission updates one slot in place
+        # instead of copying every layer's KV
+        self._write_slot = jax.jit(self._write_slot_impl, donate_argnums=(0,))
+
+    # ------------------------------------------------------------------
+    # entry
+    # ------------------------------------------------------------------
 
     def serve(self, requests: Sequence[Request],
               prompts: Dict[int, np.ndarray]) -> List[Completion]:
         """prompts: uid -> token array.  Returns completions per request."""
+        if self.scfg.engine == "continuous":
+            return self._serve_continuous(requests, prompts)
+        return self._serve_static(requests, prompts)
+
+    def _plan(self, requests: Sequence[Request]) -> BatchPlan:
         scfg = self.scfg
         if scfg.use_clustered_batching:
-            plan = plan_batches(requests, scfg.batch_size,
+            return plan_batches(requests, scfg.batch_size,
                                 scfg.n_request_clusters)
-        else:
-            plan = plan_fifo(requests, scfg.batch_size)
+        return plan_fifo(requests, scfg.batch_size)
+
+    # ------------------------------------------------------------------
+    # continuous-batching engine
+    # ------------------------------------------------------------------
+
+    def _serve_continuous(self, requests, prompts) -> List[Completion]:
+        cfg, scfg = self.cfg, self.scfg
+        if cfg.is_encdec:
+            raise NotImplementedError(
+                "continuous engine serves decoder-only models")
+        ccfg = scfg.kv_compress
+        n = scfg.batch_size
+        plan = self._plan(requests)
+        order = [u for b in plan.batches for u in b]
+        by_uid = {r.uid: r for r in requests}
+
+        cache = tfm.init_cache(
+            cfg, n, scfg.max_seq,
+            kv_mode="clustered" if ccfg else "exact",
+            kv_clusters=ccfg.n_clusters if ccfg else 512,
+            kv_tail=ccfg.keep_recent if ccfg else 256)
+
+        pos = np.zeros(n, np.int32)       # cache valid length per slot
+        cur = np.zeros(n, np.int32)       # pending (unfed) token per slot
+        active = np.zeros(n, bool)
+        slot_uid = [-1] * n
+        toks: Dict[int, List[int]] = {}
+        pre_ms: Dict[int, float] = {}
+        qi = 0
+        decode_steps = wasted_slots = 0
+        pad_toks = useful_toks = 0
+        since_compact = 0
+        dec_s = 0.0
+
+        while True:
+            for j in range(n):
+                while not active[j] and qi < len(order):
+                    uid = order[qi]
+                    qi += 1
+                    r = by_uid[uid]
+                    p = np.asarray(prompts[uid], np.int32)[-scfg.max_seq:]
+                    plen = len(p)
+                    bucket = min(scfg.max_seq,
+                                 -(-plen // self._bucket) * self._bucket)
+                    padded = np.zeros((1, bucket), np.int32)
+                    padded[0, :plen] = p
+                    t0 = time.perf_counter()
+                    logits1, c1 = self._prefill(jnp.asarray(padded),
+                                                jnp.int32(plen - 1))
+                    first = int(jnp.argmax(logits1, -1)[0])
+                    pre_ms[uid] = (time.perf_counter() - t0) * 1e3
+                    toks[uid] = [first]
+                    pad_toks += bucket - plen
+                    useful_toks += plen
+                    if r.max_new_tokens <= 1:
+                        continue       # done at prefill; slot stays free
+                    if ccfg is not None:
+                        c1 = self._clusterize(c1, cache, plen, ccfg)
+                    cache = self._write_slot(cache, c1, jnp.int32(j))
+                    cur[j], pos[j] = first, plen
+                    active[j] = True
+                    slot_uid[j] = uid
+            if not active.any():
+                break
+
+            t0 = time.perf_counter()
+            logits, cache = self._decode(cache, jnp.asarray(cur[:, None]),
+                                         jnp.asarray(pos))
+            nxt = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
+            dec_s += time.perf_counter() - t0
+            decode_steps += 1
+            wasted_slots += int((~active).sum())
+            since_compact += 1
+
+            for j in range(n):
+                if not active[j]:
+                    continue
+                uid = slot_uid[j]
+                toks[uid].append(int(nxt[j]))
+                pos[j] += 1
+                cur[j] = nxt[j]
+                if len(toks[uid]) >= by_uid[uid].max_new_tokens:
+                    active[j] = False
+
+            if (ccfg is not None and since_compact >= ccfg.refresh
+                    and active.any()):
+                lengths = np.where(active, pos, 0).astype(np.int32)
+                cache = self.compact_kv(cache, lengths, ccfg)
+                since_compact = 0
+
+        gen_total = sum(len(v) for v in toks.values())
+        # each request's first token comes from prefill; tokens/s rates
+        # only the tokens the decode loop actually produced
+        dec_tokens = gen_total - len(toks)
+        dec_ms_tok = dec_s * 1e3 / max(gen_total, 1)
+        self.last_stats = {
+            "decode_steps": float(decode_steps),
+            "slot_waste": wasted_slots / max(decode_steps * n, 1),
+            "prefill_pad_frac": pad_toks / max(pad_toks + useful_toks, 1),
+            "gen_tokens": float(gen_total),
+            "decode_s": dec_s,
+            "tokens_per_s": dec_tokens / max(dec_s, 1e-9),
+        }
+        return [Completion(uid=r.uid, tokens=toks[r.uid],
+                           prefill_ms=pre_ms[r.uid],
+                           decode_ms=dec_ms_tok * len(toks[r.uid]))
+                for r in requests]
+
+    # admission-time conversion of a fresh (B=1) exact prefill cache into
+    # the engine's clustered layout; ``template`` marks which leaves are
+    # clustered (G layers) vs exact (sliding-window rings, SSM state, ...)
+    def _clusterize(self, c1, template, plen: int, ccfg):
+        C, R = ccfg.n_clusters, ccfg.keep_recent
+
+        def leaf(src, tpl):
+            if not (_is_clustered_kv(tpl) and _is_exact_kv(src)):
+                return src
+            k, v = src["k"], src["v"]
+            stacked = k.ndim == 5            # (L, 1, S, H, Dh) scan region
+            if stacked:
+                l = k.shape[0]
+                k = k.reshape((l,) + k.shape[2:])
+                v = v.reshape((l,) + v.shape[2:])
+            b = k.shape[0]
+            # the tail-only (cov=0) form is loss-free only while every
+            # prompt position survives in the ring until the first global
+            # compaction, which may be up to ``refresh`` steps away —
+            # longer prompts must build centroids at admission
+            if plen <= R - ccfg.refresh:
+                dt = k.dtype
+                h, dh = k.shape[2], k.shape[3]
+                out = {
+                    "k_cents": jnp.zeros((b, C, h, dh), dt),
+                    "v_cents": jnp.zeros((b, C, h, dh), dt),
+                    "counts": jnp.zeros((b, C, h), jnp.float32),
+                    # positions 0..plen-1 sit at ring slots 0..plen-1
+                    "k_tail": k[:, :R],
+                    "v_tail": v[:, :R],
+                    "cov": jnp.zeros((b,), jnp.int32),
+                }
+            else:
+                lengths = jnp.full((b,), plen, jnp.int32)
+                out = kv_compress.compress_cache_batched(k, v, lengths, ccfg)
+            if stacked:
+                out = {kk: vv[:, None] for kk, vv in out.items()}
+            return out
+
+        def walk(src, tpl):
+            if _is_clustered_kv(tpl):
+                return leaf(src, tpl)
+            if isinstance(src, dict):
+                return {kk: walk(vv, tpl[kk]) for kk, vv in src.items()}
+            if isinstance(src, list):
+                return [walk(vv, tt) for vv, tt in zip(src, tpl)]
+            return src
+
+        return walk(c1, template)
+
+    # scatter one (B=1) request cache into engine slot j.  prefix/tail
+    # leaves carry batch on axis 0, scan-stacked leaves on axis 1.
+    def _write_slot_impl(self, dst, src, j):
+        def upd(axis):
+            def f(d, s):
+                idx = (0,) * axis + (j,) + (0,) * (d.ndim - axis - 1)
+                return jax.lax.dynamic_update_slice(d, s.astype(d.dtype), idx)
+            return f
+
+        out = dict(dst)
+        for key in ("prefix", "tail"):
+            out[key] = [jax.tree.map(upd(0), dc, sc)
+                        for dc, sc in zip(dst[key], src[key])]
+        if "scan" in dst:
+            out["scan"] = jax.tree.map(upd(1), dst["scan"], src["scan"])
+        return out
+
+    # ------------------------------------------------------------------
+    # memory management: batched clustered-KV compaction
+    # ------------------------------------------------------------------
+
+    def compact_kv(self, cache, t, ccfg: "kv_compress.KVCompressConfig"):
+        """Compress every global-attention layer's KV into clustered form
+        (median centroids + counts + exact tail ring) in single jitted
+        vmap-over-(batch ⊕ head) calls — no Python loop over batch, head,
+        or stacked layer.  Exact leaves are compressed from scratch;
+        already-clustered leaves are incrementally re-compacted with
+        warm-started centroids (streaming update between decode bursts).
+        ``t`` is a scalar length or a per-slot (B,) vector.
+
+        Only leaves that a clustered-mode cache would hold in clustered
+        form (global-attention layers) are touched — sliding-window ring
+        buffers, SSM/RG-LRU state, and int8 caches pass through, guided
+        by a structural template (shapes only, nothing allocated)."""
+        tkey = (ccfg.n_clusters, ccfg.keep_recent)
+        template = self._compact_templates.get(tkey)
+        if template is None:
+            template = jax.eval_shape(
+                lambda: tfm.init_cache(
+                    self.cfg, 1, self.scfg.max_seq, kv_mode="clustered",
+                    kv_clusters=ccfg.n_clusters, kv_tail=ccfg.keep_recent))
+            self._compact_templates[tkey] = template
+
+        def lengths_for(b):
+            return jnp.broadcast_to(jnp.asarray(t, jnp.int32), (b,))
+
+        def compress_exact(node):
+            k, v = node["k"], node["v"]
+            if k.shape[-3] <= ccfg.n_clusters + ccfg.keep_recent:
+                return node  # not worth compressing
+            stacked = k.ndim == 5            # (L, B, S, H, Dh) scan region
+            if stacked:
+                l, b = k.shape[:2]
+                lengths = jnp.broadcast_to(lengths_for(b), (l, b)).reshape(-1)
+                out = kv_compress.compress_cache_batched(
+                    k.reshape((l * b,) + k.shape[2:]),
+                    v.reshape((l * b,) + v.shape[2:]), lengths, ccfg)
+                return {kk: vv.reshape((l, b) + vv.shape[1:])
+                        for kk, vv in out.items()}
+            return kv_compress.compress_cache_batched(
+                k, v, lengths_for(k.shape[0]), ccfg)
+
+        def recompact(node):
+            stacked = node["k_cents"].ndim == 5
+            if stacked:
+                l, b = node["k_cents"].shape[:2]
+                flat = {kk: vv.reshape((l * b,) + vv.shape[2:])
+                        for kk, vv in node.items()}
+                lengths = jnp.broadcast_to(lengths_for(b), (l, b)).reshape(-1)
+                out = kv_compress.recompact_clustered(flat, lengths, ccfg)
+                return {kk: vv.reshape((l, b) + vv.shape[1:])
+                        for kk, vv in out.items()}
+            return kv_compress.recompact_clustered(
+                node, lengths_for(node["k_cents"].shape[0]), ccfg)
+
+        def walk(node, tpl):
+            if _is_clustered_kv(tpl):
+                if _is_clustered_kv(node):
+                    return recompact(node)
+                if _is_exact_kv(node) and node["k"].ndim in (4, 5):
+                    return compress_exact(node)
+                return node
+            if isinstance(node, dict) and isinstance(tpl, dict):
+                return {kk: walk(vv, tpl.get(kk)) for kk, vv in node.items()}
+            if isinstance(node, list) and isinstance(tpl, list):
+                return [walk(vv, tt) for vv, tt in zip(node, tpl)]
+            return node
+
+        return walk(cache, template)
+
+    # ------------------------------------------------------------------
+    # static batch-at-a-time path (baseline for the serve benchmark)
+    # ------------------------------------------------------------------
+
+    def _serve_static(self, requests, prompts) -> List[Completion]:
+        plan = self._plan(requests)
         by_uid = {r.uid: r for r in requests}
         out: List[Completion] = []
         for batch_uids in plan.batches:
             out.extend(self._serve_batch(batch_uids, by_uid, prompts))
+        self.last_stats = {"plan_waste": plan.waste}
         return out
-
-    def compact_kv(self, cache, t: int, ccfg: "kv_compress.KVCompressConfig"):
-        """Memory-management maintenance pass: compress every global-
-        attention layer's exact KV prefix into clustered form (median
-        centroids + counts + exact tail).  Called between decode bursts
-        (e.g. every ``ccfg.keep_recent`` steps); the returned cache plugs
-        straight into decode_step (the clustered path dispatches on the
-        cache contents)."""
-        def compress_leaf_pair(c):
-            if not (isinstance(c, dict) and "k" in c and "v" in c):
-                return c
-            k, v = c["k"], c["v"]
-            if k.shape[1] <= ccfg.n_clusters + ccfg.keep_recent:
-                return c  # not worth compressing
-            b = k.shape[0]
-            outs = []
-            for i in range(b):
-                outs.append(kv_compress.compress_cache(
-                    jnp.asarray(k[i][:t]), jnp.asarray(v[i][:t]), ccfg))
-            return {
-                "k_cents": jnp.stack([o.k_cents.transpose(1, 0, 2)
-                                      for o in outs]),
-                "v_cents": jnp.stack([o.v_cents.transpose(1, 0, 2)
-                                      for o in outs]),
-                "counts": jnp.stack([o.counts.T for o in outs]),
-                "k_tail": _tail_ring(
-                    jnp.stack([o.k_tail.transpose(1, 0, 2) for o in outs]),
-                    t, ccfg.keep_recent),
-                "v_tail": _tail_ring(
-                    jnp.stack([o.v_tail.transpose(1, 0, 2) for o in outs]),
-                    t, ccfg.keep_recent),
-            }
-
-        def walk(node):
-            if isinstance(node, dict) and "k" in node and "v" in node:
-                if node["k"].ndim == 4:
-                    return compress_leaf_pair(node)
-                if node["k"].ndim == 5:  # scan-stacked: (layers, B, S, H, D)
-                    n_rep = node["k"].shape[0]
-                    per_layer = [compress_leaf_pair(
-                        {"k": node["k"][i], "v": node["v"][i]})
-                        for i in range(n_rep)]
-                    if any("k_cents" not in pl for pl in per_layer):
-                        return node  # too short to compress: keep exact
-                    return {kk: jnp.stack([pl[kk] for pl in per_layer])
-                            for kk in per_layer[0]}
-            if isinstance(node, dict):
-                return {kk: walk(vv) for kk, vv in node.items()}
-            if isinstance(node, list):
-                return [walk(vv) for vv in node]
-            return node
-
-        return walk(cache)
 
     def _serve_batch(self, uids, by_uid, prompts) -> List[Completion]:
         cfg, scfg = self.cfg, self.scfg
@@ -137,9 +389,7 @@ class Server:
             toks[i, plen - len(p):] = p  # left-pad
 
         t0 = time.perf_counter()
-        logits, cache = jax.jit(
-            lambda tk: tfm.prefill(self.params, cfg, tk,
-                                   max_seq=scfg.max_seq))(jnp.asarray(toks))
+        logits, cache = self._prefill(jnp.asarray(toks), jnp.int32(plen - 1))
         jax.block_until_ready(logits)
         t1 = time.perf_counter()
 

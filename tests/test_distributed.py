@@ -32,7 +32,10 @@ def test_distributed_median_matches_single_device():
     run_sub("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import Mesh, PartitionSpec as P
-        from jax import shard_map
+        try:
+            from jax import shard_map
+        except ImportError:  # jax < 0.5: experimental namespace
+            from jax.experimental.shard_map import shard_map
         from repro.core import bitserial, quantizer
 
         assert len(jax.devices()) == 8
@@ -63,7 +66,10 @@ def test_distributed_kmedians_fit_matches_single_device():
         import jax, jax.numpy as jnp, numpy as np
         from functools import partial
         from jax.sharding import Mesh, PartitionSpec as P
-        from jax import shard_map
+        try:
+            from jax import shard_map
+        except ImportError:  # jax < 0.5: experimental namespace
+            from jax.experimental.shard_map import shard_map
         from repro.core import clustering
         from repro.core.clustering import ClusterConfig
 
