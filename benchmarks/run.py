@@ -20,27 +20,40 @@ Prints ``name,us_per_call,derived`` CSV rows:
                            token waste for FIFO vs clustered batching,
                            static vs continuous, and continuous with
                            clustered-KV compaction (fused Pallas
-                           clustered_decode path, interpret mode on CPU)
+                           clustered_decode path, interpret mode on CPU).
+                           ``--mesh DATAxMODEL`` adds mesh-sharded
+                           variants (slots over data, heads over model)
+                           so 1x1 vs NxM tokens/s compare directly;
+                           ``--seed`` + the JSON record at --json-out
+                           make FIFO-vs-clustered runs reproducible
   roofline_summary         headline numbers from the dry-run artifacts
 
-Run: ``PYTHONPATH=src python -m benchmarks.run [--quick]``
+Run: ``PYTHONPATH=src python -m benchmarks.run [--quick] [scenario]``
+e.g. ``python -m benchmarks.run serve --mesh 2x4 --seed 7``
 """
 
 from __future__ import annotations
 
-import argparse
-import json
-import glob
-import time
+import os
+import sys
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.launch.preboot import force_host_devices_for_mesh
 
-from repro.core import bitserial, clustering, grad_compress, kv_compress
-from repro.core.clustering import ClusterConfig
-from repro.core.request_cluster import Request, plan_batches, plan_fifo
-from repro.data import pipeline
+force_host_devices_for_mesh(sys.argv)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import glob  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import bitserial, clustering, grad_compress, kv_compress  # noqa: E402
+from repro.core.clustering import ClusterConfig  # noqa: E402
+from repro.core.request_cluster import Request, plan_batches, plan_fifo  # noqa: E402
+from repro.data import pipeline  # noqa: E402
 
 
 def _time(fn, n=5) -> float:
@@ -215,17 +228,21 @@ def grad_compress_bench(quick=False):
          f"wire_ratio={wire['ratio']:.1f}x;rel_err={rel:.4f}")
 
 
-def serve_bench(quick=False):
+def serve_bench(quick=False, seed=7, mesh_spec=None,
+                json_out="artifacts/serve_bench.json"):
+    from repro.launch.mesh import make_serving_mesh
     from repro.models import transformer as tfm
     from repro.models.config import ModelConfig
     from repro.runtime.server import Server, ServerConfig
 
     SMALL = ModelConfig(name="serve-lm", family="dense", n_layers=2,
-                        d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+                        d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
                         d_ff=256, vocab=256, pad_vocab_multiple=128,
                         dtype="float32")
     params = tfm.init_params(jax.random.PRNGKey(0), SMALL)
-    rng = np.random.default_rng(7)
+    # --seed drives the whole request stream (lengths, budgets, prompts),
+    # so FIFO-vs-clustered comparisons replay the exact same queue
+    rng = np.random.default_rng(seed)
     n = 12 if quick else 32
     lens = np.where(rng.random(n) < 0.5,
                     rng.integers(8, 24, n), rng.integers(72, 120, n))
@@ -235,6 +252,7 @@ def serve_bench(quick=False):
         np.int32) for r in reqs}
     ccfg = kv_compress.KVCompressConfig(n_clusters=16, iters=4,
                                         keep_recent=32, refresh_every=16)
+    mesh = make_serving_mesh(mesh_spec) if mesh_spec else None
     variants = [
         ("serve_static_fifo", ServerConfig(
             batch_size=4, max_seq=256, engine="static",
@@ -247,6 +265,19 @@ def serve_bench(quick=False):
         ("serve_cont_clustered_compact", ServerConfig(
             batch_size=4, max_seq=256, kv_compress=ccfg)),
     ]
+    if mesh is not None:
+        # mesh dimension of the scenario: same queue, same batch_size,
+        # sharded engine — tokens/s compares 1x1 (variants above) vs
+        # data x model directly (slot sharding needs batch_size % data
+        # == 0; otherwise slots replicate and only heads shard)
+        tag = mesh_spec.lower()
+        variants += [
+            (f"serve_cont_clustered_mesh{tag}", ServerConfig(
+                batch_size=4, max_seq=256, mesh=mesh)),
+            (f"serve_cont_clustered_compact_mesh{tag}", ServerConfig(
+                batch_size=4, max_seq=256, kv_compress=ccfg, mesh=mesh)),
+        ]
+    records = []
     for name, scfg in variants:
         srv = Server(SMALL, scfg, params)
         t0 = time.perf_counter()
@@ -258,11 +289,25 @@ def serve_bench(quick=False):
             waste = st.get("plan_waste", 0.0)
             derived = (f"tokens_per_s={toks / wall:.1f};"
                        f"prompt_pad_waste={waste:.4f}")
+            rec_stats = {"tokens_per_s": toks / wall,
+                         "prompt_pad_waste": waste}
         else:
             derived = (f"tokens_per_s={st['tokens_per_s']:.1f};"
                        f"slot_waste={st['slot_waste']:.4f};"
                        f"prefill_pad_frac={st['prefill_pad_frac']:.4f}")
+            rec_stats = {k: float(v) for k, v in st.items()}
         emit(name, wall * 1e6, derived)
+        records.append({
+            "name": name, "seed": seed,
+            "mesh": mesh_spec if scfg.mesh is not None else "1x1",
+            "batch_size": scfg.batch_size, "requests": n,
+            "wall_s": wall, "gen_tokens": toks, **rec_stats,
+        })
+    if json_out:
+        os.makedirs(os.path.dirname(json_out) or ".", exist_ok=True)
+        with open(json_out, "w") as fh:
+            json.dump(records, fh, indent=1)
+        emit("serve_json", 0.0, f"records={len(records)};path={json_out}")
 
 
 def roofline_summary(quick=False):
@@ -301,14 +346,31 @@ BENCHES = [t1_median_throughput, t2_recognition_rate, t3_fixed_point,
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("scenario", nargs="?", default=None,
+                    help="run only benchmarks whose name contains this "
+                         "(e.g. 'serve'); same filter as --only")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--seed", type=int, default=7,
+                    help="request-stream seed for the serve scenario "
+                         "(recorded in its JSON output)")
+    ap.add_argument("--mesh", default=None,
+                    help="DATAxMODEL serving mesh for the serve scenario, "
+                         "e.g. 2x4 (CPU fake devices are forced "
+                         "automatically)")
+    ap.add_argument("--json-out", default="artifacts/serve_bench.json",
+                    help="where the serve scenario writes its JSON records")
     args = ap.parse_args()
+    only = args.only or args.scenario
     print("name,us_per_call,derived")
     for b in BENCHES:
-        if args.only and args.only not in b.__name__:
+        if only and only not in b.__name__:
             continue
-        b(quick=args.quick)
+        if b is serve_bench:
+            b(quick=args.quick, seed=args.seed, mesh_spec=args.mesh,
+              json_out=args.json_out)
+        else:
+            b(quick=args.quick)
 
 
 if __name__ == "__main__":

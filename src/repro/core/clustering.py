@@ -138,10 +138,21 @@ def init_kmeanspp(rng, x, k: int, metric: str = "l2", weights=None):
 # ---------------------------------------------------------------------------
 
 
-def update_mean(x, assign, k: int, prev):
+def update_mean(x, assign, k: int, prev, *, weights=None,
+                axis_name: Optional[str] = None):
+    """Weighted mean centroids; mirrors ``update_median``'s signature so the
+    Lloyd driver treats both centroid kinds uniformly.  Under shard_map the
+    per-cluster sums/counts psum over ``axis_name`` — the same reduction
+    tree the bit-serial median votes use, so mean and median fits are
+    psum-consistent with each other."""
     onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)
+    if weights is not None:
+        onehot = onehot * weights.astype(jnp.float32)[:, None]
     sums = onehot.T @ x
     counts = onehot.sum(axis=0)
+    if axis_name is not None:
+        sums = jax.lax.psum(sums, axis_name)
+        counts = jax.lax.psum(counts, axis_name)
     mean = sums / jnp.maximum(counts, 1.0)[:, None]
     return jnp.where(counts[:, None] > 0, mean, prev), counts
 
@@ -173,16 +184,8 @@ def _one_iter(cfg: ClusterConfig, x, cents, scale, axis_name=None,
     assign, mind = assign_points(x, cents, cfg.metric, cfg.assign_chunk,
                                  use_kernel=use_kernel)
     if cfg.centroid == "mean":
-        onehot = jax.nn.one_hot(assign, cfg.k, dtype=jnp.float32)
-        if weights is not None:
-            onehot = onehot * weights[:, None]
-        sums = onehot.T @ x
-        counts = onehot.sum(axis=0)
-        if axis_name is not None:
-            sums = jax.lax.psum(sums, axis_name)
-            counts = jax.lax.psum(counts, axis_name)
-        new = sums / jnp.maximum(counts, 1.0)[:, None]
-        new = jnp.where(counts[:, None] > 0, new, cents)
+        new, counts = update_mean(x, assign, cfg.k, cents, weights=weights,
+                                  axis_name=axis_name)
     else:
         new, counts = update_median(x, assign, cfg.k, cents, bits=cfg.bits,
                                     scale=scale, weights=weights,

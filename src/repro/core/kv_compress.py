@@ -54,22 +54,33 @@ class CompressedKV(NamedTuple):
 
 
 def compress_head(keys, values, cfg: KVCompressConfig, seed: int = 0,
-                  weights=None, init_centroids=None):
+                  weights=None, init_centroids=None, axis_name=None):
     """keys/values (S, Dh) → centroids for one head.
 
     ``weights`` (S,) ≥ 0 mask padded positions (weight 0) or carry counts of
     pre-aggregated summaries; ``init_centroids`` warm-starts Lloyd for
-    incremental re-compaction between decode bursts."""
+    incremental re-compaction between decode bursts.
+
+    ``axis_name``: when the point rows span a mesh axis under ``shard_map``
+    (e.g. the (C ⊕ R) recompaction points of a centroid bank sharded over
+    the model axis), the weighted bit-serial k-medians psum-merges per-bit
+    vote counts — and the value sums / counts here psum the same way — so
+    every shard converges on identical centroids (the paper's reduction
+    tree).  Distributed fits require ``init_centroids`` (replicated)."""
     ccfg = ClusterConfig(k=cfg.n_clusters, metric=cfg.metric,
                          centroid="median", max_iters=cfg.iters,
                          bits=cfg.bits, init="kmeanspp", seed=seed)
     res = clustering.fit(keys.astype(jnp.float32), ccfg, init_centroids,
-                         use_kernel=False, weights=weights)
+                         use_kernel=False, weights=weights,
+                         axis_name=axis_name)
     onehot = jax.nn.one_hot(res.assign, cfg.n_clusters, dtype=jnp.float32)
     if weights is not None:
         onehot = onehot * weights.astype(jnp.float32)[:, None]
     vsum = onehot.T @ values.astype(jnp.float32)
     counts = onehot.sum(0)
+    if axis_name is not None:
+        vsum = jax.lax.psum(vsum, axis_name)
+        counts = jax.lax.psum(counts, axis_name)
     v_cents = vsum / jnp.maximum(counts, 1.0)[:, None]
     return res.centroids, v_cents, counts
 
@@ -167,15 +178,20 @@ def compress_cache_batched(k, v, lengths, cfg: KVCompressConfig):
     }
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def recompact_clustered(cache, lengths, cfg: KVCompressConfig):
+@partial(jax.jit, static_argnames=("cfg", "axis_name"))
+def recompact_clustered(cache, lengths, cfg: KVCompressConfig,
+                        axis_name=None):
     """Incremental re-compaction of an already-clustered cache.
 
     The points to recluster are the old centroids (weighted by their
     counts — each is a pre-aggregated summary) plus the ring entries that
     have aged past the new coverage frontier.  Warm-started from the old
     centroids, so between decode bursts Lloyd only has to absorb the ≤
-    refresh_every new keys — the streaming-clustering update."""
+    refresh_every new keys — the streaming-clustering update.
+
+    ``axis_name`` makes the k-medians psum-consistent when the point rows
+    are sharded across a mesh axis under shard_map (the warm-started
+    centroids satisfy the distributed-init requirement)."""
     k_cents = cache["k_cents"].astype(jnp.float32)     # (B, C, H, Dh)
     v_cents = cache["v_cents"].astype(jnp.float32)
     counts = cache["counts"]                           # (B, C, H)
@@ -199,7 +215,8 @@ def recompact_clustered(cache, lengths, cfg: KVCompressConfig):
         x = jnp.concatenate([kc, kt], axis=0)          # (C + R, Dh)
         vals = jnp.concatenate([vc, vt], axis=0)
         wgt = jnp.concatenate([cnt, wt], axis=0)
-        return compress_head(x, vals, cfg, weights=wgt, init_centroids=kc)
+        return compress_head(x, vals, cfg, weights=wgt, init_centroids=kc,
+                             axis_name=axis_name)
 
     def one_slot(kc, vc, cnt, kt, vt, wt):
         return jax.vmap(lambda *a: one_head(*a, wt))(

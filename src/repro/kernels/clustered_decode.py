@@ -33,6 +33,22 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from jax.sharding import PartitionSpec as P
+
+try:
+    from jax import shard_map
+except ImportError:  # jax < 0.5: experimental namespace
+    from jax.experimental.shard_map import shard_map
+
+# the replication-check kwarg was renamed check_rep -> check_vma when
+# shard_map moved to the top-level namespace; resolve it by signature so
+# both APIs disable the check (the Pallas call has no replication rule)
+import inspect as _inspect
+
+_SHARD_MAP_NO_CHECK = (
+    {"check_vma": False}
+    if "check_vma" in _inspect.signature(shard_map).parameters
+    else {"check_rep": False})
 
 NEG = -1e30
 
@@ -79,12 +95,55 @@ def _kernel(t_ref, cov_ref, q_ref, kc_ref, vc_ref, cnt_ref, kt_ref, vt_ref,
     o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
 
 
+def clustered_decode_shardmap(q, k_cents, v_cents, counts, k_tail, v_tail,
+                              t, cov, *, mesh, data_axes, model_axes,
+                              scale: float, softcap=None,
+                              interpret: bool = False):
+    """Dispatch the Pallas kernel once per mesh shard.
+
+    The kernel grid is (batch, kv-head) and every grid cell is independent,
+    so a (data, model)-sharded launch is exact: each shard runs the same
+    kernel on its local (B/d, Hkv/m) block — no collectives, and the
+    existing interpret-mode CPU fallback applies per shard unchanged.
+
+    ``data_axes`` / ``model_axes`` are the mesh axis tuples partitioning the
+    batch / head dims (either may be None → replicated along that dim); the
+    caller (kernels.ops) checks divisibility before choosing them.  t / cov
+    must already be (B,) vectors so they shard with the batch.
+    """
+    b = q.shape[0]
+    t = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (b,))
+    cov = jnp.broadcast_to(jnp.asarray(cov, jnp.int32), (b,))
+    d, m = data_axes, model_axes
+    f = shard_map(
+        functools.partial(clustered_decode_pallas, scale=scale,
+                          softcap=softcap, interpret=interpret),
+        mesh=mesh,
+        in_specs=(
+            P(d, m, None),        # q        (B, Hq, Dh)
+            P(d, None, m, None),  # k_cents  (B, C, Hkv, Dh)
+            P(d, None, m, None),  # v_cents
+            P(d, None, m),        # counts   (B, C, Hkv)
+            P(d, None, m, None),  # k_tail   (B, R, Hkv, Dh)
+            P(d, None, m, None),  # v_tail
+            P(d),                 # t        (B,)
+            P(d),                 # cov      (B,)
+        ),
+        out_specs=P(d, m, None),
+        **_SHARD_MAP_NO_CHECK,
+    )
+    return f(q, k_cents, v_cents, counts, k_tail, v_tail, t, cov)
+
+
 def clustered_decode_pallas(q, k_cents, v_cents, counts, k_tail, v_tail,
                             t, cov, *, scale: float, softcap=None,
-                            interpret: bool = False):
+                            interpret: bool | None = None):
     """q (B, Hq, Dh); k/v_cents (B, C, Hkv, Dh); counts (B, C, Hkv);
     k/v_tail (B, R, Hkv, Dh) ring-ordered; t, cov (B,) int32
     → (B, Hq, Dh)."""
+    if interpret is None:
+        from repro.kernels.ops import interpret_default
+        interpret = interpret_default()
     b, hq, dh = q.shape
     c = k_cents.shape[1]
     r = k_tail.shape[1]

@@ -25,7 +25,12 @@ from repro.kernels import distance_argmin as _da
 MAX_KERNEL_POINTS = 4096
 
 
-def _interpret_default() -> bool:
+def interpret_default() -> bool:
+    """True when the Pallas kernels must run in interpret mode (no Mosaic
+    lowering available).  Single source of truth for backend detection —
+    every kernel wrapper (here and in the kernel modules) resolves
+    ``interpret=None`` through this helper, so the CPU fallback can't
+    drift between call sites."""
     return jax.default_backend() != "tpu"
 
 
@@ -42,7 +47,7 @@ def grouped_median_bits(u, assign, k: int, weights=None, *, bits: int = 32,
     if weights is None:
         weights = jnp.ones((n,), jnp.float32)
     if interpret is None:
-        interpret = _interpret_default()
+        interpret = interpret_default()
     if n <= MAX_KERNEL_POINTS or force_kernel:
         med = _bsm.grouped_median_pallas(u, assign, weights, k, bits=bits,
                                          d_block=d_block, interpret=interpret)
@@ -58,22 +63,60 @@ def distance_argmin(x, cents, *, metric: str = "l2", n_block: int = 1024,
                     interpret: bool | None = None):
     """Closest-centroid assignment: (assign (N,), mindist (N,))."""
     if interpret is None:
-        interpret = _interpret_default()
+        interpret = interpret_default()
     nb = min(n_block, max(8, x.shape[0]))
     return _da.distance_argmin_pallas(x, cents, metric=metric, n_block=nb,
                                       interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("scale", "softcap", "interpret"))
+def _clustered_decode_jit(q, k_cents, v_cents, counts, k_tail, v_tail, t,
+                          cov, *, scale: float, softcap: float | None,
+                          interpret: bool):
+    return _cd.clustered_decode_pallas(
+        q, k_cents, v_cents, counts, k_tail, v_tail, t, cov,
+        scale=scale, softcap=softcap, interpret=interpret)
+
+
+def _kernel_shard_axes(rules, b: int, hq: int, hkv: int):
+    """(data_axes, model_axes) for a (B, Hq/Hkv, …) kernel launch under the
+    active sharding rules, or (None, None) when nothing divides.  Heads
+    shard over the model axis only when BOTH the query and kv head counts
+    divide (the GQA group must stay intact per shard)."""
+    data_axes = rules.axes_for("batch", b)
+    model_axes = rules.axes_for("heads", hq)
+    if model_axes is not None and rules.axes_for("kv_heads", hkv) != model_axes:
+        model_axes = None
+    return data_axes, model_axes
+
+
 def clustered_decode(q, k_cents, v_cents, counts, k_tail, v_tail, t, cov, *,
                      scale: float, softcap: float | None = None,
                      interpret: bool | None = None):
     """Fused clustered-KV decode attention (centroids ⊕ tail ring).
 
     q (B, Hq, Dh); k/v_cents (B, C, Hkv, Dh); counts (B, C, Hkv);
-    k/v_tail (B, R, Hkv, Dh); t, cov scalar or (B,) → (B, Hq, Dh)."""
+    k/v_tail (B, R, Hkv, Dh); t, cov scalar or (B,) → (B, Hq, Dh).
+
+    When a sharding-rules context is active (mesh serving), the Pallas
+    kernel is dispatched per (data, model) mesh shard via shard_map —
+    slots partition over ``data``, kv-head grid cells over ``model`` —
+    with divisibility-aware fallback to replication.  Dispatch happens at
+    trace time, so this wrapper is deliberately un-jitted (a cached trace
+    must never leak across rules contexts); the plain path keeps its own
+    jit below."""
     if interpret is None:
-        interpret = _interpret_default()
-    return _cd.clustered_decode_pallas(
+        interpret = interpret_default()
+    from repro.sharding import current_rules
+    r = current_rules()
+    if r is not None:
+        data_axes, model_axes = _kernel_shard_axes(
+            r, q.shape[0], q.shape[1], k_cents.shape[2])
+        if data_axes is not None or model_axes is not None:
+            return _cd.clustered_decode_shardmap(
+                q, k_cents, v_cents, counts, k_tail, v_tail, t, cov,
+                mesh=r.mesh, data_axes=data_axes, model_axes=model_axes,
+                scale=scale, softcap=softcap, interpret=interpret)
+    return _clustered_decode_jit(
         q, k_cents, v_cents, counts, k_tail, v_tail, t, cov,
         scale=scale, softcap=softcap, interpret=interpret)

@@ -12,18 +12,58 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def _mesh(shape, axes):
+    """Auto-typed mesh across jax versions: ``axis_types`` (and AxisType
+    itself) only exist on newer jax; older versions are Auto-only."""
+    at = getattr(jax.sharding, "AxisType", None)
+    if at is not None:
+        try:
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(at.Auto,) * len(axes))
+        except TypeError:  # make_mesh predates the axis_types kwarg
+            pass
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1):
     """Small mesh over whatever devices exist (tests / examples)."""
     n = len(jax.devices())
     data = n // model
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+    return _mesh((data, model), ("data", "model"))
+
+
+def parse_mesh_spec(spec: str):
+    """'dxm' (e.g. '2x4') → (data, model) ints."""
+    parts = spec.lower().split("x")
+    if len(parts) != 2:
+        raise ValueError(f"mesh spec must be 'DATAxMODEL' (e.g. 2x4), "
+                         f"got {spec!r}")
+    data, model = (int(p) for p in parts)
+    if data < 1 or model < 1:
+        raise ValueError(f"mesh axes must be >= 1, got {spec!r}")
+    return data, model
+
+
+def make_serving_mesh(spec: str):
+    """(data, model) mesh for the serving engine from a CLI 'dxm' spec.
+
+    Decode slots shard over ``data``, attention heads over ``model``
+    (runtime/server.py).  On a CPU host, fake devices come from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set before the
+    first jax use — the error message reminds the caller.
+    """
+    data, model = parse_mesh_spec(spec)
+    n = len(jax.devices())
+    if data * model > n:
+        raise ValueError(
+            f"mesh {spec} needs {data * model} devices but only {n} are "
+            f"visible; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={data * model} "
+            f"before jax initializes")
+    return _mesh((data, model), ("data", "model"))

@@ -1,0 +1,35 @@
+"""Pre-jax-boot helpers for CLI entry points.
+
+XLA only honors ``--xla_force_host_platform_device_count`` when XLA_FLAGS
+is set before the backend initializes, so CLIs that accept ``--mesh dxm``
+call this on raw argv before their first jax use.  Deliberately jax-free
+(and lenient: malformed specs are left for ``launch.mesh.parse_mesh_spec``
+to reject with a proper error once jax is up).
+"""
+
+from __future__ import annotations
+
+import os
+
+
+def force_host_devices_for_mesh(argv) -> None:
+    """Peek at ``--mesh dxm`` / ``--mesh=dxm`` in ``argv`` and force enough
+    fake host devices for it, unless XLA_FLAGS already pins a count."""
+    spec = None
+    for i, a in enumerate(argv):
+        if a.startswith("--mesh="):
+            spec = a.split("=", 1)[1]
+        elif a == "--mesh" and i + 1 < len(argv):
+            spec = argv[i + 1]
+    if not spec:
+        return
+    try:
+        need = 1
+        for p in spec.lower().split("x"):
+            need *= int(p)
+    except ValueError:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if need > 1 and "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={need}".strip())

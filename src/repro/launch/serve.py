@@ -3,24 +3,41 @@
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
         --requests 24 --batch-size 4
 
+Mesh-sharded (slots × tensor parallel), e.g. on an 8-device host:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
+        --requests 24 --batch-size 8 --mesh 2x4
+
 Drives the full request-processing path: request queue → bit-serial
 k-medians batcher → prefill → decode loop; reports padding waste
-(clustered vs FIFO) and throughput.  On a real fleet the same entry point
-serves the full config on the production mesh.
+(clustered vs FIFO) and throughput.  ``--mesh DATAxMODEL`` runs the
+continuous batcher sharded over a (data, model) device mesh — decode
+slots and their clustered KV caches over ``data``, attention heads over
+``model``.  On a real fleet the same entry point serves the full config
+on the production mesh; on CPU the needed fake devices are forced via
+XLA_FLAGS before jax initializes (handled below).
 """
 
 from __future__ import annotations
 
-import argparse
-import time
+import sys
 
-import jax
-import numpy as np
+from repro.launch.preboot import force_host_devices_for_mesh
 
-from repro import configs
-from repro.core.request_cluster import Request, plan_batches, plan_fifo
-from repro.models import transformer as tfm
-from repro.runtime.server import Server, ServerConfig
+force_host_devices_for_mesh(sys.argv)
+
+import argparse  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.core.request_cluster import (Request, plan_batches,  # noqa: E402
+                                        plan_fifo)
+from repro.launch.mesh import make_serving_mesh  # noqa: E402
+from repro.models import transformer as tfm  # noqa: E402
+from repro.runtime.server import Server, ServerConfig  # noqa: E402
 
 
 def main():
@@ -33,6 +50,9 @@ def main():
     ap.add_argument("--max-seq", type=int, default=256)
     ap.add_argument("--no-clustering", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default=None,
+                    help="DATAxMODEL serving mesh, e.g. 2x4 (slots shard "
+                         "over data, heads over model)")
     args = ap.parse_args()
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
@@ -56,9 +76,14 @@ def main():
     print(f"[serve] padding waste: fifo {fifo.waste * 100:.1f}% → "
           f"clustered {clus.waste * 100:.1f}%")
 
+    mesh = None
+    if args.mesh:
+        mesh = make_serving_mesh(args.mesh)
+        print(f"[serve] mesh {args.mesh}: slots over data={mesh.shape['data']}"
+              f", heads over model={mesh.shape['model']}")
     srv = Server(cfg, ServerConfig(
         batch_size=args.batch_size, max_seq=args.max_seq,
-        use_clustered_batching=not args.no_clustering), params)
+        use_clustered_batching=not args.no_clustering, mesh=mesh), params)
     t0 = time.perf_counter()
     outs = srv.serve(reqs, prompts)
     dt = time.perf_counter() - t0
@@ -66,6 +91,16 @@ def main():
     print(f"[serve] {len(outs)} completions, {toks} tokens in {dt:.1f}s "
           f"({toks / dt:.1f} tok/s), mean decode "
           f"{np.mean([o.decode_ms for o in outs]):.1f} ms/req")
+    if mesh is not None:
+        if "n_data_shards" in srv.last_stats:
+            ws = [f"{srv.last_stats[f'slot_waste_shard{s}']:.2f}"
+                  for s in range(int(srv.last_stats['n_data_shards']))]
+            print(f"[serve] per-data-shard slot waste: {' '.join(ws)}")
+        elif mesh.shape["data"] > 1:
+            print(f"[serve] note: batch size {args.batch_size} does not "
+                  f"divide the data axis — slots replicated (no slot "
+                  f"sharding); pick a batch size divisible by "
+                  f"{mesh.shape['data']}")
 
 
 if __name__ == "__main__":

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from repro.models.config import ModelConfig
 from repro.models.layers import (apply_rope, cdtype, dense_init, rms_head_norm,
                                  rng_for)
+from repro.sharding import annotate
 
 NEG = -1e30
 
@@ -370,8 +371,13 @@ def attn_decode_clustered(p, x, cfg: ModelConfig, *, cache, t,
                           cache["v_cents"].astype(jnp.float32))
                + jnp.einsum("bhgs,bshd->bhgd", pw[..., nc:],
                             v_tail.astype(jnp.float32)))
-    y = out.reshape(b, 1, hq * cfg.head_dim).astype(x.dtype) @ \
-        p["wo"].astype(cdtype(cfg))
+    # under mesh serving the per-head context is model-sharded; gather heads
+    # to a replicated layout BEFORE the output projection so the wo
+    # contraction sums all head dims in one (device-order-independent)
+    # pass — keeps mesh decode bit-identical to single-device greedy
+    out_flat = annotate(out.reshape(b, 1, hq * cfg.head_dim),
+                        "batch", "seq", None)
+    y = out_flat.astype(x.dtype) @ p["wo"].astype(cdtype(cfg))
     new_cache = dict(cache, k_tail=k_tail, v_tail=v_tail)
     return y, new_cache
 
@@ -397,7 +403,9 @@ def attn_decode(p, x, cfg: ModelConfig, *, layer_kind: str, cache, t,
                            scale=_scale(cfg),
                            window=window, softcap=cfg.attn_logit_softcap,
                            ring=window is not None)
-    y = out.reshape(x.shape[0], 1, -1) @ p["wo"].astype(cdtype(cfg))
+    # same head-gather-before-wo rule as the clustered path (see above)
+    out_flat = annotate(out.reshape(x.shape[0], 1, -1), "batch", "seq", None)
+    y = out_flat @ p["wo"].astype(cdtype(cfg))
     return y, new_cache
 
 

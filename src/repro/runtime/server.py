@@ -17,18 +17,23 @@ fused Pallas ``clustered_decode`` kernel (interpret-mode on CPU).
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import math
 import time
 from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import kv_compress
 from repro.core.request_cluster import BatchPlan, Request, plan_batches, plan_fifo
 from repro.models import transformer as tfm
 from repro.models.config import ModelConfig
+from repro.sharding import (Rules, constrain_cache, default_table,
+                            shard_cache, use_rules)
 
 
 @dataclasses.dataclass
@@ -49,6 +54,13 @@ class ServerConfig:
     kv_compress: Optional[kv_compress.KVCompressConfig] = None
     # when set, the engine serves from a clustered KV cache end to end and
     # re-compacts every kv_compress.refresh decode steps
+    mesh: Optional[Mesh] = None
+    # (data, model) device mesh (launch/mesh.make_serving_mesh): decode
+    # slots + their KV caches partition over "data", attention heads (and
+    # the fused Pallas clustered_decode grid) over "model".  Model code
+    # stays mesh-free — sharding/rules.py logical-axis annotations resolve
+    # against this mesh during tracing, and a shard_map island dispatches
+    # the Pallas kernel per model shard.  None = single-device engine.
 
 
 @dataclasses.dataclass
@@ -72,7 +84,6 @@ class Server:
     def __init__(self, cfg: ModelConfig, scfg: ServerConfig, params):
         self.cfg = cfg
         self.scfg = scfg
-        self.params = params
         if scfg.kv_compress is not None:
             if scfg.engine != "continuous":
                 raise ValueError(
@@ -83,6 +94,22 @@ class Server:
                     "continuous serving with kv_compress needs "
                     "refresh_every >= 1 (ring entries must reach "
                     "centroids before eviction)")
+        self._rules: Optional[Rules] = None
+        self._n_data_shards = 1
+        if scfg.mesh is not None:
+            if scfg.engine != "continuous":
+                raise ValueError("mesh serving requires the continuous "
+                                 "engine (static batches are per-device)")
+            mesh = scfg.mesh
+            self._rules = Rules(mesh, default_table("pod" in mesh.axis_names))
+            # replicate params across the mesh; annotations shard the
+            # per-head compute, GSPMD propagation does the rest
+            params = jax.device_put(params, NamedSharding(mesh, P()))
+            axes = self._rules.axes_for("batch", scfg.batch_size)
+            if axes:
+                self._n_data_shards = math.prod(
+                    mesh.shape[a] for a in axes)
+        self.params = params
         self.last_stats: Dict[str, float] = {}
         # bucket-padded prefill is only exact for global attention (causal
         # mask + masked decode); sliding-window rings and SSM/RG-LRU state
@@ -90,14 +117,38 @@ class Server:
         self._bucket = (1 if set(cfg.layer_pattern) & set("LMR")
                         else scfg.prefill_bucket)
         self._compact_templates: Dict[tuple, object] = {}
-        self._decode = jax.jit(
-            lambda c, tk, t: tfm.decode_step(params, cfg, c, tk, t))
-        self._prefill = jax.jit(
-            lambda tk, lp: tfm.prefill(params, cfg, tk,
-                                       max_seq=scfg.max_seq, last_pos=lp))
+
+        def _ctx():
+            return (use_rules(self._rules) if self._rules is not None
+                    else contextlib.nullcontext())
+
+        def _decode_fn(c, tk, t):
+            with _ctx():
+                logits, c2 = tfm.decode_step(self.params, cfg, c, tk, t)
+                return logits, self._constrain(c2)
+
+        def _prefill_fn(tk, lp):
+            with _ctx():
+                return tfm.prefill(self.params, cfg, tk,
+                                   max_seq=scfg.max_seq, last_pos=lp)
+
+        def _write_slot_fn(dst, src, j):
+            with _ctx():
+                return self._constrain(self._write_slot_impl(dst, src, j))
+
+        self._decode = jax.jit(_decode_fn)
+        self._prefill = jax.jit(_prefill_fn)
         # donate the engine cache: admission updates one slot in place
         # instead of copying every layer's KV
-        self._write_slot = jax.jit(self._write_slot_impl, donate_argnums=(0,))
+        self._write_slot = jax.jit(_write_slot_fn, donate_argnums=(0,))
+
+    def _constrain(self, cache):
+        """Pin engine-cache leaves to their mesh layout inside traced fns
+        (slots over data, kv heads over model) so decode/admission outputs
+        keep stable shardings across steps."""
+        if self._rules is None:
+            return cache
+        return constrain_cache(cache, self._rules)
 
     # ------------------------------------------------------------------
     # entry
@@ -137,6 +188,10 @@ class Server:
             kv_mode="clustered" if ccfg else "exact",
             kv_clusters=ccfg.n_clusters if ccfg else 512,
             kv_tail=ccfg.keep_recent if ccfg else 256)
+        if self._rules is not None:
+            # slot state becomes mesh-sharded arrays: slots over the data
+            # axis, kv heads over model (divisibility-aware per leaf)
+            cache = shard_cache(cache, self._rules)
 
         pos = np.zeros(n, np.int32)       # cache valid length per slot
         cur = np.zeros(n, np.int32)       # pending (unfed) token per slot
@@ -149,35 +204,70 @@ class Server:
         pad_toks = useful_toks = 0
         since_compact = 0
         dec_s = 0.0
+        # data-shard bookkeeping: NamedSharding partitions the slot axis
+        # contiguously, so slot j lives on data shard j // (n // shards).
+        # Admission fills the emptiest shard first and the per-step waste
+        # is tracked per shard — a fully drained shard shows up as 100%
+        # waste there (per-request early exit stays host-masked; SPMD can't
+        # drop one shard from the launch, but a balanced fill drains shards
+        # evenly so the tail of the stream wastes as little as possible).
+        shards = self._n_data_shards
+        per_shard = max(n // max(shards, 1), 1)
+        shard_of = lambda j: min(j // per_shard, shards - 1)  # noqa: E731
+        shard_busy_steps = np.zeros(max(shards, 1), np.int64)
+        shard_steps = 0
+
+        def _pick_slot():
+            """Next slot to admit into: the emptiest data shard's lowest
+            free slot (occupancy recomputed per admission, so a burst of
+            admissions spreads across shards instead of piling into the
+            first one); plain lowest-free-slot off-mesh."""
+            free = [j for j in range(n) if not active[j]]
+            if not free:
+                return None
+            if shards <= 1:
+                return free[0]
+            occ = np.zeros(shards, np.int32)
+            for j in range(n):
+                if active[j]:
+                    occ[shard_of(j)] += 1
+            return min(free, key=lambda j: (occ[shard_of(j)], j))
 
         while True:
-            for j in range(n):
-                while not active[j] and qi < len(order):
-                    uid = order[qi]
-                    qi += 1
-                    r = by_uid[uid]
-                    p = np.asarray(prompts[uid], np.int32)[-scfg.max_seq:]
-                    plen = len(p)
-                    bucket = min(scfg.max_seq,
-                                 -(-plen // self._bucket) * self._bucket)
-                    padded = np.zeros((1, bucket), np.int32)
-                    padded[0, :plen] = p
-                    t0 = time.perf_counter()
-                    logits1, c1 = self._prefill(jnp.asarray(padded),
-                                                jnp.int32(plen - 1))
-                    first = int(jnp.argmax(logits1, -1)[0])
-                    pre_ms[uid] = (time.perf_counter() - t0) * 1e3
-                    toks[uid] = [first]
-                    pad_toks += bucket - plen
-                    useful_toks += plen
-                    if r.max_new_tokens <= 1:
-                        continue       # done at prefill; slot stays free
-                    if ccfg is not None:
-                        c1 = self._clusterize(c1, cache, plen, ccfg)
-                    cache = self._write_slot(cache, c1, jnp.int32(j))
-                    cur[j], pos[j] = first, plen
-                    active[j] = True
-                    slot_uid[j] = uid
+            while qi < len(order):
+                j = _pick_slot()
+                if j is None:
+                    break
+                uid = order[qi]
+                qi += 1
+                r = by_uid[uid]
+                p = np.asarray(prompts[uid], np.int32)[-scfg.max_seq:]
+                plen = len(p)
+                bucket = min(scfg.max_seq,
+                             -(-plen // self._bucket) * self._bucket)
+                padded = np.zeros((1, bucket), np.int32)
+                padded[0, :plen] = p
+                t0 = time.perf_counter()
+                logits1, c1 = self._prefill(jnp.asarray(padded),
+                                            jnp.int32(plen - 1))
+                first = int(jnp.argmax(logits1, -1)[0])
+                pre_ms[uid] = (time.perf_counter() - t0) * 1e3
+                toks[uid] = [first]
+                pad_toks += bucket - plen
+                useful_toks += plen
+                if r.max_new_tokens <= 1:
+                    continue           # done at prefill; slot stays free
+                if ccfg is not None:
+                    c1 = self._clusterize(c1, cache, plen, ccfg)
+                if self._rules is not None:
+                    # admission: replicate the request cache across the
+                    # mesh so the sharded slot-write is a local scatter
+                    c1 = jax.device_put(
+                        c1, NamedSharding(self._rules.mesh, P()))
+                cache = self._write_slot(cache, c1, jnp.int32(j))
+                cur[j], pos[j] = first, plen
+                active[j] = True
+                slot_uid[j] = uid
             if not active.any():
                 break
 
@@ -189,6 +279,11 @@ class Server:
             decode_steps += 1
             wasted_slots += int((~active).sum())
             since_compact += 1
+            if shards > 1:
+                shard_steps += 1
+                for j in range(n):
+                    if active[j]:
+                        shard_busy_steps[shard_of(j)] += 1
 
             for j in range(n):
                 if not active[j]:
@@ -204,6 +299,11 @@ class Server:
                     and active.any()):
                 lengths = np.where(active, pos, 0).astype(np.int32)
                 cache = self.compact_kv(cache, lengths, ccfg)
+                if self._rules is not None:
+                    # eviction/compaction rebuilt the clustered leaves
+                    # outside the constrained decode jit — put them back
+                    # on their mesh layout before the next step
+                    cache = shard_cache(cache, self._rules)
                 since_compact = 0
 
         gen_total = sum(len(v) for v in toks.values())
@@ -219,6 +319,12 @@ class Server:
             "decode_s": dec_s,
             "tokens_per_s": dec_tokens / max(dec_s, 1e-9),
         }
+        if shards > 1:
+            self.last_stats["n_data_shards"] = float(shards)
+            for s in range(shards):
+                self.last_stats[f"slot_waste_shard{s}"] = (
+                    1.0 - shard_busy_steps[s] / (shard_steps * per_shard)
+                    if shard_steps else 0.0)
         return [Completion(uid=r.uid, tokens=toks[r.uid],
                            prefill_ms=pre_ms[r.uid],
                            decode_ms=dec_ms_tok * len(toks[r.uid]))

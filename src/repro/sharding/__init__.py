@@ -1,4 +1,5 @@
-from repro.sharding.rules import (Rules, annotate, annotate_prio,
-                                  current_rules, default_table, param_spec,
+from repro.sharding.rules import (Rules, annotate, annotate_prio, cache_spec,
+                                  constrain_cache, current_rules,
+                                  default_table, param_spec, shard_cache,
                                   shardings_from_specs, tree_param_specs,
                                   use_rules)  # noqa: F401

@@ -235,6 +235,83 @@ def param_spec(path: str, shape: Sequence[int], rules: Rules) -> P:
     return P(*final)
 
 
+# ---------------------------------------------------------------------------
+# Serving-cache partition specs (name-based, like params)
+# ---------------------------------------------------------------------------
+
+# KV-cache leaf name -> head-axis position counted from the END of the shape
+_CACHE_HEAD_AXIS = {
+    "k": 2, "v": 2,                                   # (…, S, H, Dh)
+    "k_cents": 2, "v_cents": 2,                       # (…, C, H, Dh)
+    "k_tail": 2, "v_tail": 2,                         # (…, R, H, Dh)
+    "counts": 1,                                      # (…, C, H)
+}
+
+
+def cache_spec(path: str, shape: Sequence[int], rules: Rules) -> P:
+    """Partition spec for one serving-cache leaf.
+
+    Decode slots (the engine batch axis — axis 0, or axis 1 under the
+    scan-stacked leading layer dim) partition over the rules' ``batch``
+    mesh axes; KV head dims partition over the model axis.  Divisibility-
+    aware like ``param_spec``: a dim that doesn't divide is replicated, so
+    small models on big meshes degrade to partial parallelism instead of
+    crashing.  Non-KV state (MLA latents, SSM/RG-LRU state, int8 scales)
+    gets slot sharding only.
+    """
+    parts = path.split("/")
+    name = parts[-1]
+    stacked = parts[0] == "scan"
+    dims: list = [None] * len(shape)
+    used: set = set()
+
+    def put(axis_pos: int, logical: str):
+        if not 0 <= axis_pos < len(shape):
+            return
+        res = rules.axes_for(logical, shape[axis_pos])
+        tup = (res,) if isinstance(res, str) else tuple(res or ())
+        if tup and not any(a in used for a in tup):
+            used.update(tup)
+            dims[axis_pos] = res
+
+    if name in ("k_scale", "v_scale"):                # (…, H) — no slot dim
+        put(len(shape) - 1, "kv_heads")
+        return P(*dims)
+    put(1 if stacked else 0, "batch")
+    head_off = _CACHE_HEAD_AXIS.get(name)
+    if head_off is not None and len(shape) - head_off > (1 if stacked else 0):
+        put(len(shape) - head_off, "kv_heads")
+    return P(*dims)
+
+
+def _leaf_path(kp) -> str:
+    return "/".join(_key_str(k) for k in kp)
+
+
+def shard_cache(cache, rules: Rules):
+    """Place a serving cache onto the rules' mesh (host side: engine init
+    and post-compaction re-placement use ``jax.device_put``)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    placed = [
+        jax.device_put(leaf, NamedSharding(
+            rules.mesh, cache_spec(_leaf_path(kp), leaf.shape, rules)))
+        for kp, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, placed)
+
+
+def constrain_cache(cache, rules: Rules):
+    """``with_sharding_constraint`` twin of ``shard_cache`` for use inside
+    traced functions (decode / slot-write outputs keep stable layouts)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = [
+        jax.lax.with_sharding_constraint(leaf, NamedSharding(
+            rules.mesh, cache_spec(_leaf_path(kp), leaf.shape, rules)))
+        for kp, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 def tree_param_specs(params, rules: Rules):
     """PartitionSpec pytree for a parameter pytree (path-aware)."""
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)

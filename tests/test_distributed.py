@@ -7,24 +7,9 @@ counts, the paper's interconnection reduction tree — matches the
 single-device result exactly.
 """
 
-import os
-import subprocess
-import sys
-import textwrap
-
 import pytest
 
-REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def run_sub(code: str):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.path.join(REPO, "src")
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, env=env, timeout=560)
-    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
-    return out.stdout
+from _subproc import run_sub
 
 
 @pytest.mark.slow
@@ -99,6 +84,54 @@ def test_distributed_kmedians_fit_matches_single_device():
         np.testing.assert_array_equal(np.asarray(rd.assign),
                                       np.asarray(rs.assign))
         print("distributed k-medians OK")
+    """)
+
+
+@pytest.mark.slow
+def test_distributed_weighted_compress_head_matches_single_device():
+    """kv_compress.compress_head(axis_name=...) — the psum-consistent
+    weighted k-medians used when recompaction points span a mesh axis —
+    must produce the single-device centroids/value-sums/counts exactly
+    (per-bit vote psum + value/count psum, warm-started init)."""
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, PartitionSpec as P
+        try:
+            from jax import shard_map
+        except ImportError:  # jax < 0.5: experimental namespace
+            from jax.experimental.shard_map import shard_map
+        from repro.core import kv_compress
+
+        rng = np.random.default_rng(2)
+        S, Dh, C = 128, 16, 8
+        keys = jnp.asarray(rng.normal(size=(S, Dh)), jnp.float32)
+        vals = jnp.asarray(rng.normal(size=(S, Dh)), jnp.float32)
+        # mixed weights: masked rows (0) and pre-aggregated summaries (>1)
+        w = jnp.asarray(((rng.random(S) < 0.8)
+                         * rng.integers(1, 4, size=S)).astype(np.float32))
+        cfg = kv_compress.KVCompressConfig(n_clusters=C, iters=6,
+                                           keep_recent=16)
+        init = keys[:C]
+
+        mesh = Mesh(np.array(jax.devices()).reshape(8), ("model",))
+        f = shard_map(
+            lambda kk, vv, ww, ii: kv_compress.compress_head(
+                kk, vv, cfg, weights=ww, init_centroids=ii,
+                axis_name="model"),
+            mesh=mesh,
+            in_specs=(P("model", None), P("model", None), P("model"), P()),
+            out_specs=(P(), P(), P()),
+        )
+        kc_d, vc_d, cnt_d = jax.jit(f)(keys, vals, w, init)
+        kc_s, vc_s, cnt_s = kv_compress.compress_head(
+            keys, vals, cfg, weights=w, init_centroids=init)
+        np.testing.assert_allclose(np.asarray(kc_d), np.asarray(kc_s),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(vc_d), np.asarray(vc_s),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(cnt_d), np.asarray(cnt_s),
+                                   rtol=1e-5)
+        print("distributed weighted compress_head OK")
     """)
 
 

@@ -141,3 +141,56 @@ class TestFlashDecodeKernel:
         want = decode_attention(q, k, v, t=50, scale=0.25, softcap=20.0)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=3e-4, atol=3e-4)
+
+
+class TestInterpretFallback:
+    """``ops.interpret_default`` is the single backend-detection point for
+    every Pallas wrapper; on the CPU backend it must flip all of them into
+    interpret mode (a Mosaic attempt would fail outright here)."""
+
+    def test_detects_cpu(self):
+        assert jax.default_backend() != "tpu"  # this container's contract
+        assert ops.interpret_default() is True
+
+    def test_clustered_decode_resolves_none_via_helper(self):
+        """interpret=None (the default) must run on CPU — i.e. the kernel
+        module resolved it through the shared helper — and match an
+        explicit interpret=True call bit-for-bit."""
+        from repro.kernels.clustered_decode import clustered_decode_pallas
+        rng = np.random.default_rng(3)
+        b, c, r, hq, hkv, dh = 2, 4, 8, 4, 2, 16
+        args = (
+            jnp.asarray(rng.normal(size=(b, hq, dh)), jnp.float32),
+            jnp.asarray(rng.normal(size=(b, c, hkv, dh)), jnp.float32),
+            jnp.asarray(rng.normal(size=(b, c, hkv, dh)), jnp.float32),
+            jnp.asarray(rng.uniform(1, 4, size=(b, c, hkv)), jnp.float32),
+            jnp.asarray(rng.normal(size=(b, r, hkv, dh)), jnp.float32),
+            jnp.asarray(rng.normal(size=(b, r, hkv, dh)), jnp.float32),
+            jnp.asarray([6, 7], jnp.int32),
+            jnp.asarray([2, 3], jnp.int32),
+        )
+        auto = clustered_decode_pallas(*args, scale=dh**-0.5)
+        explicit = clustered_decode_pallas(*args, scale=dh**-0.5,
+                                           interpret=True)
+        np.testing.assert_array_equal(np.asarray(auto), np.asarray(explicit))
+
+    def test_ops_wrapper_uses_fallback_on_cpu(self):
+        """The jitted ops.clustered_decode path (interpret resolved by the
+        helper) executes on CPU and matches the direct kernel call."""
+        from repro.kernels.clustered_decode import clustered_decode_pallas
+        rng = np.random.default_rng(4)
+        b, c, r, hq, hkv, dh = 1, 4, 8, 2, 1, 8
+        args = (
+            jnp.asarray(rng.normal(size=(b, hq, dh)), jnp.float32),
+            jnp.asarray(rng.normal(size=(b, c, hkv, dh)), jnp.float32),
+            jnp.asarray(rng.normal(size=(b, c, hkv, dh)), jnp.float32),
+            jnp.asarray(rng.uniform(1, 4, size=(b, c, hkv)), jnp.float32),
+            jnp.asarray(rng.normal(size=(b, r, hkv, dh)), jnp.float32),
+            jnp.asarray(rng.normal(size=(b, r, hkv, dh)), jnp.float32),
+            jnp.asarray([5], jnp.int32),
+            jnp.asarray([1], jnp.int32),
+        )
+        got = ops.clustered_decode(*args, scale=dh**-0.5)
+        want = clustered_decode_pallas(*args, scale=dh**-0.5, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)

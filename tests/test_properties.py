@@ -10,7 +10,8 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import bitserial, clustering, grad_compress, quantizer
+from repro.core import bitserial, clustering, grad_compress, kv_compress, \
+    quantizer
 from repro.core.clustering import ClusterConfig
 from repro.core.request_cluster import Request, plan_batches
 from repro.models.attention import ring_slot_positions
@@ -131,6 +132,93 @@ class TestRingBuffer:
         live = pos[(pos >= 0) & (pos < t)]
         expect = np.arange(max(0, t - size), t)
         np.testing.assert_array_equal(np.sort(live), expect)
+
+
+class TestCoverageFrontier:
+    """Invariants of the clustered-KV coverage frontier (``cov``) and the
+    incremental re-compaction, under random lengths / centroid budgets /
+    head counts.  Shapes come from a small sampled set so jit retraces
+    stay bounded; lengths and refresh intervals are fully random.
+    Sampled (S, C, R, H) = cache length, centroid budget, ring, heads."""
+
+    @staticmethod
+    def _mass_equals_cov(cc):
+        h = np.asarray(cc["counts"]).shape[2]
+        mass = np.asarray(cc["counts"]).sum(axis=(1, 2))
+        np.testing.assert_allclose(mass, np.asarray(cc["cov"]) * h,
+                                   rtol=1e-5, atol=1e-3)
+
+    @staticmethod
+    def _no_uncovered_eviction(cc, lengths, r, refresh):
+        """Every position < t is represented exactly once (centroids below
+        ``cov``, ring at [cov, t)), and positions the ring will evict
+        within the next ``refresh`` decode steps are already covered."""
+        cov = np.asarray(cc["cov"])
+        t = np.asarray(lengths)
+        assert (cov <= t).all(), (cov, t)
+        assert (cov >= t - r).all(), "ring no longer holds an uncovered token"
+        ring_pos = np.asarray(kv_compress.ring_positions(r, jnp.asarray(t)))
+        live = (ring_pos >= cov[:, None]) & (ring_pos >= 0) \
+            & (ring_pos < t[:, None])
+        np.testing.assert_array_equal(live.sum(1), t - cov)  # exact partition
+        evict_horizon = t + refresh - r  # deepest eviction before next pass
+        assert ((cov >= evict_horizon) | (evict_horizon <= 0)).all(), \
+            "a token would be evicted before a compaction covers it"
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.sampled_from([(48, 4, 8, 1), (64, 6, 16, 2), (80, 8, 16, 4)]),
+           st.sampled_from(["1", "half", "full"]),
+           st.integers(0, 10_000))
+    def test_compress_and_recompact_conserve_and_cover(self, shape, rmode,
+                                                       seed):
+        S, C, R, H = shape
+        refresh = {"1": 1, "half": max(R // 2, 1), "full": R}[rmode]
+        rng = np.random.default_rng(seed)
+        cfg = kv_compress.KVCompressConfig(n_clusters=C, iters=2,
+                                           keep_recent=R,
+                                           refresh_every=refresh)
+        B = 2
+        lengths = rng.integers(1, S + 1, size=B).astype(np.int32)
+        k = jnp.asarray(rng.normal(size=(B, S, H, 8)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, S, H, 8)), jnp.float32)
+        cc = kv_compress.compress_cache_batched(k, v, jnp.asarray(lengths),
+                                               cfg)
+        r = min(R, S)
+        self._mass_equals_cov(cc)
+        self._no_uncovered_eviction(cc, lengths, r, cfg.refresh)
+
+        # stream forward: advance each slot by <= refresh steps (the
+        # engine's guarantee between compactions) and re-compact; the
+        # frontier must stay monotone, conserve mass, and keep every
+        # soon-to-be-evicted ring token covered
+        for _ in range(3):
+            adv = rng.integers(0, cfg.refresh + 1, size=B).astype(np.int32)
+            lengths = lengths + adv
+            prev_cov = np.asarray(cc["cov"])
+            cc = kv_compress.recompact_clustered(cc, jnp.asarray(lengths),
+                                                 cfg)
+            assert (np.asarray(cc["cov"]) >= prev_cov).all()
+            self._mass_equals_cov(cc)
+            self._no_uncovered_eviction(cc, lengths, r, cfg.refresh)
+
+    @settings(max_examples=6, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_drained_slot_frontier_never_regresses(self, seed):
+        """The engine passes length 0 for finished slots; their frontier
+        (and mass) must hold steady instead of resetting."""
+        rng = np.random.default_rng(seed)
+        cfg = kv_compress.KVCompressConfig(n_clusters=4, iters=2,
+                                           keep_recent=8, refresh_every=4)
+        k = jnp.asarray(rng.normal(size=(2, 48, 2, 8)), jnp.float32)
+        lengths = jnp.asarray([40, 32], jnp.int32)
+        cc = kv_compress.compress_cache_batched(k, k, lengths, cfg)
+        cov0 = np.asarray(cc["cov"])
+        cc2 = kv_compress.recompact_clustered(
+            cc, jnp.asarray([44, 0], jnp.int32), cfg)
+        cov2 = np.asarray(cc2["cov"])
+        assert cov2[1] == cov0[1], "drained slot must keep its frontier"
+        assert cov2[0] >= cov0[0]
+        self._mass_equals_cov(cc2)
 
 
 class TestGradCompressProperties:
