@@ -138,6 +138,45 @@ def init_kmeanspp(rng, x, k: int, metric: str = "l2", weights=None):
 # ---------------------------------------------------------------------------
 
 
+def seed_empty_centroids(x, cents, live, metric: str, weights=None):
+    """Deterministically re-seed dead centroid rows by greedy farthest-point
+    (maximin) selection over the weighted point set.
+
+    ``cents`` (K, D) is a warm-start bank; rows with ``live`` False (e.g.
+    count == 0) are replaced one at a time by the point farthest from every
+    centroid placed so far (k-means++ with argmax instead of sampling, so
+    the result is reproducible without threading RNG through the serving
+    engine).  Live rows keep their values and shape the distance field.
+    Zero-weight points (padding / masked ring slots) are never chosen.
+
+    Needed by streaming admission (kv_compress.absorb_chunk): the first
+    chunk of a request arrives with an all-zero centroid bank, and warm-
+    starting Lloyd from K identical zero rows collapses every point into
+    one cluster.  jit-compatible (fori_loop over K rows).
+    """
+    n, _ = x.shape
+    k = cents.shape[0]
+    w = (jnp.ones((n,), jnp.float32) if weights is None
+         else weights.astype(jnp.float32))
+    dist0 = pairwise_dist(x, cents, metric)               # (n, K)
+    mind = jnp.min(jnp.where(live[None, :], dist0, jnp.inf), axis=1)
+    # no live row yet → flat field: the first dead row takes the first
+    # positively-weighted point, the rest spread by maximin from there
+    mind = jnp.where(jnp.isfinite(mind), mind, 1.0)
+
+    def body(i, carry):
+        cents, mind = carry
+        score = jnp.where(w > 0, mind, -1.0)
+        c_new = x[jnp.argmax(score)]
+        c_i = jnp.where(live[i], cents[i], c_new)
+        cents = cents.at[i].set(c_i)
+        d_new = pairwise_dist(x, c_i[None, :], metric)[:, 0]
+        return cents, jnp.minimum(mind, d_new)
+
+    cents, _ = jax.lax.fori_loop(0, k, body, (cents, mind))
+    return cents
+
+
 def update_mean(x, assign, k: int, prev, *, weights=None,
                 axis_name: Optional[str] = None):
     """Weighted mean centroids; mirrors ``update_median``'s signature so the

@@ -39,10 +39,20 @@ class KVCompressConfig:
                               # t - keep_recent + refresh_every so every ring
                               # entry is folded into centroids before the
                               # next refresh_every decode steps evict it.
+    prompt_clusters: int = 0  # chunked admission: centroid budget while a
+                              # prompt streams in (absorb_chunk touches only
+                              # the first ``prompt_clusters`` rows; 0 = the
+                              # full n_clusters budget).  Keeps prompt-time
+                              # Lloyd cheap; the first regular compaction
+                              # after admission spreads mass over all rows.
 
     @property
     def refresh(self) -> int:
         return min(self.refresh_every, self.keep_recent)
+
+    @property
+    def prompt_budget(self) -> int:
+        return self.prompt_clusters or self.n_clusters
 
 
 class CompressedKV(NamedTuple):
@@ -230,6 +240,90 @@ def recompact_clustered(cache, lengths, cfg: KVCompressConfig,
         k_cents=nk.transpose(0, 2, 1, 3).astype(cache["k_cents"].dtype),
         v_cents=nv.transpose(0, 2, 1, 3).astype(cache["v_cents"].dtype),
         counts=ncnt.transpose(0, 2, 1),
+        cov=new_cov.astype(jnp.int32),
+    )
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def absorb_chunk(cache, lengths, target_cov, cfg: KVCompressConfig):
+    """Streaming admission-time compaction: advance a slot's coverage
+    frontier to ``target_cov`` by folding the ring entries aged past it
+    into centroids — the one-pass stream-clustering update that lets a
+    prompt longer than the tail ring be admitted chunk by chunk without
+    ever materializing its exact KV.
+
+    Differences from ``recompact_clustered`` (the between-decode-bursts
+    refresh):
+
+      * the frontier target is caller-chosen (the engine asks for exactly
+        enough coverage that the next prompt chunk can overwrite ring
+        slots safely), not derived from ``refresh_every``;
+      * only the first ``cfg.prompt_budget`` centroid rows are written —
+        the per-request prompt-time centroid budget.  All rows still
+        participate as weighted points, so any mass outside the budget is
+        migrated in, never dropped (total counts == new_cov per head);
+      * dead centroid rows are deterministically re-seeded by farthest-
+        point selection (clustering.seed_empty_centroids) before the
+        warm-started weighted k-medians — the first absorbed chunk of a
+        request starts from an all-zero bank.
+
+    cache: clustered slot leaves (B, ...); lengths (B,) ring positions
+    written so far; target_cov (B,) desired frontier (clipped to
+    [cov, lengths]).  Slots with target_cov <= cov keep centroid rows
+    bit-identical (their ring contributes zero weight and the warm start
+    is only reseeded where counts are zero).
+    """
+    budget = cfg.prompt_budget
+    k_cents = cache["k_cents"].astype(jnp.float32)     # (B, C, H, Dh)
+    v_cents = cache["v_cents"].astype(jnp.float32)
+    counts = cache["counts"]                           # (B, C, H)
+    k_tail = cache["k_tail"].astype(jnp.float32)       # (B, R, H, Dh)
+    v_tail = cache["v_tail"].astype(jnp.float32)
+    cov = cache["cov"]                                 # (B,)
+    b, c, h, dh = k_cents.shape
+    r = k_tail.shape[1]
+    lengths = jnp.asarray(lengths)
+    new_cov = jnp.clip(jnp.maximum(cov, jnp.asarray(target_cov)), 0, lengths)
+
+    ring_pos = ring_positions(r, lengths)              # (B, R)
+    w_tail = ((ring_pos >= cov[:, None])
+              & (ring_pos < new_cov[:, None])).astype(jnp.float32)
+    bcfg = dataclasses.replace(cfg, n_clusters=budget)
+
+    def one_head(kc, vc, cnt, kt, vt, wt, fresh):
+        x = jnp.concatenate([kc, kt], axis=0)          # (C + R, Dh)
+        vals = jnp.concatenate([vc, vt], axis=0)
+        wgt = jnp.concatenate([cnt, wt], axis=0)
+        init = clustering.seed_empty_centroids(
+            x, kc[:budget], cnt[:budget] > 0, cfg.metric,
+            weights=wgt * fresh)
+        nk, nv, ncnt = compress_head(x, vals, bcfg, weights=wgt,
+                                     init_centroids=init)
+        return (kc.at[:budget].set(nk), vc.at[:budget].set(nv),
+                jnp.concatenate([ncnt, jnp.zeros((c - budget,),
+                                                 ncnt.dtype)]))
+
+    def one_slot(kc, vc, cnt, kt, vt, wt, fresh):
+        return jax.vmap(lambda *a: one_head(*a, wt, fresh))(
+            kc.transpose(1, 0, 2), vc.transpose(1, 0, 2), cnt.T,
+            kt.transpose(1, 0, 2), vt.transpose(1, 0, 2))
+
+    # fresh gates the seeding pool so unchanged slots can't be perturbed
+    # even by reseeding a zero-count row onto a live point
+    fresh = (new_cov > cov).astype(jnp.float32)
+    nk, nv, ncnt = jax.vmap(one_slot)(k_cents, v_cents, counts,
+                                      k_tail, v_tail, w_tail, fresh)
+    changed = (new_cov > cov)[:, None, None]
+    out_counts = jnp.where(changed, ncnt.transpose(0, 2, 1), counts)
+    return dict(
+        cache,
+        k_cents=jnp.where(changed[..., None], nk.transpose(0, 2, 1, 3),
+                          cache["k_cents"].astype(jnp.float32)
+                          ).astype(cache["k_cents"].dtype),
+        v_cents=jnp.where(changed[..., None], nv.transpose(0, 2, 1, 3),
+                          cache["v_cents"].astype(jnp.float32)
+                          ).astype(cache["v_cents"].dtype),
+        counts=out_counts,
         cov=new_cov.astype(jnp.int32),
     )
 

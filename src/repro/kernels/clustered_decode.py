@@ -1,28 +1,39 @@
-"""Pallas TPU kernel: fused clustered-KV decode attention.
+"""Pallas TPU kernel: fused clustered-KV decode attention, mixed-mode.
 
-One-token attention over [median centroids ⊕ exact tail ring] — the
-clustered-attention estimator of the paper's memory manager — in a single
+Attention over [median centroids ⊕ exact tail ring] — the clustered-
+attention estimator of the paper's memory manager — in a single
 VMEM-resident pass per (batch, kv-head) grid instance:
 
   * centroid logits get the +log(count) bias (a centroid standing for m
     keys receives the softmax mass of m identical-score keys); empty
     clusters (count == 0) are masked,
-  * tail logits are masked by ring validity (position in [cov, t]; the
+  * tail logits are masked by ring validity (position in [cov, qpos]; the
     positions below ``cov`` are already summarized by centroids, so the
     partition is exact — nothing double-counted, nothing lost),
   * one joint softmax over the concatenated score row and two MXU
     combines against v_cents / v_tail.
 
-Per-slot ``t`` / ``cov`` vectors come in through SMEM, so a continuous
-batcher with slots at different depths runs in the same launch.
+**Mixed-mode launch** (chunked prefill interleaved with decode): every
+slot carries up to L query rows.  Decode slots use one row (their next
+token); a slot admitting a prompt carries a whole chunk whose K/V were
+written into its tail ring *before* the launch, so intra-chunk causal
+attention falls out of the same ring mask — query row i (absolute
+position t + i) sees ring positions < t + i + 1.  Per-slot ``t`` /
+``cov`` / ``chunk_len`` vectors come in through SMEM, so decode slots at
+different depths and an in-flight prefill chunk score in one launch.
+Caller invariant: the chunk's pre-write overwrites ring positions
+t+i-R, so ``cov >= t + chunk_len - R`` must hold (the engine's
+absorb_chunk pre-pass guarantees it) — the overwritten positions are
+then summarized by centroids and nothing is lost.
 
 Layout (grid = (B, Hkv)):
-  t, cov   (1,)  SMEM  — this slot's valid length / centroid coverage
-  q        (1, 1, G, Dh)   VMEM  — this kv-head's query group
-  k_cents  (1, C, 1, Dh)   VMEM     v_cents same
-  counts   (1, 1, C)       VMEM  — pre-transposed (B, Hkv, C)
-  k_tail   (1, R, 1, Dh)   VMEM     v_tail same (ring order)
-  out      (1, 1, G, Dh)
+  t, cov, chunk_len  (1,)  SMEM  — slot valid length / coverage / rows
+  q        (1, 1, L, G, Dh)  VMEM  — this kv-head's query rows
+  k_cents  (1, C, 1, Dh)     VMEM     v_cents same
+  counts   (1, 1, C)         VMEM  — pre-transposed (B, Hkv, C)
+  k_tail   (1, R, 1, Dh)     VMEM     v_tail same (ring order, chunk
+                                      rows already written)
+  out      (1, 1, L, G, Dh)
 """
 
 from __future__ import annotations
@@ -53,51 +64,59 @@ _SHARD_MAP_NO_CHECK = (
 NEG = -1e30
 
 
-def _kernel(t_ref, cov_ref, q_ref, kc_ref, vc_ref, cnt_ref, kt_ref, vt_ref,
-            o_ref, *, r: int, scale: float, softcap):
+def _kernel(t_ref, cov_ref, len_ref, q_ref, kc_ref, vc_ref, cnt_ref, kt_ref,
+            vt_ref, o_ref, *, l: int, g: int, r: int, scale: float, softcap):
     t = t_ref[0]
     cov = cov_ref[0]
-    q = q_ref[0, 0].astype(jnp.float32)                  # (G, Dh)
-    kc = kc_ref[0, :, 0].astype(jnp.float32)             # (C, Dh)
+    cl = len_ref[0]
+    q = q_ref[0, 0].astype(jnp.float32).reshape(l * g, -1)   # (L*G, Dh)
+    kc = kc_ref[0, :, 0].astype(jnp.float32)                 # (C, Dh)
     vc = vc_ref[0, :, 0].astype(jnp.float32)
-    cnt = cnt_ref[0, 0].astype(jnp.float32)              # (C,)
-    kt = kt_ref[0, :, 0].astype(jnp.float32)             # (R, Dh)
+    cnt = cnt_ref[0, 0].astype(jnp.float32)                  # (C,)
+    kt = kt_ref[0, :, 0].astype(jnp.float32)                 # (R, Dh)
     vt = vt_ref[0, :, 0].astype(jnp.float32)
+
+    # query row i*g + j carries chunk index i → absolute position t + i
+    li = jax.lax.broadcasted_iota(jnp.int32, (l * g, 1), 0) // g
+    row_ok = li < cl
 
     s_c = jax.lax.dot_general(q, kc, (((1,), (1,)), ((), ())),
                               preferred_element_type=jnp.float32) * scale
     if softcap is not None:
         s_c = jnp.tanh(s_c / softcap) * softcap
-    cnt_row = cnt[None, :]                               # (1, C)
-    s_c = jnp.where(cnt_row > 0,
+    cnt_row = cnt[None, :]                                   # (1, C)
+    s_c = jnp.where((cnt_row > 0) & row_ok,
                     s_c + jnp.log(jnp.maximum(cnt_row, 1e-9)), NEG)
 
     s_t = jax.lax.dot_general(q, kt, (((1,), (1,)), ((), ())),
                               preferred_element_type=jnp.float32) * scale
     if softcap is not None:
         s_t = jnp.tanh(s_t / softcap) * softcap
-    # ring slot s holds position s while t+1 <= R, else the wrapped window
+    # chunk rows sit in the ring already: tw = t + cl entries total.  Ring
+    # slot s holds position s while tw <= R, else the wrapped window.
     sl = jax.lax.broadcasted_iota(jnp.int32, (1, r), 1)
-    tp1 = t + 1
-    wrapped = tp1 - r + jnp.mod(sl - tp1, r)
-    pos = jnp.where(tp1 <= r, sl, wrapped)
-    ok = (pos >= 0) & (pos < tp1) & (pos >= cov)
+    tw = t + cl
+    wrapped = tw - r + jnp.mod(sl - tw, r)
+    pos = jnp.where(tw <= r, sl, wrapped)                    # (1, R)
+    qpos = t + li                                            # (L*G, 1)
+    ok = (pos >= 0) & (pos < qpos + 1) & (pos >= cov) & row_ok
     s_t = jnp.where(ok, s_t, NEG)
 
     m = jnp.maximum(s_c.max(-1, keepdims=True), s_t.max(-1, keepdims=True))
     p_c = jnp.exp(s_c - m)
     p_t = jnp.exp(s_t - m)
-    l = p_c.sum(-1, keepdims=True) + p_t.sum(-1, keepdims=True)
+    lsum = p_c.sum(-1, keepdims=True) + p_t.sum(-1, keepdims=True)
     acc = (jax.lax.dot_general(p_c, vc, (((1,), (0,)), ((), ())),
                                preferred_element_type=jnp.float32)
            + jax.lax.dot_general(p_t, vt, (((1,), (0,)), ((), ())),
                                  preferred_element_type=jnp.float32))
-    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+    out = acc / jnp.maximum(lsum, 1e-30)
+    o_ref[0, 0] = out.reshape(l, g, -1).astype(o_ref.dtype)
 
 
 def clustered_decode_shardmap(q, k_cents, v_cents, counts, k_tail, v_tail,
-                              t, cov, *, mesh, data_axes, model_axes,
-                              scale: float, softcap=None,
+                              t, cov, chunk_len=None, *, mesh, data_axes,
+                              model_axes, scale: float, softcap=None,
                               interpret: bool = False):
     """Dispatch the Pallas kernel once per mesh shard.
 
@@ -109,18 +128,23 @@ def clustered_decode_shardmap(q, k_cents, v_cents, counts, k_tail, v_tail,
     ``data_axes`` / ``model_axes`` are the mesh axis tuples partitioning the
     batch / head dims (either may be None → replicated along that dim); the
     caller (kernels.ops) checks divisibility before choosing them.  t / cov
-    must already be (B,) vectors so they shard with the batch.
+    / chunk_len must already be (B,) vectors so they shard with the batch.
     """
     b = q.shape[0]
     t = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (b,))
     cov = jnp.broadcast_to(jnp.asarray(cov, jnp.int32), (b,))
+    if chunk_len is None:
+        chunk_len = jnp.ones((b,), jnp.int32)
+    chunk_len = jnp.broadcast_to(jnp.asarray(chunk_len, jnp.int32), (b,))
+    qspec = P(data_axes, model_axes, None) if q.ndim == 3 else \
+        P(data_axes, None, model_axes, None)
     d, m = data_axes, model_axes
     f = shard_map(
         functools.partial(clustered_decode_pallas, scale=scale,
                           softcap=softcap, interpret=interpret),
         mesh=mesh,
         in_specs=(
-            P(d, m, None),        # q        (B, Hq, Dh)
+            qspec,                # q        (B, [L,] Hq, Dh)
             P(d, None, m, None),  # k_cents  (B, C, Hkv, Dh)
             P(d, None, m, None),  # v_cents
             P(d, None, m),        # counts   (B, C, Hkv)
@@ -128,39 +152,51 @@ def clustered_decode_shardmap(q, k_cents, v_cents, counts, k_tail, v_tail,
             P(d, None, m, None),  # v_tail
             P(d),                 # t        (B,)
             P(d),                 # cov      (B,)
+            P(d),                 # chunk_len (B,)
         ),
-        out_specs=P(d, m, None),
+        out_specs=qspec,
         **_SHARD_MAP_NO_CHECK,
     )
-    return f(q, k_cents, v_cents, counts, k_tail, v_tail, t, cov)
+    return f(q, k_cents, v_cents, counts, k_tail, v_tail, t, cov, chunk_len)
 
 
 def clustered_decode_pallas(q, k_cents, v_cents, counts, k_tail, v_tail,
-                            t, cov, *, scale: float, softcap=None,
-                            interpret: bool | None = None):
-    """q (B, Hq, Dh); k/v_cents (B, C, Hkv, Dh); counts (B, C, Hkv);
-    k/v_tail (B, R, Hkv, Dh) ring-ordered; t, cov (B,) int32
-    → (B, Hq, Dh)."""
+                            t, cov, chunk_len=None, *, scale: float,
+                            softcap=None, interpret: bool | None = None):
+    """q (B, Hq, Dh) decode form, or (B, L, Hq, Dh) mixed form with
+    per-slot ``chunk_len`` (B,) valid rows; k/v_cents (B, C, Hkv, Dh);
+    counts (B, C, Hkv); k/v_tail (B, R, Hkv, Dh) ring-ordered with the
+    chunk rows already written; t, cov (B,) int32 → output shaped like q.
+    Rows at index >= chunk_len are fully masked and must be discarded by
+    the caller (their softmax is a degenerate uniform)."""
     if interpret is None:
         from repro.kernels.ops import interpret_default
         interpret = interpret_default()
-    b, hq, dh = q.shape
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]
+    b, l, hq, dh = q.shape
     c = k_cents.shape[1]
     r = k_tail.shape[1]
     hkv = k_cents.shape[2]
     g = hq // hkv
-    qh = q.reshape(b, hkv, g, dh)
+    qh = q.reshape(b, l, hkv, g, dh).transpose(0, 2, 1, 3, 4)
     cnt_t = counts.transpose(0, 2, 1)                    # (B, Hkv, C)
     t = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (b,))
     cov = jnp.broadcast_to(jnp.asarray(cov, jnp.int32), (b,))
+    if chunk_len is None:
+        chunk_len = jnp.ones((b,), jnp.int32)
+    chunk_len = jnp.broadcast_to(jnp.asarray(chunk_len, jnp.int32), (b,))
 
     out = pl.pallas_call(
-        functools.partial(_kernel, r=r, scale=scale, softcap=softcap),
+        functools.partial(_kernel, l=l, g=g, r=r, scale=scale,
+                          softcap=softcap),
         grid=(b, hkv),
         in_specs=[
             pl.BlockSpec((1,), lambda i, h: (i,), memory_space=pltpu.SMEM),
             pl.BlockSpec((1,), lambda i, h: (i,), memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, 1, g, dh), lambda i, h: (i, h, 0, 0),
+            pl.BlockSpec((1,), lambda i, h: (i,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, l, g, dh), lambda i, h: (i, h, 0, 0, 0),
                          memory_space=pltpu.VMEM),
             pl.BlockSpec((1, c, 1, dh), lambda i, h: (i, 0, h, 0),
                          memory_space=pltpu.VMEM),
@@ -173,9 +209,10 @@ def clustered_decode_pallas(q, k_cents, v_cents, counts, k_tail, v_tail,
             pl.BlockSpec((1, r, 1, dh), lambda i, h: (i, 0, h, 0),
                          memory_space=pltpu.VMEM),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, dh), lambda i, h: (i, h, 0, 0),
+        out_specs=pl.BlockSpec((1, 1, l, g, dh), lambda i, h: (i, h, 0, 0, 0),
                                memory_space=pltpu.VMEM),
-        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, l, g, dh), q.dtype),
         interpret=interpret,
-    )(t, cov, qh, k_cents, v_cents, cnt_t, k_tail, v_tail)
-    return out.reshape(b, hq, dh)
+    )(t, cov, chunk_len, qh, k_cents, v_cents, cnt_t, k_tail, v_tail)
+    out = out.transpose(0, 2, 1, 3, 4).reshape(b, l, hq, dh)
+    return out[:, 0] if squeeze else out

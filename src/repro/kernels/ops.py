@@ -71,10 +71,10 @@ def distance_argmin(x, cents, *, metric: str = "l2", n_block: int = 1024,
 
 @partial(jax.jit, static_argnames=("scale", "softcap", "interpret"))
 def _clustered_decode_jit(q, k_cents, v_cents, counts, k_tail, v_tail, t,
-                          cov, *, scale: float, softcap: float | None,
-                          interpret: bool):
+                          cov, chunk_len, *, scale: float,
+                          softcap: float | None, interpret: bool):
     return _cd.clustered_decode_pallas(
-        q, k_cents, v_cents, counts, k_tail, v_tail, t, cov,
+        q, k_cents, v_cents, counts, k_tail, v_tail, t, cov, chunk_len,
         scale=scale, softcap=softcap, interpret=interpret)
 
 
@@ -90,13 +90,17 @@ def _kernel_shard_axes(rules, b: int, hq: int, hkv: int):
     return data_axes, model_axes
 
 
-def clustered_decode(q, k_cents, v_cents, counts, k_tail, v_tail, t, cov, *,
-                     scale: float, softcap: float | None = None,
+def clustered_decode(q, k_cents, v_cents, counts, k_tail, v_tail, t, cov,
+                     chunk_len=None, *, scale: float,
+                     softcap: float | None = None,
                      interpret: bool | None = None):
     """Fused clustered-KV decode attention (centroids ⊕ tail ring).
 
-    q (B, Hq, Dh); k/v_cents (B, C, Hkv, Dh); counts (B, C, Hkv);
-    k/v_tail (B, R, Hkv, Dh); t, cov scalar or (B,) → (B, Hq, Dh).
+    q (B, Hq, Dh) for plain decode, or (B, L, Hq, Dh) for the mixed-mode
+    launch (chunked prefill interleaved with decode) with per-slot
+    ``chunk_len`` (B,) valid query rows; k/v_cents (B, C, Hkv, Dh);
+    counts (B, C, Hkv); k/v_tail (B, R, Hkv, Dh); t, cov scalar or (B,)
+    → output shaped like q.
 
     When a sharding-rules context is active (mesh serving), the Pallas
     kernel is dispatched per (data, model) mesh shard via shard_map —
@@ -107,16 +111,22 @@ def clustered_decode(q, k_cents, v_cents, counts, k_tail, v_tail, t, cov, *,
     jit below."""
     if interpret is None:
         interpret = interpret_default()
+    b = q.shape[0]
+    if chunk_len is None:
+        chunk_len = jnp.ones((b,), jnp.int32)
+    chunk_len = jnp.broadcast_to(jnp.asarray(chunk_len, jnp.int32), (b,))
+    hq = q.shape[-2]
     from repro.sharding import current_rules
     r = current_rules()
     if r is not None:
         data_axes, model_axes = _kernel_shard_axes(
-            r, q.shape[0], q.shape[1], k_cents.shape[2])
+            r, b, hq, k_cents.shape[2])
         if data_axes is not None or model_axes is not None:
             return _cd.clustered_decode_shardmap(
                 q, k_cents, v_cents, counts, k_tail, v_tail, t, cov,
-                mesh=r.mesh, data_axes=data_axes, model_axes=model_axes,
-                scale=scale, softcap=softcap, interpret=interpret)
+                chunk_len, mesh=r.mesh, data_axes=data_axes,
+                model_axes=model_axes, scale=scale, softcap=softcap,
+                interpret=interpret)
     return _clustered_decode_jit(
-        q, k_cents, v_cents, counts, k_tail, v_tail, t, cov,
+        q, k_cents, v_cents, counts, k_tail, v_tail, t, cov, chunk_len,
         scale=scale, softcap=softcap, interpret=interpret)

@@ -53,6 +53,11 @@ def main():
     ap.add_argument("--mesh", default=None,
                     help="DATAxMODEL serving mesh, e.g. 2x4 (slots shard "
                          "over data, heads over model)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill interleaved with decode: feed "
+                         "admission prompts in chunks of this many tokens "
+                         "fused into the decode launch (0 = blocking "
+                         "prefill); hides admission latency under load")
     args = ap.parse_args()
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
@@ -83,7 +88,8 @@ def main():
               f", heads over model={mesh.shape['model']}")
     srv = Server(cfg, ServerConfig(
         batch_size=args.batch_size, max_seq=args.max_seq,
-        use_clustered_batching=not args.no_clustering, mesh=mesh), params)
+        use_clustered_batching=not args.no_clustering, mesh=mesh,
+        prefill_chunk=args.prefill_chunk), params)
     t0 = time.perf_counter()
     outs = srv.serve(reqs, prompts)
     dt = time.perf_counter() - t0
@@ -91,6 +97,18 @@ def main():
     print(f"[serve] {len(outs)} completions, {toks} tokens in {dt:.1f}s "
           f"({toks / dt:.1f} tok/s), mean decode "
           f"{np.mean([o.decode_ms for o in outs]):.1f} ms/req")
+    st = srv.last_stats
+    if "ttft_p95_ms" in st:
+        mode = (f"chunked prefill ({args.prefill_chunk}-token chunks, "
+                f"{st['prefill_chunks']:.0f} chunks)"
+                if args.prefill_chunk else "blocking prefill")
+        print(f"[serve] {mode}: TTFT p50/p95 {st['ttft_p50_ms']:.0f}/"
+              f"{st['ttft_p95_ms']:.0f} ms, ITL p50/p95 "
+              f"{st['itl_p50_ms']:.1f}/{st['itl_p95_ms']:.1f} ms")
+        print(f"[serve] bucketed launches: mean bucket "
+              f"{st['launch_bucket_mean']:.2f} slots/shard, launched "
+              f"{st['launch_rows_frac'] * 100:.0f}% of {args.batch_size} "
+              f"slots per step")
     if mesh is not None:
         if "n_data_shards" in srv.last_stats:
             ws = [f"{srv.last_stats[f'slot_waste_shard{s}']:.2f}"

@@ -110,38 +110,58 @@ def ring_slot_positions(cache_size: int, t):
 def decode_attention(q, k_cache, v_cache, *, t, scale: float,
                      window: Optional[int] = None,
                      softcap: Optional[float] = None,
-                     ring: bool = False):
-    """One-token attention over a cache.
+                     ring: bool = False, chunk_len=None):
+    """One-token (or chunked mixed-mode) attention over a cache.
 
-    q (B, Hq, Dh), k_cache (B, Sc, Hkv, Dh), v_cache (B, Sc, Hkv, Dv).
-    ``t`` = current absolute position (the query's position; cache entries
-    with position < t participate); scalar or per-slot (B,) for continuous
-    batching.  Under pjit the Sc axis may be sharded (sequence-parallel
-    long-context decode).
+    Decode form — q (B, Hq, Dh), k_cache (B, Sc, Hkv, Dh), v_cache
+    (B, Sc, Hkv, Dv).  ``t`` = current absolute position (the query's
+    position; cache entries with position < t participate); scalar or
+    per-slot (B,) for continuous batching.  Under pjit the Sc axis may be
+    sharded (sequence-parallel long-context decode).
+
+    Mixed chunk form (decode-interleaved prefill) — q (B, L, Hq, Dh) with
+    per-slot ``chunk_len`` (B,) valid rows and ``t`` = cache length
+    *before* the chunk rows were written: row i queries absolute position
+    t + i and sees cache entries with position < t + i + 1 (the chunk's
+    own rows are already in the cache, so intra-chunk causality falls out
+    of the same mask).  Rows at index >= chunk_len are garbage and must
+    be discarded by the caller.  Returns (B, L, Hq, Dv).
     """
-    b, hq, dh = q.shape
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]
+    b, l, hq, dh = q.shape
     _, sc, hkv, _ = k_cache.shape
     g = hq // hkv
-    qh = q.astype(jnp.float32).reshape(b, hkv, g, dh)
+    qh = q.astype(jnp.float32).reshape(b, l, hkv, g, dh)
 
-    s = jnp.einsum("bhgd,bshd->bhgs", qh,
+    s = jnp.einsum("blhgd,bshd->bhlgs", qh,
                    k_cache.astype(jnp.float32)) * scale
     s = _softcap(s, softcap)
-    tb = jnp.broadcast_to(jnp.asarray(t), (b,))[:, None]         # (B, 1)
-    pos = ring_slot_positions(sc, tb[:, 0]) if ring else jnp.arange(sc)
+    tb = jnp.broadcast_to(jnp.asarray(t), (b,))
+    if squeeze:
+        qpos1 = tb[:, None]                              # (B, 1) = qpos + 1
+        tw = tb                                          # writes included
+    else:
+        cl = jnp.broadcast_to(jnp.asarray(chunk_len, jnp.int32), (b,))
+        qpos1 = tb[:, None] + jnp.arange(l)[None, :] + 1
+        tw = tb + cl                                     # ring holds t + cl
+    pos = ring_slot_positions(sc, tw) if ring else jnp.arange(sc)
     pos = jnp.broadcast_to(pos, (b, sc))
-    ok = (pos >= 0) & (pos < tb)
+    ok = ((pos >= 0)[:, None, :]
+          & (pos[:, None, :] < qpos1[:, :, None]))       # (B, L, Sc)
     if window is not None:
-        # query position is t-1; training mask is qpos - kpos < window,
-        # i.e. kpos >= (t-1) - window + 1 = t - window
-        ok = ok & (pos >= tb - window)
-    s = jnp.where(ok[:, None, None, :], s, NEG)
+        # query position is qpos1-1; training mask is qpos - kpos < window,
+        # i.e. kpos >= qpos1 - window
+        ok = ok & (pos[:, None, :] >= qpos1[:, :, None] - window)
+    s = jnp.where(ok[:, None, :, None, :], s, NEG)
     m = s.max(-1, keepdims=True)
     p = jnp.exp(s - m)
-    l = p.sum(-1, keepdims=True)
-    out = jnp.einsum("bhgs,bshd->bhgd", p / jnp.maximum(l, 1e-30),
+    lsum = p.sum(-1, keepdims=True)
+    out = jnp.einsum("bhlgs,bshd->blhgd", p / jnp.maximum(lsum, 1e-30),
                      v_cache.astype(jnp.float32))
-    return out.reshape(b, hq, -1).astype(q.dtype)
+    out = out.reshape(b, l, hq, -1).astype(q.dtype)
+    return out[:, 0] if squeeze else out
 
 
 # ---------------------------------------------------------------------------
@@ -237,8 +257,10 @@ def _cache_read(cache, cfg):
 def _cache_write(cache, k_new, v_new, slot):
     """Quantize-on-write for int8 caches (static per-head scale).
 
-    k/v_new (B, 1, Hkv, Dh); ``slot`` (B,) per-slot write position (a
-    scatter, so continuous-batching slots at different depths coexist)."""
+    k/v_new (B, L, Hkv, Dh); ``slot`` (B, L) per-row write position (a
+    scatter, so continuous-batching slots at different depths coexist and
+    a prompt chunk lands in one call).  Out-of-range slots (masked chunk
+    rows pass Sc) are dropped."""
     if "k_scale" in cache:
         ks = cache["k_scale"][None, None, :, None]
         vs = cache["v_scale"][None, None, :, None]
@@ -247,9 +269,11 @@ def _cache_write(cache, k_new, v_new, slot):
         v_new = jnp.clip(jnp.round(v_new.astype(jnp.float32) / vs),
                          -127, 127).astype(jnp.int8)
     b = k_new.shape[0]
-    rows = jnp.arange(b)
-    kc = cache["k"].at[rows, slot].set(k_new[:, 0].astype(cache["k"].dtype))
-    vc = cache["v"].at[rows, slot].set(v_new[:, 0].astype(cache["v"].dtype))
+    rows = jnp.arange(b)[:, None]
+    kc = cache["k"].at[rows, slot].set(k_new.astype(cache["k"].dtype),
+                                       mode="drop")
+    vc = cache["v"].at[rows, slot].set(v_new.astype(cache["v"].dtype),
+                                       mode="drop")
     return kc, vc
 
 
@@ -310,26 +334,39 @@ USE_CLUSTERED_KERNEL = True  # Pallas fused path (interpret mode off-TPU)
 
 
 def attn_decode_clustered(p, x, cfg: ModelConfig, *, cache, t,
-                          kv_repeat: int = 1, use_kernel: bool = None):
-    """One-token attention over [median centroids ⊕ exact tail ring].
+                          kv_repeat: int = 1, use_kernel: bool = None,
+                          chunk_len=None):
+    """Attention over [median centroids ⊕ exact tail ring] — one token per
+    slot (decode), or mixed-mode with a prompt chunk in flight.
 
     Centroid c with m keys gets a +log(m) logit bias (clustered-attention
-    estimator).  The new key/value is written into the tail ring at
-    t % tail; centroid refresh happens outside the step (runtime).  ``t``
-    may be scalar or per-slot (B,).  Tail entries at positions < cov are
-    already summarized by centroids and masked out (no double counting).
+    estimator).  The new keys/values are written into the tail ring at
+    position % tail; centroid refresh happens outside the step (runtime).
+    ``t`` may be scalar or per-slot (B,): the slot's cache length BEFORE
+    this step.  Tail entries at positions < cov are already summarized by
+    centroids and masked out (no double counting).
+
+    Mixed mode (``chunk_len`` (B,) with x (B, L, d)): slot rows [0,
+    chunk_len) are consecutive prompt positions t..t+chunk_len-1; their
+    K/V go into the ring before scoring, so intra-chunk causal attention
+    falls out of the ring mask.  Decode slots ride along with chunk_len 1.
     Dispatches to the fused Pallas ``clustered_decode`` kernel."""
-    b = x.shape[0]
+    b, l = x.shape[0], x.shape[1]
     tb = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (b,))
-    positions = tb[:, None]
+    chunked = chunk_len is not None
+    cl = (jnp.broadcast_to(jnp.asarray(chunk_len, jnp.int32), (b,))
+          if chunked else jnp.ones((b,), jnp.int32))
+    ri = jnp.arange(l)[None, :]                           # (1, L)
+    positions = tb[:, None] + ri
     q, k, v = _qkv(p, x, cfg, positions, "G", kv_repeat)
     tail = cache["k_tail"].shape[1]
-    slot = jnp.mod(tb, tail)
-    rows = jnp.arange(b)
+    # masked chunk rows write out of range (dropped)
+    slot = jnp.where(ri < cl[:, None], jnp.mod(positions, tail), tail)
+    rows = jnp.arange(b)[:, None]
     k_tail = cache["k_tail"].at[rows, slot].set(
-        k[:, 0].astype(cache["k_tail"].dtype))
+        k.astype(cache["k_tail"].dtype), mode="drop")
     v_tail = cache["v_tail"].at[rows, slot].set(
-        v[:, 0].astype(cache["v_tail"].dtype))
+        v.astype(cache["v_tail"].dtype), mode="drop")
     cov = jnp.broadcast_to(jnp.asarray(cache.get("cov", 0), jnp.int32), (b,))
 
     hq = cfg.n_heads
@@ -342,40 +379,44 @@ def attn_decode_clustered(p, x, cfg: ModelConfig, *, cache, t,
     if use_kernel:
         from repro.kernels import ops as kops
         out = kops.clustered_decode(
-            q[:, 0], cache["k_cents"], cache["v_cents"], cache["counts"],
-            k_tail, v_tail, tb, cov, scale=scale,
+            q if chunked else q[:, 0],
+            cache["k_cents"], cache["v_cents"], cache["counts"],
+            k_tail, v_tail, tb, cov, cl, scale=scale,
             softcap=cfg.attn_logit_softcap)
-        out = out.reshape(b, hkv, g, cfg.head_dim)
+        out = out.reshape(b, l, hkv, g, cfg.head_dim)
     else:
-        qh = q[:, 0].astype(jnp.float32).reshape(b, hkv, g, -1)
-        s_c = jnp.einsum("bhgd,bchd->bhgc", qh,
+        qh = q.astype(jnp.float32).reshape(b, l, hkv, g, -1)
+        s_c = jnp.einsum("blhgd,bchd->bhlgc", qh,
                          cache["k_cents"].astype(jnp.float32)) * scale
         s_c = _softcap(s_c, cfg.attn_logit_softcap)
-        cnt = cache["counts"].transpose(0, 2, 1)[:, :, None, :]  # (B,Hkv,1,C)
+        cnt = cache["counts"].transpose(0, 2, 1)[:, :, None, None, :]
         s_c = jnp.where(cnt > 0, s_c + jnp.log(jnp.maximum(cnt, 1e-9)), NEG)
 
-        s_t = jnp.einsum("bhgd,bshd->bhgs", qh,
+        s_t = jnp.einsum("blhgd,bshd->bhlgs", qh,
                          k_tail.astype(jnp.float32)) * scale
         s_t = _softcap(s_t, cfg.attn_logit_softcap)
-        pos = ring_slot_positions(tail, tb + 1)                  # (B, R)
-        ok = ((pos >= 0) & (pos < (tb + 1)[:, None])
-              & (pos >= cov[:, None]))
-        s_t = jnp.where(ok[:, None, None, :], s_t, NEG)
+        pos = ring_slot_positions(tail, tb + cl)                 # (B, R)
+        qpos1 = tb[:, None] + ri + 1                             # (B, L)
+        ok = ((pos[:, None, :] >= 0)
+              & (pos[:, None, :] < qpos1[:, :, None])
+              & (pos[:, None, :] >= cov[:, None, None])
+              & (ri < cl[:, None])[:, :, None])                  # (B, L, R)
+        s_t = jnp.where(ok[:, None, :, None, :], s_t, NEG)
 
         s = jnp.concatenate([s_c, s_t], axis=-1)
         m = s.max(-1, keepdims=True)
         pw = jnp.exp(s - m)
         pw = pw / jnp.maximum(pw.sum(-1, keepdims=True), 1e-30)
         nc = cache["k_cents"].shape[1]
-        out = (jnp.einsum("bhgc,bchd->bhgd", pw[..., :nc],
+        out = (jnp.einsum("bhlgc,bchd->blhgd", pw[..., :nc],
                           cache["v_cents"].astype(jnp.float32))
-               + jnp.einsum("bhgs,bshd->bhgd", pw[..., nc:],
+               + jnp.einsum("bhlgs,bshd->blhgd", pw[..., nc:],
                             v_tail.astype(jnp.float32)))
     # under mesh serving the per-head context is model-sharded; gather heads
     # to a replicated layout BEFORE the output projection so the wo
     # contraction sums all head dims in one (device-order-independent)
     # pass — keeps mesh decode bit-identical to single-device greedy
-    out_flat = annotate(out.reshape(b, 1, hq * cfg.head_dim),
+    out_flat = annotate(out.reshape(b, l, hq * cfg.head_dim),
                         "batch", "seq", None)
     y = out_flat.astype(x.dtype) @ p["wo"].astype(cdtype(cfg))
     new_cache = dict(cache, k_tail=k_tail, v_tail=v_tail)
@@ -383,28 +424,53 @@ def attn_decode_clustered(p, x, cfg: ModelConfig, *, cache, t,
 
 
 def attn_decode(p, x, cfg: ModelConfig, *, layer_kind: str, cache, t,
-                kv_repeat: int = 1):
-    """x (B, 1, d); cache {'k','v'} (B, Sc, Hkv, Dh); t scalar int32 or a
-    per-slot (B,) vector (continuous batching)."""
+                kv_repeat: int = 1, chunk_len=None):
+    """x (B, 1, d) decode, or (B, L, d) mixed-mode with per-slot
+    ``chunk_len`` (B,) valid rows (chunked prefill interleaved with
+    decode); cache {'k','v'} (B, Sc, Hkv, Dh); t scalar int32 or a
+    per-slot (B,) vector: the slot's cache length BEFORE this step."""
     if "k_cents" in cache:
         return attn_decode_clustered(p, x, cfg, cache=cache, t=t,
-                                     kv_repeat=kv_repeat)
-    b = x.shape[0]
+                                     kv_repeat=kv_repeat,
+                                     chunk_len=chunk_len)
+    b, l = x.shape[0], x.shape[1]
     tb = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (b,))
-    positions = tb[:, None]                               # (B, 1)
+    chunked = chunk_len is not None
+    cl = (jnp.broadcast_to(jnp.asarray(chunk_len, jnp.int32), (b,))
+          if chunked else jnp.ones((b,), jnp.int32))
+    ri = jnp.arange(l)[None, :]
+    positions = tb[:, None] + ri                          # (B, L)
     q, k, v = _qkv(p, x, cfg, positions, layer_kind, kv_repeat)
     window = cfg.sliding_window if layer_kind == "L" else None
+    if chunked and window is not None:
+        # writing a whole chunk into a W-sized ring overwrites positions
+        # t+i-W, which are still inside row 0's attention window — there
+        # is no coverage frontier here to absorb them first (unlike the
+        # clustered cache), so a fused multi-row window step is lossy
+        raise NotImplementedError(
+            "mixed-mode chunked decode does not support sliding-window "
+            "ring caches (multi-row ring writes destroy in-window "
+            "entries); serve windowed models with blocking prefill")
     sc = cache["k"].shape[1]
-    slot = jnp.mod(tb, sc) if window else jnp.minimum(tb, sc - 1)
+    slot = jnp.mod(positions, sc) if window \
+        else jnp.minimum(positions, sc - 1)
+    slot = jnp.where(ri < cl[:, None], slot, sc)          # drop masked rows
     kc, vc = _cache_write(cache, k, v, slot)
     new_cache = dict(cache, k=kc, v=vc)
     k_read, v_read = _cache_read(new_cache, cfg)
-    out = decode_attention(q[:, 0], k_read, v_read, t=tb + 1,
-                           scale=_scale(cfg),
-                           window=window, softcap=cfg.attn_logit_softcap,
-                           ring=window is not None)
+    if chunked:
+        out = decode_attention(q, k_read, v_read, t=tb, chunk_len=cl,
+                               scale=_scale(cfg), window=window,
+                               softcap=cfg.attn_logit_softcap,
+                               ring=window is not None)
+    else:
+        out = decode_attention(q[:, 0], k_read, v_read, t=tb + 1,
+                               scale=_scale(cfg),
+                               window=window,
+                               softcap=cfg.attn_logit_softcap,
+                               ring=window is not None)
     # same head-gather-before-wo rule as the clustered path (see above)
-    out_flat = annotate(out.reshape(x.shape[0], 1, -1), "batch", "seq", None)
+    out_flat = annotate(out.reshape(b, l, -1), "batch", "seq", None)
     y = out_flat @ p["wo"].astype(cdtype(cfg))
     return y, new_cache
 

@@ -221,16 +221,23 @@ def _ssm_prefill(p, x, cfg: ModelConfig):
 
 
 def sublayer_decode(p, h, cfg: ModelConfig, kind: str, cache, t, *,
-                    kv_repeat: int, enc_kv=None):
-    """h (B,1,d). Returns (h, cache')."""
+                    kv_repeat: int, enc_kv=None, chunk_len=None):
+    """h (B,1,d) — or (B,L,d) mixed-mode with per-slot ``chunk_len``
+    (chunked prefill interleaved with decode; attention layers only).
+    Returns (h, cache')."""
     if kind in ("G", "L"):
         x = apply_norm(p["norm1"], h, cfg)
         if cfg.attn_kind == "mla":
+            if chunk_len is not None:
+                raise NotImplementedError(
+                    "mixed-mode chunked decode is not wired for MLA "
+                    "latent caches yet")
             y, cache = attn.mla_decode(p["attn"], x, cfg, cache=cache, t=t)
         else:
             y, cache = attn.attn_decode(p["attn"], x, cfg, layer_kind=kind,
                                         cache=cache, t=t,
-                                        kv_repeat=kv_repeat)
+                                        kv_repeat=kv_repeat,
+                                        chunk_len=chunk_len)
         if cfg.post_norms:
             y = apply_norm(p["post_attn_norm"], y, cfg)
         h = h + y
@@ -239,6 +246,11 @@ def sublayer_decode(p, h, cfg: ModelConfig, kind: str, cache, t, *,
             h = h + attn.cross_attn_apply(p["xattn"], x, enc_kv, cfg)
         h, _ = _ffn(p, h, cfg)
         return h, cache
+    if chunk_len is not None:
+        raise NotImplementedError(
+            "mixed-mode chunked decode supports attention layers only "
+            f"(got layer kind {kind!r}; recurrent state must be stepped "
+            "token by token)")
     if kind == "M":
         x = apply_norm(p["norm1"], h, cfg)
         y, cache = ssm_mod.ssm_decode(p["ssm"], x, cfg, cache)
@@ -565,17 +577,31 @@ def prefill(params, cfg: ModelConfig, tokens, *, max_seq: int,
 
 
 def decode_step(params, cfg: ModelConfig, cache, tokens, t, *,
-                kv_repeat: int = 1):
+                kv_repeat: int = 1, chunk_len=None):
     """One decode step.  tokens (B, 1), t scalar int32 (current position).
-    Returns (logits (B, V), cache')."""
+    Returns (logits (B, V), cache').
+
+    Mixed mode (chunked prefill interleaved with decode): tokens (B, L)
+    with per-slot ``chunk_len`` (B,) valid columns and ``t`` (B,) the
+    slot's cache length before the step.  Decode slots carry their one
+    pending token (chunk_len 1); a slot admitting a prompt carries a
+    whole chunk whose K/V stream straight into its cache at exact
+    positions t..t+chunk_len-1.  The returned logits are each slot's LAST
+    valid row — the next-token distribution for decode slots, and the
+    first-generated-token distribution when a slot's final prompt chunk
+    lands.  Attention-layer models only (no recurrent state, no MLA,
+    no encoder-decoder)."""
+    if chunk_len is not None and cfg.is_encdec:
+        raise NotImplementedError("mixed-mode chunked decode is "
+                                  "decoder-only")
     h = embed_tokens(params["embed"], tokens, cfg)
     if cfg.embed_scale:
         pass  # already applied in embed_tokens
     if cfg.pos_kind == "abs_sinusoidal":
         # t may be scalar or per-slot (B,) under continuous batching
         tb = jnp.broadcast_to(jnp.asarray(t), (h.shape[0],))
-        pe = jax.vmap(lambda ti: sinusoidal_pos(1, cfg.d_model,
-                                                offset=ti))(tb)   # (B, 1, d)
+        pe = jax.vmap(lambda ti: sinusoidal_pos(h.shape[1], cfg.d_model,
+                                                offset=ti))(tb)   # (B, L, d)
         h = h + pe.astype(h.dtype)
     h = annotate(h, "batch", "seq", "d_model")
 
@@ -584,7 +610,8 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, t, *,
         ekv = cache.get("cross_prefix", [None] * len(params["prefix"]))
         h, c2 = sublayer_decode(lp, h, cfg, "G", c, t, kv_repeat=kv_repeat,
                                 enc_kv=ekv[len(new_cache["prefix"])]
-                                if cfg.is_encdec else None)
+                                if cfg.is_encdec else None,
+                                chunk_len=chunk_len)
         new_cache["prefix"].append(c2)
 
     if "scan" in params:
@@ -595,7 +622,8 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, t, *,
                 ekv = cs.get(f"xkv{j}")
                 hh, cnew = sublayer_decode(lp[f"sub{j}"], hh, cfg, kind,
                                            cs[f"sub{j}"], t,
-                                           kv_repeat=kv_repeat, enc_kv=ekv)
+                                           kv_repeat=kv_repeat, enc_kv=ekv,
+                                           chunk_len=chunk_len)
                 cs2[f"sub{j}"] = cnew
             return hh, cs2
 
@@ -608,7 +636,8 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, t, *,
         ekv = (cache.get("cross_tail", [None] * len(tail))[i]
                if cfg.is_encdec else None)
         h, c2 = sublayer_decode(lp, h, cfg, kind, cache["tail"][i], t,
-                                kv_repeat=kv_repeat, enc_kv=ekv)
+                                kv_repeat=kv_repeat, enc_kv=ekv,
+                                chunk_len=chunk_len)
         new_cache["tail"].append(c2)
 
     if cfg.is_encdec:
@@ -616,5 +645,12 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, t, *,
         new_cache["cross_tail"] = cache["cross_tail"]
 
     h = apply_norm(params["final_norm"], h, cfg)
+    if chunk_len is not None:
+        # each slot's last valid row carries its next-token distribution;
+        # gather before the vocab projection so the L× logits are never
+        # materialized
+        idx = (jnp.broadcast_to(jnp.asarray(chunk_len, jnp.int32),
+                                (h.shape[0],)) - 1)[:, None, None]
+        h = jnp.take_along_axis(h, idx, axis=1)
     logits = lm_logits(params["embed"], h, cfg)[:, 0]
     return logits, new_cache

@@ -9,10 +9,35 @@ moment a decode slot frees (per-slot position/length tracking, early exit
 at each request's own max_new_tokens) instead of padding every request in
 a static batch to the longest member.
 
+Admission runs in one of two modes:
+
+  * **chunked, decode-interleaved prefill** (``prefill_chunk > 0``): each
+    engine step consumes one prompt chunk for at most one admitting slot
+    per data shard, fused into the same launch that advances every decode
+    slot by one token (mixed-mode ``decode_step`` / Pallas
+    ``clustered_decode``), so admission never stalls decode and the
+    prompt's KV streams straight into the already-sharded engine cache —
+    in clustered form via ``kv_compress.absorb_chunk`` when the prompt
+    outgrows the tail ring (compaction-aware admission with a prompt-time
+    centroid budget).  No blocking prefill, no bucket padding, no B=1
+    cache replication.
+  * **blocking prefill** (``prefill_chunk == 0``, the baseline): a full
+    right-padded prefill call per admission, then a donated slot-write.
+
 Memory management: the clustered-KV cache is compressed/refreshed with one
 jitted, vmap-over-(batch ⊕ head) call (core/kv_compress.py) — no host
 loops — and decode attention over [centroids ⊕ tail ring] runs in the
 fused Pallas ``clustered_decode`` kernel (interpret-mode on CPU).
+
+Decode launches are **bucketed** per data shard: the physical cache holds
+``shards × bucket`` slots where the bucket shrinks (powers of two) on the
+end-of-stream drain — once the queue is empty and no prefill is in
+flight — so a near-empty shard stops paying for dead slots.  Dead slot
+content is dropped on shrink (finished requests hold no live state);
+every new serve starts back at the full shape, and all admissions happen
+at the full shape, so the admission traces exist at exactly one batch
+size (``ensure_row`` is a defensive re-grow valve should that policy
+ever change).
 """
 
 from __future__ import annotations
@@ -26,14 +51,15 @@ from typing import Dict, List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.core import kv_compress
 from repro.core.request_cluster import BatchPlan, Request, plan_batches, plan_fifo
 from repro.models import transformer as tfm
 from repro.models.config import ModelConfig
 from repro.sharding import (Rules, constrain_cache, default_table,
-                            shard_cache, use_rules)
+                            place_admission, shard_cache, use_rules)
+from repro.sharding.rules import _key_str as _key_name
 
 
 @dataclasses.dataclass
@@ -50,7 +76,17 @@ class ServerConfig:
                                    # global attention / clustered KV; models
                                    # with sliding-window 'L' layers or SSM/
                                    # RG-LRU state should use 1 — pad tokens
-                                   # enter the ring/recurrent state there)
+                                   # enter the ring/recurrent state there).
+                                   # Blocking admission only.
+    prefill_chunk: int = 0         # >0: chunked prefill interleaved with
+                                   # decode — each engine step feeds one
+                                   # prompt chunk of this many tokens for at
+                                   # most one admitting slot per data shard,
+                                   # fused with the decode launch.  Exact
+                                   # positions, so no bucket padding.
+                                   # Attention-only models (G/L layers,
+                                   # GQA); must be <= kv_compress.keep_recent
+                                   # when serving clustered.
     kv_compress: Optional[kv_compress.KVCompressConfig] = None
     # when set, the engine serves from a clustered KV cache end to end and
     # re-compacts every kv_compress.refresh decode steps
@@ -67,7 +103,7 @@ class ServerConfig:
 class Completion:
     uid: int
     tokens: List[int]
-    prefill_ms: float
+    prefill_ms: float              # wall-clock time to first token (TTFT)
     decode_ms: float
 
 
@@ -78,6 +114,32 @@ def _is_exact_kv(node) -> bool:
 
 def _is_clustered_kv(node) -> bool:
     return isinstance(node, dict) and "k_cents" in node
+
+
+def _pow2ceil(x: int) -> int:
+    return 1 << max(x - 1, 0).bit_length()
+
+
+def _slot_resize(x, axis: int, shards: int, ob: int, nb: int):
+    """Resize one cache leaf's slot axis from shards*ob to shards*nb rows,
+    keeping each data shard's block contiguous (slice drops dead high
+    slots; pad appends zero slots).  Reshape-based so a NamedSharding
+    over the slot axis stays shard-local."""
+    lead, rest = x.shape[:axis], x.shape[axis + 1:]
+    xr = x.reshape(lead + (shards, ob) + rest)
+    if nb < ob:
+        xr = jax.lax.slice_in_dim(xr, 0, nb, axis=axis + 1)
+    elif nb > ob:
+        pad = [(0, 0)] * xr.ndim
+        pad[axis + 1] = (0, nb - ob)
+        xr = jnp.pad(xr, pad)
+    return xr.reshape(lead + (shards * nb,) + rest)
+
+
+def _percentile_ms(vals: List[float], q: float) -> float:
+    if not vals:
+        return 0.0
+    return float(np.percentile(np.asarray(vals), q) * 1e3)
 
 
 class Server:
@@ -94,6 +156,29 @@ class Server:
                     "continuous serving with kv_compress needs "
                     "refresh_every >= 1 (ring entries must reach "
                     "centroids before eviction)")
+        self._chunk = scfg.prefill_chunk
+        if self._chunk:
+            if scfg.engine != "continuous":
+                raise ValueError("chunked prefill requires the continuous "
+                                 "engine")
+            if (cfg.is_encdec or cfg.attn_kind == "mla"
+                    or set(cfg.layer_pattern) - set("G")
+                    or cfg.n_frontend_tokens):
+                raise ValueError(
+                    "chunked prefill serves decoder-only global-attention "
+                    "models (all-'G' layer pattern, GQA): recurrent/MLA/"
+                    "enc-dec state cannot absorb a chunk in one mixed "
+                    "step, and a sliding-window ring would lose in-window "
+                    "entries to the chunk's multi-row write (the "
+                    "clustered ring is safe only because absorb_chunk "
+                    "moves the coverage frontier past the overwritten "
+                    "positions first)")
+            if (scfg.kv_compress is not None
+                    and self._chunk > scfg.kv_compress.keep_recent):
+                raise ValueError(
+                    "prefill_chunk must fit the exact tail ring "
+                    "(<= kv_compress.keep_recent): a chunk's K/V lands in "
+                    "the ring before absorb_chunk can cover it")
         self._rules: Optional[Rules] = None
         self._n_data_shards = 1
         if scfg.mesh is not None:
@@ -104,6 +189,7 @@ class Server:
             self._rules = Rules(mesh, default_table("pod" in mesh.axis_names))
             # replicate params across the mesh; annotations shard the
             # per-head compute, GSPMD propagation does the rest
+            from jax.sharding import NamedSharding, PartitionSpec as P
             params = jax.device_put(params, NamedSharding(mesh, P()))
             axes = self._rules.axes_for("batch", scfg.batch_size)
             if axes:
@@ -117,6 +203,7 @@ class Server:
         self._bucket = (1 if set(cfg.layer_pattern) & set("LMR")
                         else scfg.prefill_bucket)
         self._compact_templates: Dict[tuple, object] = {}
+        self._resize_jits: Dict[tuple, object] = {}
 
         def _ctx():
             return (use_rules(self._rules) if self._rules is not None
@@ -125,6 +212,12 @@ class Server:
         def _decode_fn(c, tk, t):
             with _ctx():
                 logits, c2 = tfm.decode_step(self.params, cfg, c, tk, t)
+                return logits, self._constrain(c2)
+
+        def _mixed_fn(c, tk, t, cl):
+            with _ctx():
+                logits, c2 = tfm.decode_step(self.params, cfg, c, tk, t,
+                                             chunk_len=cl)
                 return logits, self._constrain(c2)
 
         def _prefill_fn(tk, lp):
@@ -136,11 +229,25 @@ class Server:
             with _ctx():
                 return self._constrain(self._write_slot_impl(dst, src, j))
 
+        def _reset_slot_fn(c, j):
+            with _ctx():
+                return self._constrain(self._reset_slot_impl(c, j))
+
         self._decode = jax.jit(_decode_fn)
+        self._mixed = jax.jit(_mixed_fn)
         self._prefill = jax.jit(_prefill_fn)
         # donate the engine cache: admission updates one slot in place
         # instead of copying every layer's KV
         self._write_slot = jax.jit(_write_slot_fn, donate_argnums=(0,))
+        self._reset_slot = jax.jit(_reset_slot_fn, donate_argnums=(0,))
+        ccfg = scfg.kv_compress
+
+        def _absorb_fn(c, j, lengths, target):
+            with _ctx():
+                return self._constrain(
+                    self._absorb_impl(c, j, lengths, target, ccfg))
+
+        self._absorb = jax.jit(_absorb_fn, donate_argnums=(0,))
 
     def _constrain(self, cache):
         """Pin engine-cache leaves to their mesh layout inside traced fns
@@ -177,11 +284,30 @@ class Server:
         if cfg.is_encdec:
             raise NotImplementedError(
                 "continuous engine serves decoder-only models")
+        t0_serve = time.perf_counter()
         ccfg = scfg.kv_compress
+        chunk = self._chunk
         n = scfg.batch_size
         plan = self._plan(requests)
         order = [u for b in plan.batches for u in b]
         by_uid = {r.uid: r for r in requests}
+
+        # data-shard bookkeeping: NamedSharding partitions the slot axis
+        # contiguously, so logical slot j lives on data shard
+        # j // per_shard at within-shard index j % per_shard.  The cache
+        # physically holds shards * bucket rows (bucketed launches):
+        # logical j maps to physical row shard*bucket + idx, valid while
+        # idx < bucket.  Admission fills the emptiest shard's lowest index
+        # first, keeping buckets tight; a drained shard's dead high slots
+        # are sliced away (their content is dead state).
+        shards = self._n_data_shards
+        per_shard = max(n // max(shards, 1), 1)
+        bucket = per_shard
+        shard_of = lambda j: min(j // per_shard, shards - 1)  # noqa: E731
+        idx_of = lambda j: j % per_shard                      # noqa: E731
+
+        def phys(j):
+            return shard_of(j) * bucket + idx_of(j)
 
         cache = tfm.init_cache(
             cfg, n, scfg.max_seq,
@@ -195,122 +321,282 @@ class Server:
 
         pos = np.zeros(n, np.int32)       # cache valid length per slot
         cur = np.zeros(n, np.int32)       # pending (unfed) token per slot
-        active = np.zeros(n, bool)
+        active = np.zeros(n, bool)        # decoding
+        admitting = np.zeros(n, bool)     # chunked prefill in flight
+        fed = np.zeros(n, np.int32)       # prompt tokens streamed so far
+        cov_h = np.zeros(n, np.int32)     # host mirror of admission cov
         slot_uid = [-1] * n
+        prompt_np: Dict[int, np.ndarray] = {}
         toks: Dict[int, List[int]] = {}
         pre_ms: Dict[int, float] = {}
+        token_t: Dict[int, List[float]] = {}
         qi = 0
         decode_steps = wasted_slots = 0
+        rows_launched = 0
         pad_toks = useful_toks = 0
-        since_compact = 0
+        n_chunks = n_absorbs = n_compacts = 0
+        # compaction cadence is per-slot decode progress, not engine
+        # steps: a slot's ring only advances when that slot decodes, so
+        # chunk-feed steps for OTHER slots must not inflate the schedule
+        # (the eviction-safety invariant is per slot: cov >= t - R +
+        # refresh after at most ``refresh`` of its own tokens)
+        since_tok = np.zeros(n, np.int32)
         dec_s = 0.0
-        # data-shard bookkeeping: NamedSharding partitions the slot axis
-        # contiguously, so slot j lives on data shard j // (n // shards).
-        # Admission fills the emptiest shard first and the per-step waste
-        # is tracked per shard — a fully drained shard shows up as 100%
-        # waste there (per-request early exit stays host-masked; SPMD can't
-        # drop one shard from the launch, but a balanced fill drains shards
-        # evenly so the tail of the stream wastes as little as possible).
-        shards = self._n_data_shards
-        per_shard = max(n // max(shards, 1), 1)
-        shard_of = lambda j: min(j // per_shard, shards - 1)  # noqa: E731
+        R = ccfg.keep_recent if ccfg else 0
         shard_busy_steps = np.zeros(max(shards, 1), np.int64)
         shard_steps = 0
 
-        def _pick_slot():
-            """Next slot to admit into: the emptiest data shard's lowest
-            free slot (occupancy recomputed per admission, so a burst of
-            admissions spreads across shards instead of piling into the
-            first one); plain lowest-free-slot off-mesh."""
-            free = [j for j in range(n) if not active[j]]
-            if not free:
-                return None
-            if shards <= 1:
-                return free[0]
-            occ = np.zeros(shards, np.int32)
+        def resize_to(nb):
+            nonlocal cache, bucket
+            if nb == bucket:
+                return
+            cache = self._resize_cache(cache, bucket, nb)
+            bucket = nb
+
+        def occupancy():
+            occ = np.zeros(max(shards, 1), np.int32)
             for j in range(n):
-                if active[j]:
+                if active[j] or admitting[j]:
                     occ[shard_of(j)] += 1
-            return min(free, key=lambda j: (occ[shard_of(j)], j))
+            return occ
+
+        def ensure_row(j):
+            """Re-grow the launch bucket so logical slot j has a physical
+            row.  Under the current policy this never fires — shrink only
+            happens after the queue drains and admissions only happen
+            while it hasn't — but it guards the phys-row invariant if the
+            shrink policy ever loosens."""
+            if idx_of(j) >= bucket:
+                resize_to(min(per_shard, _pow2ceil(idx_of(j) + 1)))
+
+        def start_admission(j, uid):
+            nonlocal cache
+            p = np.asarray(prompts[uid], np.int32)[-scfg.max_seq:]
+            prompt_np[uid] = p
+            ensure_row(j)
+            admitting[j] = True
+            fed[j] = 0
+            cov_h[j] = 0
+            slot_uid[j] = uid
+            if ccfg is not None:
+                # the slot's previous occupant left stale centroids; its
+                # ring entries are hidden by the position mask, but stale
+                # counts would unmask stale centroids
+                cache = self._reset_slot(cache, jnp.int32(phys(j)))
+
+        def admit_blocking(j, uid):
+            nonlocal cache, pad_toks, useful_toks
+            r = by_uid[uid]
+            p = np.asarray(prompts[uid], np.int32)[-scfg.max_seq:]
+            plen = len(p)
+            bkt = min(scfg.max_seq,
+                      -(-plen // self._bucket) * self._bucket)
+            padded = np.zeros((1, bkt), np.int32)
+            padded[0, :plen] = p
+            t0 = time.perf_counter()
+            logits1, c1 = self._prefill(jnp.asarray(padded),
+                                        jnp.int32(plen - 1))
+            first = int(jnp.argmax(logits1, -1)[0])
+            now = time.perf_counter()
+            pre_ms[uid] = (now - t0_serve) * 1e3        # TTFT
+            toks[uid] = [first]
+            token_t[uid] = [now]
+            pad_toks += bkt - plen
+            useful_toks += plen
+            if r.max_new_tokens <= 1:
+                return                  # done at prefill; slot stays free
+            if ccfg is not None:
+                c1 = self._clusterize(c1, cache, plen, ccfg)
+            if self._rules is not None:
+                # admission placement: kv heads shard over the model axis
+                # (admission_spec) instead of the old replicate-everything
+                # P() — the data-axis copy is unavoidable for a B=1 cache
+                # (one device assignment per jit); the chunked admission
+                # path removes the B=1 cache entirely
+                c1 = place_admission(c1, self._rules)
+            ensure_row(j)
+            cache = self._write_slot(cache, c1, jnp.int32(phys(j)))
+            cur[j], pos[j] = first, plen
+            active[j] = True
+            since_tok[j] = 0
+            slot_uid[j] = uid
 
         while True:
+            # ---- admission ------------------------------------------------
+            # next slot: the emptiest data shard's lowest free index
+            # (recomputed per admission so a burst spreads across shards
+            # AND keeps within-shard indices low for tight launch buckets);
+            # chunked mode starts at most one in-flight prefill per shard
             while qi < len(order):
-                j = _pick_slot()
-                if j is None:
+                occ = occupancy()
+                cands = []
+                for s in range(max(shards, 1)):
+                    slots = range(s * per_shard, min((s + 1) * per_shard, n))
+                    if chunk and any(admitting[j] for j in slots):
+                        continue
+                    free = [j for j in slots
+                            if not (active[j] or admitting[j])]
+                    if free:
+                        cands.append((occ[s], s, free[0]))
+                if not cands:
                     break
+                j = min(cands)[2]
                 uid = order[qi]
                 qi += 1
-                r = by_uid[uid]
-                p = np.asarray(prompts[uid], np.int32)[-scfg.max_seq:]
-                plen = len(p)
-                bucket = min(scfg.max_seq,
-                             -(-plen // self._bucket) * self._bucket)
-                padded = np.zeros((1, bucket), np.int32)
-                padded[0, :plen] = p
-                t0 = time.perf_counter()
-                logits1, c1 = self._prefill(jnp.asarray(padded),
-                                            jnp.int32(plen - 1))
-                first = int(jnp.argmax(logits1, -1)[0])
-                pre_ms[uid] = (time.perf_counter() - t0) * 1e3
-                toks[uid] = [first]
-                pad_toks += bucket - plen
-                useful_toks += plen
-                if r.max_new_tokens <= 1:
-                    continue           # done at prefill; slot stays free
-                if ccfg is not None:
-                    c1 = self._clusterize(c1, cache, plen, ccfg)
-                if self._rules is not None:
-                    # admission: replicate the request cache across the
-                    # mesh so the sharded slot-write is a local scatter
-                    c1 = jax.device_put(
-                        c1, NamedSharding(self._rules.mesh, P()))
-                cache = self._write_slot(cache, c1, jnp.int32(j))
-                cur[j], pos[j] = first, plen
-                active[j] = True
-                slot_uid[j] = uid
-            if not active.any():
+                if chunk:
+                    start_admission(j, uid)
+                else:
+                    admit_blocking(j, uid)
+
+            if not (active.any() or admitting.any()):
                 break
 
+            # ---- bucketed launch: shrink to live occupancy ----------------
+            # only once the queue has drained AND no prefill is in flight:
+            # mid-stream occupancy dips are transient (a freed slot
+            # readmits next step), every new physical shape costs a fresh
+            # trace of the decode/compaction jits, and keeping admissions
+            # at the full shape means the mixed-launch and absorb traces
+            # exist at exactly one batch size.  The end-of-stream tail is
+            # where shrinking pays, and its shapes ({per_shard,
+            # per_shard/2, ..., 1}) are shared across serves so the
+            # decode-only traces amortize
+            if qi >= len(order) and not admitting.any():
+                busy_idx = [idx_of(j) for j in range(n)
+                            if active[j] or admitting[j]]
+                desired = min(per_shard, _pow2ceil(max(busy_idx) + 1))
+                if desired < bucket:
+                    resize_to(desired)
+            bp = max(shards, 1) * bucket
+
+            # ---- chunked admission: pre-step absorb (make ring room) ------
+            step_chunks = {}            # logical j -> chunk len this step
+            if chunk:
+                for j in np.nonzero(admitting)[0]:
+                    plen = len(prompt_np[slot_uid[j]])
+                    cl = int(min(chunk, plen - fed[j]))
+                    step_chunks[int(j)] = cl
+                    if ccfg is not None and fed[j] + cl - cov_h[j] > R:
+                        target = int(np.clip(
+                            fed[j] + cl - R + ccfg.refresh, 0, fed[j]))
+                        cache = self._absorb(cache, jnp.int32(phys(j)),
+                                             jnp.int32(fed[j]),
+                                             jnp.int32(target))
+                        cov_h[j] = target
+                        n_absorbs += 1
+
+            # ---- build the launch -----------------------------------------
+            mixed = bool(step_chunks)
+            width = chunk if mixed else 1
+            tok = np.zeros((bp, width), np.int32)
+            t_vec = np.zeros(bp, np.int32)
+            cl_vec = np.ones(bp, np.int32)
+            for j in range(n):
+                if idx_of(j) >= bucket:
+                    continue
+                pj = phys(j)
+                if admitting[j]:
+                    cl = step_chunks[j]
+                    p = prompt_np[slot_uid[j]]
+                    tok[pj, :cl] = p[fed[j]:fed[j] + cl]
+                    t_vec[pj] = fed[j]
+                    cl_vec[pj] = cl
+                else:
+                    tok[pj, 0] = cur[j]
+                    t_vec[pj] = pos[j]
+
             t0 = time.perf_counter()
-            logits, cache = self._decode(cache, jnp.asarray(cur[:, None]),
-                                         jnp.asarray(pos))
+            if mixed:
+                logits, cache = self._mixed(cache, jnp.asarray(tok),
+                                            jnp.asarray(t_vec),
+                                            jnp.asarray(cl_vec))
+            else:
+                logits, cache = self._decode(cache, jnp.asarray(tok),
+                                             jnp.asarray(t_vec))
             nxt = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
-            dec_s += time.perf_counter() - t0
+            now = time.perf_counter()
+            dec_s += now - t0
             decode_steps += 1
-            wasted_slots += int((~active).sum())
-            since_compact += 1
+            rows_launched += bp
+            wasted_slots += int(n - (active | admitting).sum())
+            since_tok[active] += 1
+            n_chunks += len(step_chunks)
             if shards > 1:
                 shard_steps += 1
                 for j in range(n):
-                    if active[j]:
+                    if active[j] or admitting[j]:
                         shard_busy_steps[shard_of(j)] += 1
 
+            # ---- host update ---------------------------------------------
             for j in range(n):
-                if not active[j]:
+                if idx_of(j) >= bucket:
                     continue
+                pj = phys(j)
                 uid = slot_uid[j]
-                toks[uid].append(int(nxt[j]))
-                pos[j] += 1
-                cur[j] = nxt[j]
-                if len(toks[uid]) >= by_uid[uid].max_new_tokens:
-                    active[j] = False
+                if admitting[j]:
+                    cl = step_chunks[j]
+                    fed[j] += cl
+                    plen = len(prompt_np[uid])
+                    useful_toks += cl
+                    if fed[j] < plen:
+                        continue
+                    # final chunk landed: its last row's logits are the
+                    # request's first generated token
+                    if ccfg is not None:
+                        target_end = int(np.clip(plen - R + ccfg.refresh,
+                                                 0, plen))
+                        if cov_h[j] < target_end:
+                            cache = self._absorb(cache, jnp.int32(pj),
+                                                 jnp.int32(plen),
+                                                 jnp.int32(target_end))
+                            cov_h[j] = target_end
+                            n_absorbs += 1
+                    first = int(nxt[pj])
+                    toks[uid] = [first]
+                    token_t[uid] = [now]
+                    pre_ms[uid] = (now - t0_serve) * 1e3    # TTFT
+                    admitting[j] = False
+                    if by_uid[uid].max_new_tokens <= 1:
+                        slot_uid[j] = -1
+                    else:
+                        active[j] = True
+                        since_tok[j] = 0
+                        pos[j] = plen
+                        cur[j] = first
+                elif active[j]:
+                    toks[uid].append(int(nxt[pj]))
+                    token_t[uid].append(now)
+                    pos[j] += 1
+                    cur[j] = nxt[pj]
+                    if len(toks[uid]) >= by_uid[uid].max_new_tokens:
+                        active[j] = False
+                        since_tok[j] = 0
 
-            if (ccfg is not None and since_compact >= ccfg.refresh
+            if (ccfg is not None and int(since_tok.max()) >= ccfg.refresh
                     and active.any()):
-                lengths = np.where(active, pos, 0).astype(np.int32)
+                lengths = np.zeros(bp, np.int32)
+                for j in range(n):
+                    if active[j] and idx_of(j) < bucket:
+                        lengths[phys(j)] = pos[j]
                 cache = self.compact_kv(cache, lengths, ccfg)
                 if self._rules is not None:
                     # eviction/compaction rebuilt the clustered leaves
                     # outside the constrained decode jit — put them back
                     # on their mesh layout before the next step
                     cache = shard_cache(cache, self._rules)
-                since_compact = 0
+                since_tok[:] = 0
+                n_compacts += 1
 
+        wall = time.perf_counter() - t0_serve
         gen_total = sum(len(v) for v in toks.values())
         # each request's first token comes from prefill; tokens/s rates
         # only the tokens the decode loop actually produced
         dec_tokens = gen_total - len(toks)
         dec_ms_tok = dec_s * 1e3 / max(gen_total, 1)
+        ttfts = [pre_ms[u] / 1e3 for u in pre_ms]
+        itls: List[float] = []
+        for ts in token_t.values():
+            itls.extend(b - a for a, b in zip(ts, ts[1:]))
         self.last_stats = {
             "decode_steps": float(decode_steps),
             "slot_waste": wasted_slots / max(decode_steps * n, 1),
@@ -318,6 +604,18 @@ class Server:
             "gen_tokens": float(gen_total),
             "decode_s": dec_s,
             "tokens_per_s": dec_tokens / max(dec_s, 1e-9),
+            "wall_s": wall,
+            "tokens_per_s_wall": gen_total / max(wall, 1e-9),
+            "ttft_p50_ms": _percentile_ms(ttfts, 50),
+            "ttft_p95_ms": _percentile_ms(ttfts, 95),
+            "itl_p50_ms": _percentile_ms(itls, 50),
+            "itl_p95_ms": _percentile_ms(itls, 95),
+            "launch_rows_frac": rows_launched / max(decode_steps * n, 1),
+            "launch_bucket_mean": rows_launched
+            / max(decode_steps * max(shards, 1), 1),
+            "prefill_chunks": float(n_chunks),
+            "kv_absorbs": float(n_absorbs),
+            "kv_compactions": float(n_compacts),
         }
         if shards > 1:
             self.last_stats["n_data_shards"] = float(shards)
@@ -329,6 +627,100 @@ class Server:
                            prefill_ms=pre_ms[r.uid],
                            decode_ms=dec_ms_tok * len(toks[r.uid]))
                 for r in requests]
+
+    # ------------------------------------------------------------------
+    # bucketed launches: slot-axis resize
+    # ------------------------------------------------------------------
+
+    def _resize_cache(self, cache, ob: int, nb: int):
+        """Resize every cache leaf's slot axis from shards*ob to
+        shards*nb physical rows (jitted per (ob, nb) pair, donated).
+        Dead high slots hold no live request state, so shrink drops them
+        and grow zero-fills."""
+        fn = self._resize_jits.get((ob, nb))
+        if fn is None:
+            shards = max(self._n_data_shards, 1)
+
+            def impl(c):
+                flat, treedef = jax.tree_util.tree_flatten_with_path(c)
+                out = []
+                for kp, leaf in flat:
+                    name = _key_name(kp[-1])
+                    if name in ("k_scale", "v_scale"):  # per-head, no slots
+                        out.append(leaf)
+                        continue
+                    axis = 1 if _key_name(kp[0]) == "scan" else 0
+                    out.append(_slot_resize(leaf, axis, shards, ob, nb))
+                res = jax.tree_util.tree_unflatten(treedef, out)
+                return self._constrain(res)
+
+            fn = jax.jit(impl, donate_argnums=(0,))
+            self._resize_jits[(ob, nb)] = fn
+        return fn(cache)
+
+    # ------------------------------------------------------------------
+    # chunked admission: slot reset + streaming absorb
+    # ------------------------------------------------------------------
+
+    def _reset_slot_impl(self, cache, j):
+        """Zero one slot's clustered bookkeeping (counts + cov) ahead of a
+        fresh chunked admission.  Ring/centroid payloads need no wipe:
+        ring entries are hidden by the position mask until the chunk
+        stream overwrites them, and zero-count centroids are masked."""
+        def walk(node):
+            if _is_clustered_kv(node):
+                out = dict(node)
+                if node["k_cents"].ndim == 5:            # scan-stacked
+                    out["counts"] = node["counts"].at[:, j].set(0.0)
+                    out["cov"] = node["cov"].at[:, j].set(0)
+                else:
+                    out["counts"] = node["counts"].at[j].set(0.0)
+                    out["cov"] = node["cov"].at[j].set(0)
+                return out
+            if isinstance(node, dict):
+                return {k: walk(v) for k, v in node.items()}
+            if isinstance(node, list):
+                return [walk(v) for v in node]
+            return node
+
+        return walk(cache)
+
+    def _absorb_impl(self, cache, j, lengths, target, ccfg):
+        """Advance slot j's coverage frontier to ``target`` by folding its
+        aged ring entries into centroids (kv_compress.absorb_chunk),
+        touching only that slot — mid-decode neighbours must stay
+        bit-identical.  ``lengths`` = ring positions written so far."""
+        def leaf(node):
+            stacked = node["k_cents"].ndim == 5
+            ax = 1 if stacked else 0
+            sub = {k: jax.lax.dynamic_slice_in_dim(v, j, 1, axis=ax)
+                   for k, v in node.items()}
+            if stacked:
+                lyr = node["k_cents"].shape[0]
+                flat = {k: v.reshape((lyr,) + v.shape[2:])
+                        for k, v in sub.items()}
+                got = kv_compress.absorb_chunk(
+                    flat, jnp.full((lyr,), lengths, jnp.int32),
+                    jnp.full((lyr,), target, jnp.int32), ccfg)
+                got = {k: v[:, None] for k, v in got.items()}
+            else:
+                got = kv_compress.absorb_chunk(
+                    sub, jnp.full((1,), lengths, jnp.int32),
+                    jnp.full((1,), target, jnp.int32), ccfg)
+            return {k: jax.lax.dynamic_update_slice_in_dim(
+                node[k], got[k].astype(node[k].dtype), j, axis=ax)
+                for k in node}
+
+        def walk(node):
+            if _is_clustered_kv(node):
+                return leaf(node)
+            if isinstance(node, dict):
+                return {k: walk(v) for k, v in node.items()}
+            if isinstance(node, list):
+                return [walk(v) for v in node]
+            return node
+
+        return walk(cache)
 
     # admission-time conversion of a fresh (B=1) exact prefill cache into
     # the engine's clustered layout; ``template`` marks which leaves are

@@ -1,5 +1,6 @@
-from repro.sharding.rules import (Rules, annotate, annotate_prio, cache_spec,
-                                  constrain_cache, current_rules,
-                                  default_table, param_spec, shard_cache,
+from repro.sharding.rules import (Rules, admission_spec, annotate,
+                                  annotate_prio, cache_spec, constrain_cache,
+                                  current_rules, default_table, param_spec,
+                                  place_admission, shard_cache,
                                   shardings_from_specs, tree_param_specs,
                                   use_rules)  # noqa: F401

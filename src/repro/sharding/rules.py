@@ -284,6 +284,44 @@ def cache_spec(path: str, shape: Sequence[int], rules: Rules) -> P:
     return P(*dims)
 
 
+def admission_spec(path: str, shape: Sequence[int], rules: Rules) -> P:
+    """Partition spec for a B=1 admission-prefill cache leaf.
+
+    A single request's cache can't shard its slot dim (size 1) and an
+    array can't live on a strict subset of the jit's device set (jax
+    requires one device assignment per computation), so the data-axis
+    copy is unavoidable for the *blocking* admission path — but the
+    kv-head dims CAN shard over the model axis, cutting the admission
+    transfer volume by the model-parallel factor versus the old
+    replicate-everything ``P()`` placement.  The chunked admission path
+    removes the B=1 cache entirely (prompt KV streams into the already-
+    sharded engine slots), which is the complete fix.
+    """
+    name = path.split("/")[-1]
+    dims: list = [None] * len(shape)
+    head_off = _CACHE_HEAD_AXIS.get(name)
+    if name in ("k_scale", "v_scale"):
+        head_off = 1
+    if head_off is not None and len(shape) >= head_off:
+        res = rules.axes_for("kv_heads", shape[len(shape) - head_off])
+        if res:
+            dims[len(shape) - head_off] = res
+    return P(*dims)
+
+
+def place_admission(cache, rules: Rules):
+    """Place a B=1 admission-prefill cache on the mesh with
+    ``admission_spec`` layouts (model-sharded heads, minimal replication)
+    before the donated slot-write scatters it into the engine cache."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    placed = [
+        jax.device_put(leaf, NamedSharding(
+            rules.mesh, admission_spec(_leaf_path(kp), leaf.shape, rules)))
+        for kp, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, placed)
+
+
 def _leaf_path(kp) -> str:
     return "/".join(_key_str(k) for k in kp)
 

@@ -86,6 +86,84 @@ def test_compressed_centroids_approximate_attention():
     assert rel < 0.25, rel
 
 
+def test_mixed_mode_kernel_matches_stepwise_decode():
+    """The mixed-mode launch (prompt chunk + decode rows in one call) must
+    reproduce the one-token path run L times: feeding a chunk's rows one
+    at a time through the single-row kernel — writing each row into the
+    ring before its own scoring — yields the same outputs as scoring the
+    whole chunk in one fused call with the rows pre-written.  Pins the
+    per-row position masks (intra-chunk causality via the ring) and the
+    SMEM chunk_len plumbing."""
+    from repro.kernels.clustered_decode import clustered_decode_pallas
+    rng = np.random.default_rng(11)
+    c, r, hq, hkv, dh, L = 6, 8, 4, 2, 16, 5
+    # mid-stream slot, ring wrapped.  The chunk's pre-write overwrites
+    # ring positions t0+i-r (the oldest live entries), so the engine
+    # invariant cov >= t0 + L - r must hold — those positions are then
+    # already summarized by centroids and masked from the ring either way
+    t0, cov = 9, 6
+    k_cents = jnp.asarray(rng.normal(size=(1, c, hkv, dh)), jnp.float32)
+    v_cents = jnp.asarray(rng.normal(size=(1, c, hkv, dh)), jnp.float32)
+    counts = jnp.asarray(rng.uniform(0, 3, size=(1, c, hkv)), jnp.float32)
+    k_tail = jnp.asarray(rng.normal(size=(1, r, hkv, dh)), jnp.float32)
+    v_tail = jnp.asarray(rng.normal(size=(1, r, hkv, dh)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(1, L, hq, dh)), jnp.float32)
+    k_new = jnp.asarray(rng.normal(size=(L, hkv, dh)), jnp.float32)
+    v_new = jnp.asarray(rng.normal(size=(L, hkv, dh)), jnp.float32)
+
+    # reference: one row at a time (write row i at slot (t0+i) % r, score)
+    kt, vt = k_tail, v_tail
+    want = []
+    for i in range(L):
+        slot = (t0 + i) % r
+        kt = kt.at[:, slot].set(k_new[i][None])
+        vt = vt.at[:, slot].set(v_new[i][None])
+        out = clustered_decode_pallas(
+            q[:, i], k_cents, v_cents, counts, kt, vt,
+            jnp.asarray([t0 + i], jnp.int32), jnp.asarray([cov], jnp.int32),
+            scale=dh**-0.5)
+        want.append(np.asarray(out))
+
+    # fused: all rows pre-written, one launch with chunk_len = L
+    kt2, vt2 = k_tail, v_tail
+    for i in range(L):
+        kt2 = kt2.at[:, (t0 + i) % r].set(k_new[i][None])
+        vt2 = vt2.at[:, (t0 + i) % r].set(v_new[i][None])
+    got = clustered_decode_pallas(
+        q, k_cents, v_cents, counts, kt2, vt2,
+        jnp.asarray([t0], jnp.int32), jnp.asarray([cov], jnp.int32),
+        jnp.asarray([L], jnp.int32), scale=dh**-0.5)
+    for i in range(L):
+        np.testing.assert_allclose(np.asarray(got)[:, i], want[i],
+                                   rtol=1e-5, atol=1e-5, err_msg=f"row {i}")
+
+
+def test_mixed_mode_masks_rows_past_chunk_len():
+    """Rows at index >= chunk_len are garbage by contract, but rows below
+    must be unaffected by their presence (mask isolation)."""
+    from repro.kernels.clustered_decode import clustered_decode_pallas
+    rng = np.random.default_rng(12)
+    c, r, hq, hkv, dh, L = 4, 8, 2, 1, 8, 4
+    args = dict(
+        k_cents=jnp.asarray(rng.normal(size=(1, c, hkv, dh)), jnp.float32),
+        v_cents=jnp.asarray(rng.normal(size=(1, c, hkv, dh)), jnp.float32),
+        counts=jnp.asarray(rng.uniform(1, 2, size=(1, c, hkv)), jnp.float32),
+        k_tail=jnp.asarray(rng.normal(size=(1, r, hkv, dh)), jnp.float32),
+        v_tail=jnp.asarray(rng.normal(size=(1, r, hkv, dh)), jnp.float32))
+    q = jnp.asarray(rng.normal(size=(1, L, hq, dh)), jnp.float32)
+    t = jnp.asarray([5], jnp.int32)
+    cov = jnp.asarray([1], jnp.int32)
+    out2 = clustered_decode_pallas(q, *args.values(), t, cov,
+                                   jnp.asarray([2], jnp.int32),
+                                   scale=dh**-0.5)
+    q_junk = q.at[:, 2:].set(999.0)      # junk beyond chunk_len
+    out2b = clustered_decode_pallas(q_junk, *args.values(), t, cov,
+                                    jnp.asarray([2], jnp.int32),
+                                    scale=dh**-0.5)
+    np.testing.assert_array_equal(np.asarray(out2)[:, :2],
+                                  np.asarray(out2b)[:, :2])
+
+
 def test_int8_kv_decode_close_to_bf16():
     """int8 KV cache with per-head scales ≈ exact decode (scales set from
     observed key/value ranges)."""

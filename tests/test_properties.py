@@ -221,6 +221,94 @@ class TestCoverageFrontier:
         self._mass_equals_cov(cc2)
 
 
+class TestAbsorbChunkProperties:
+    """Invariants of streaming admission-time absorption
+    (``kv_compress.absorb_chunk``): as a prompt's chunks stream into the
+    tail ring, the coverage frontier must advance monotonically, total
+    summary mass must equal the covered positions (nothing dropped,
+    nothing double-counted), and the prompt-time centroid budget must
+    confine all mass to its rows."""
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.sampled_from([(8, 16, 2, 0), (6, 12, 1, 4), (4, 8, 2, 2)]),
+           st.integers(1, 6),
+           st.integers(0, 10_000))
+    def test_streaming_absorb_conserves_and_advances(self, shape, chunk,
+                                                     seed):
+        C, R, H, budget = shape
+        chunk = min(chunk, R)
+        rng = np.random.default_rng(seed)
+        cfg = kv_compress.KVCompressConfig(n_clusters=C, iters=2,
+                                           keep_recent=R, refresh_every=2,
+                                           prompt_clusters=budget)
+        dh = 8
+        cache = {
+            "k_cents": jnp.zeros((1, C, H, dh), jnp.float32),
+            "v_cents": jnp.zeros((1, C, H, dh), jnp.float32),
+            "counts": jnp.zeros((1, C, H), jnp.float32),
+            "k_tail": jnp.zeros((1, R, H, dh), jnp.float32),
+            "v_tail": jnp.zeros((1, R, H, dh), jnp.float32),
+            "cov": jnp.zeros((1,), jnp.int32),
+        }
+        plen = int(rng.integers(R + 1, 3 * R + 1))  # forces absorption
+        fed = 0
+        while fed < plen:
+            cl = min(chunk, plen - fed)
+            cov = int(np.asarray(cache["cov"])[0])
+            if fed + cl - cov > R:
+                # the engine's pre-feed absorb: make ring room for the
+                # chunk, keeping the eviction-safety margin
+                target = int(np.clip(fed + cl - R + cfg.refresh, 0, fed))
+                prev_cov = cov
+                cache = kv_compress.absorb_chunk(
+                    cache, jnp.asarray([fed], jnp.int32),
+                    jnp.asarray([target], jnp.int32), cfg)
+                cov = int(np.asarray(cache["cov"])[0])
+                assert cov == target >= prev_cov
+                mass = np.asarray(cache["counts"]).sum()
+                np.testing.assert_allclose(mass, cov * H, rtol=1e-5,
+                                           atol=1e-3)
+                # budgeted admission: all mass inside the first
+                # ``prompt_budget`` centroid rows
+                beyond = np.asarray(cache["counts"])[0, cfg.prompt_budget:]
+                assert (beyond == 0).all()
+            # stream the chunk into the ring at positions fed..fed+cl-1
+            for i in range(cl):
+                slot = (fed + i) % R
+                row = rng.normal(size=(H, dh)).astype(np.float32)
+                cache["k_tail"] = cache["k_tail"].at[0, slot].set(row)
+                cache["v_tail"] = cache["v_tail"].at[0, slot].set(row)
+            fed += cl
+        # end-of-admission absorb: the engine's post-feed invariant
+        target = int(np.clip(plen - R + cfg.refresh, 0, plen))
+        if int(np.asarray(cache["cov"])[0]) < target:
+            cache = kv_compress.absorb_chunk(
+                cache, jnp.asarray([plen], jnp.int32),
+                jnp.asarray([target], jnp.int32), cfg)
+        cov = int(np.asarray(cache["cov"])[0])
+        assert cov >= plen - R + cfg.refresh
+        np.testing.assert_allclose(np.asarray(cache["counts"]).sum(),
+                                   cov * H, rtol=1e-5, atol=1e-3)
+
+    @settings(max_examples=6, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_noop_target_keeps_slot_bit_identical(self, seed):
+        """target_cov <= cov must not perturb a slot at all — mid-decode
+        neighbours of an admitting slot rely on this."""
+        rng = np.random.default_rng(seed)
+        cfg = kv_compress.KVCompressConfig(n_clusters=4, iters=2,
+                                           keep_recent=8, refresh_every=2)
+        k = jnp.asarray(rng.normal(size=(2, 32, 2, 8)), jnp.float32)
+        lengths = jnp.asarray([30, 24], jnp.int32)
+        cc = kv_compress.compress_cache_batched(k, k, lengths, cfg)
+        cov = np.asarray(cc["cov"])
+        out = kv_compress.absorb_chunk(cc, lengths,
+                                       jnp.asarray(cov, jnp.int32), cfg)
+        for key in ("k_cents", "v_cents", "counts", "cov"):
+            np.testing.assert_array_equal(np.asarray(out[key]),
+                                          np.asarray(cc[key]), err_msg=key)
+
+
 class TestGradCompressProperties:
     @settings(max_examples=10, deadline=None)
     @given(st.integers(0, 1000))

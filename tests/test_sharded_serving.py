@@ -86,6 +86,45 @@ def test_sharded_engine_parity_with_midstream_compaction():
 
 
 @pytest.mark.slow
+def test_sharded_chunked_prefill_parity():
+    """Chunked, decode-interleaved prefill on a 2x4 mesh: admission
+    streams prompt chunks into the already-sharded engine cache (no B=1
+    cache, no mesh replication), one admitting slot per data shard, and
+    greedy tokens must stay bit-identical to the single-device chunked
+    engine — exact KV and clustered KV with mid-stream compaction +
+    absorb both."""
+    run_sub(_COMMON + """
+    ref = Server(CFG, ServerConfig(batch_size=4, max_seq=64,
+                                   prefill_chunk=8), params)
+    ref_out = {o.uid: o.tokens for o in ref.serve(reqs, prompts)}
+    srv = Server(CFG, ServerConfig(batch_size=4, max_seq=64,
+                                   prefill_chunk=8, mesh=mesh), params)
+    outs = srv.serve(reqs, prompts)
+    assert sorted(o.uid for o in outs) == sorted(r.uid for r in reqs)
+    for o in outs:
+        assert o.tokens == ref_out[o.uid], (o.uid, o.tokens, ref_out[o.uid])
+    assert srv.last_stats["prefill_chunks"] > 0
+    assert srv.last_stats["prefill_pad_frac"] == 0.0
+
+    ccfg = kv_compress.KVCompressConfig(n_clusters=8, iters=4,
+                                        keep_recent=16, refresh_every=8)
+    ref_c = Server(CFG, ServerConfig(batch_size=4, max_seq=64,
+                                     kv_compress=ccfg, prefill_chunk=8),
+                   params)
+    refc_out = {o.uid: o.tokens for o in ref_c.serve(reqs, prompts)}
+    srv_c = Server(CFG, ServerConfig(batch_size=4, max_seq=64,
+                                     kv_compress=ccfg, prefill_chunk=8,
+                                     mesh=mesh), params)
+    outs_c = srv_c.serve(reqs, prompts)
+    for o in outs_c:
+        assert o.tokens == refc_out[o.uid], (o.uid, o.tokens,
+                                             refc_out[o.uid])
+    assert srv_c.last_stats["kv_absorbs"] > 0
+    print("sharded chunked prefill parity OK")
+    """)
+
+
+@pytest.mark.slow
 def test_indivisible_heads_fall_back_to_replication():
     """A model whose kv-head count doesn't divide the model axis must
     still serve correctly (heads replicate, slots stay data-sharded)."""
