@@ -24,8 +24,14 @@ Prints ``name,us_per_call,derived`` CSV rows:
                            ``--mesh DATAxMODEL`` adds mesh-sharded
                            variants (slots over data, heads over model)
                            so 1x1 vs NxM tokens/s compare directly;
-                           ``--seed`` + the JSON record at --json-out
-                           make FIFO-vs-clustered runs reproducible
+                           ``--paged`` adds the paged memory manager
+                           (block-pool KV tails, packed ragged launches)
+                           and records its padded-compute waste vs the
+                           dense bucketed path; ``--seed`` + the JSON
+                           record at --json-out (deduplicated on git sha
+                           + seed + mesh + scenario, with the Pallas
+                           backend/interpret flag stamped per run) make
+                           FIFO-vs-clustered runs reproducible
   roofline_summary         headline numbers from the dry-run artifacts
 
 Run: ``PYTHONPATH=src python -m benchmarks.run [--quick] [scenario]``
@@ -239,10 +245,12 @@ def _git_sha() -> str:
 
 
 def serve_bench(quick=False, seed=7, mesh_spec=None,
-                json_out="artifacts/serve_bench.json"):
+                json_out="artifacts/serve_bench.json", paged=False):
+    from repro.kernels.ops import interpret_default
     from repro.launch.mesh import make_serving_mesh
     from repro.models import transformer as tfm
     from repro.models.config import ModelConfig
+    from repro.runtime.kv_pool import PagedKVConfig
     from repro.runtime.server import Server, ServerConfig
 
     SMALL = ModelConfig(name="serve-lm", family="dense", n_layers=2,
@@ -287,6 +295,19 @@ def serve_bench(quick=False, seed=7, mesh_spec=None,
             batch_size=4, max_seq=256, kv_compress=ccfg,
             prefill_chunk=chunk)),
     ]
+    if paged:
+        # paged memory manager (block-pool tails + packed ragged
+        # launches): same queue, same ccfg — tokens must stay identical
+        # to the dense clustered engine while padded-launch compute and
+        # peak KV bytes drop
+        pcfg = PagedKVConfig(block_size=8)
+        variants += [
+            ("serve_cont_paged_compact", ServerConfig(
+                batch_size=4, max_seq=256, kv_compress=ccfg, paged=pcfg)),
+            ("serve_cont_paged_compact_chunked", ServerConfig(
+                batch_size=4, max_seq=256, kv_compress=ccfg,
+                prefill_chunk=chunk, paged=pcfg)),
+        ]
     if mesh is not None:
         # mesh dimension of the scenario: same queue, same batch_size,
         # sharded engine — tokens/s compares 1x1 (variants above) vs
@@ -304,6 +325,13 @@ def serve_bench(quick=False, seed=7, mesh_spec=None,
                 batch_size=4, max_seq=256, kv_compress=ccfg,
                 prefill_chunk=chunk, mesh=mesh)),
         ]
+        if paged:
+            variants += [
+                (f"serve_cont_paged_compact_chunked_mesh{tag}", ServerConfig(
+                    batch_size=4, max_seq=256, kv_compress=ccfg,
+                    prefill_chunk=chunk, paged=PagedKVConfig(block_size=8),
+                    mesh=mesh)),
+            ]
     # the probe stream stands for the server's pre-burst traffic: a short-
     # prompt trickle that warms the decode path but NOT the long-prompt
     # admission shapes — so the timed burst charges each engine for the
@@ -390,13 +418,52 @@ def serve_bench(quick=False, seed=7, mesh_spec=None,
              f"ttft_p95_ratio={cmp['ttft_p95_ratio']:.2f};"
              f"tokens_identical={same}")
 
+    # paged vs dense on the same bursty queue: packed ragged launches must
+    # make padded-launch compute strictly smaller than the dense bucketed
+    # path while greedy tokens stay identical
+    for dense_name, paged_name in [
+            ("serve_cont_clustered_compact", "serve_cont_paged_compact"),
+            ("serve_cont_clustered_compact_chunked",
+             "serve_cont_paged_compact_chunked")]:
+        if dense_name not in by_name or paged_name not in by_name:
+            continue
+        rd, rp = by_name[dense_name], by_name[paged_name]
+        same = tokens_by_variant[dense_name] == tokens_by_variant[paged_name]
+        cmp = {
+            "launch_pad_frac_dense": rd["launch_pad_frac"],
+            "launch_pad_frac_paged": rp["launch_pad_frac"],
+            "pad_waste_below_dense": bool(
+                rp["launch_pad_frac"] < rd["launch_pad_frac"]),
+            "kv_bytes_peak_per_shard_dense": rd["kv_bytes_peak_per_shard"],
+            "kv_bytes_peak_per_shard_paged": rp["kv_bytes_peak_per_shard"],
+            "tokens_identical": bool(same),
+        }
+        comparisons[paged_name] = cmp
+        emit(f"{paged_name}_vs_dense", 0.0,
+             f"pad_frac={rp['launch_pad_frac']:.3f}_vs_"
+             f"{rd['launch_pad_frac']:.3f};"
+             f"below_dense={cmp['pad_waste_below_dense']};"
+             f"kv_bytes_ratio={rp['kv_bytes_peak_per_shard'] / max(rd['kv_bytes_peak_per_shard'], 1e-9):.2f};"
+             f"tokens_identical={same}")
+
     if json_out:
         os.makedirs(os.path.dirname(json_out) or ".", exist_ok=True)
-        # append-mode perf trajectory: one run record per (sha, seed,
-        # mesh, quick) key — re-runs of the same commit replace their
-        # record instead of stacking duplicates
+        # append-mode perf trajectory deduplicated on (git sha, seed,
+        # mesh, scenario) — re-runs of the same commit/config replace
+        # their record instead of stacking duplicates.  Legacy records
+        # (pre-scenario) are rekeyed from their quick flag.
+        scenario = ("serve" + ("_paged" if paged else "")
+                    + ("_quick" if quick else ""))
         run_key = {"git_sha": _git_sha(), "seed": seed,
-                   "mesh": mesh_spec or "1x1", "quick": bool(quick)}
+                   "mesh": mesh_spec or "1x1", "scenario": scenario}
+
+        def _key_of(h):
+            sc = h.get("scenario")
+            if sc is None:          # legacy record: quick flag only
+                sc = "serve" + ("_quick" if h.get("quick") else "")
+            return {"git_sha": h.get("git_sha"), "seed": h.get("seed"),
+                    "mesh": h.get("mesh"), "scenario": sc}
+
         history = []
         if os.path.exists(json_out):
             try:
@@ -408,8 +475,14 @@ def serve_bench(quick=False, seed=7, mesh_spec=None,
                 history = []
         history = [h for h in history
                    if isinstance(h, dict) and "records" in h  # old format
-                   and {k: h.get(k) for k in run_key} != run_key]
-        history.append({**run_key, "timestamp": time.time(),
+                   and _key_of(h) != run_key]
+        history.append({**run_key, "quick": bool(quick),
+                        "timestamp": time.time(),
+                        # which Pallas backend produced these numbers —
+                        # interpret-mode CPU results are not comparable
+                        # to Mosaic-compiled TPU runs
+                        "backend": jax.default_backend(),
+                        "pallas_interpret": bool(interpret_default()),
                         "records": records, "comparisons": comparisons})
         with open(json_out, "w") as fh:
             json.dump(history, fh, indent=1)
@@ -467,6 +540,11 @@ def main() -> None:
                          "automatically)")
     ap.add_argument("--json-out", default="artifacts/serve_bench.json",
                     help="where the serve scenario writes its JSON records")
+    ap.add_argument("--paged", action="store_true",
+                    help="add paged-engine variants to the serve scenario "
+                         "(block-pool KV tails + packed ragged launches); "
+                         "records padded-compute waste vs the dense "
+                         "bucketed path")
     args = ap.parse_args()
     only = args.only or args.scenario
     print("name,us_per_call,derived")
@@ -475,7 +553,7 @@ def main() -> None:
             continue
         if b is serve_bench:
             b(quick=args.quick, seed=args.seed, mesh_spec=args.mesh,
-              json_out=args.json_out)
+              json_out=args.json_out, paged=args.paged)
         else:
             b(quick=args.quick)
 

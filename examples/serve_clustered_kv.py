@@ -106,6 +106,38 @@ def main():
           f"{srv_c.last_stats['tokens_per_s']:.1f} tok/s, token agreement "
           f"vs exact serving {agree * 100:.0f}%")
 
+    # --- paged clustered-KV memory manager (ServerConfig.paged) ---
+    # The engines above allocate every slot's exact tail as a full dense
+    # ring.  The paged engine instead draws fixed-size blocks from a
+    # shared per-shard pool behind per-slot block tables
+    # (runtime/kv_pool.py): blocks map lazily right before the write that
+    # needs them, recycle the moment a request exits, and return to the
+    # pool mid-stream once compaction's coverage frontier passes them.
+    # Decode runs as PACKED ragged launches — one row per real
+    # (slot, position) pair via the Pallas paged_clustered_decode kernel
+    # gathering tail blocks through the block table — so mixed
+    # prefill+decode compute scales with real tokens instead of
+    # slots × chunk (PagedAttention-style).  Greedy tokens stay
+    # bit-identical to the dense clustered engine.
+    from repro.runtime.kv_pool import PagedKVConfig
+    srv_p = Server(SMALL, ServerConfig(batch_size=4, max_seq=256,
+                                       kv_compress=ccfg, prefill_chunk=16,
+                                       paged=PagedKVConfig(block_size=8)),
+                   params)
+    outs_p = srv_p.serve(reqs, prompts)
+    same_p = all(a.tokens == b.tokens for a, b in
+                 zip(sorted(outs_p, key=lambda o: o.uid),
+                     sorted(outs_c, key=lambda o: o.uid)))
+    stp, stc = srv_p.last_stats, srv_c.last_stats
+    print(f"[server] paged KV (8-pos blocks): tokens "
+          f"{'identical' if same_p else 'DIVERGED'} vs dense clustered; "
+          f"launch padding {stp['launch_pad_frac'] * 100:.0f}% vs dense "
+          f"{stc['launch_pad_frac'] * 100:.0f}%, pool peak "
+          f"{stp['pool_occupancy_peak'] * 100:.0f}% of "
+          f"{stp['pool_blocks_total']:.0f} blocks "
+          f"({stp['pool_allocs']:.0f} allocs / {stp['pool_frees']:.0f} "
+          f"frees, {stp['pool_blocks_end']:.0f} still held at drain)")
+
     # --- mesh-sharded serving (slots x tensor parallel) ---
     # With N>1 visible devices (XLA_FLAGS above) the same queue is served
     # on a (data, model) mesh: the engine cache becomes sharded arrays

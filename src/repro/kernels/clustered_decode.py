@@ -64,6 +64,46 @@ _SHARD_MAP_NO_CHECK = (
 NEG = -1e30
 
 
+def score_and_combine(q, kc, vc, cnt, kt, vt, row_ok, tail_ok, *,
+                      scale: float, softcap):
+    """Shared [centroids ⊕ tail ring] joint-softmax body.
+
+    q (rows, Dh) f32 query rows; kc/vc (C, Dh); cnt (C,); kt/vt (R, Dh);
+    row_ok broadcastable to (rows, C) — masks invalid/padding rows;
+    tail_ok (rows, R) — the full ring validity mask (position window,
+    coverage frontier, and row validity pre-combined by the caller).
+    Returns (rows, Dh) f32.
+
+    Both the dense ``clustered_decode`` kernel and the paged
+    ``paged_clustered_decode`` kernel call THIS function for their
+    scoring — bit-identity between the two engines is a hard invariant
+    (the paged engine's tokens must equal the dense engine's), so the
+    math must never fork."""
+    s_c = jax.lax.dot_general(q, kc, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s_c = jnp.tanh(s_c / softcap) * softcap
+    cnt_row = cnt[None, :]                                   # (1, C)
+    s_c = jnp.where((cnt_row > 0) & row_ok,
+                    s_c + jnp.log(jnp.maximum(cnt_row, 1e-9)), NEG)
+
+    s_t = jax.lax.dot_general(q, kt, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s_t = jnp.tanh(s_t / softcap) * softcap
+    s_t = jnp.where(tail_ok, s_t, NEG)
+
+    m = jnp.maximum(s_c.max(-1, keepdims=True), s_t.max(-1, keepdims=True))
+    p_c = jnp.exp(s_c - m)
+    p_t = jnp.exp(s_t - m)
+    lsum = p_c.sum(-1, keepdims=True) + p_t.sum(-1, keepdims=True)
+    acc = (jax.lax.dot_general(p_c, vc, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+           + jax.lax.dot_general(p_t, vt, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32))
+    return acc / jnp.maximum(lsum, 1e-30)
+
+
 def _kernel(t_ref, cov_ref, len_ref, q_ref, kc_ref, vc_ref, cnt_ref, kt_ref,
             vt_ref, o_ref, *, l: int, g: int, r: int, scale: float, softcap):
     t = t_ref[0]
@@ -80,18 +120,6 @@ def _kernel(t_ref, cov_ref, len_ref, q_ref, kc_ref, vc_ref, cnt_ref, kt_ref,
     li = jax.lax.broadcasted_iota(jnp.int32, (l * g, 1), 0) // g
     row_ok = li < cl
 
-    s_c = jax.lax.dot_general(q, kc, (((1,), (1,)), ((), ())),
-                              preferred_element_type=jnp.float32) * scale
-    if softcap is not None:
-        s_c = jnp.tanh(s_c / softcap) * softcap
-    cnt_row = cnt[None, :]                                   # (1, C)
-    s_c = jnp.where((cnt_row > 0) & row_ok,
-                    s_c + jnp.log(jnp.maximum(cnt_row, 1e-9)), NEG)
-
-    s_t = jax.lax.dot_general(q, kt, (((1,), (1,)), ((), ())),
-                              preferred_element_type=jnp.float32) * scale
-    if softcap is not None:
-        s_t = jnp.tanh(s_t / softcap) * softcap
     # chunk rows sit in the ring already: tw = t + cl entries total.  Ring
     # slot s holds position s while tw <= R, else the wrapped window.
     sl = jax.lax.broadcasted_iota(jnp.int32, (1, r), 1)
@@ -100,17 +128,9 @@ def _kernel(t_ref, cov_ref, len_ref, q_ref, kc_ref, vc_ref, cnt_ref, kt_ref,
     pos = jnp.where(tw <= r, sl, wrapped)                    # (1, R)
     qpos = t + li                                            # (L*G, 1)
     ok = (pos >= 0) & (pos < qpos + 1) & (pos >= cov) & row_ok
-    s_t = jnp.where(ok, s_t, NEG)
 
-    m = jnp.maximum(s_c.max(-1, keepdims=True), s_t.max(-1, keepdims=True))
-    p_c = jnp.exp(s_c - m)
-    p_t = jnp.exp(s_t - m)
-    lsum = p_c.sum(-1, keepdims=True) + p_t.sum(-1, keepdims=True)
-    acc = (jax.lax.dot_general(p_c, vc, (((1,), (0,)), ((), ())),
-                               preferred_element_type=jnp.float32)
-           + jax.lax.dot_general(p_t, vt, (((1,), (0,)), ((), ())),
-                                 preferred_element_type=jnp.float32))
-    out = acc / jnp.maximum(lsum, 1e-30)
+    out = score_and_combine(q, kc, vc, cnt, kt, vt, row_ok, ok,
+                            scale=scale, softcap=softcap)
     o_ref[0, 0] = out.reshape(l, g, -1).astype(o_ref.dtype)
 
 

@@ -19,6 +19,7 @@ from repro.core import bitserial
 from repro.kernels import bitserial_median as _bsm
 from repro.kernels import clustered_decode as _cd
 from repro.kernels import distance_argmin as _da
+from repro.kernels import paged_clustered_decode as _pcd
 
 # points that fit the VMEM-resident kernel comfortably (u + active + forced
 # + temporaries at TD=128 lanes ≈ 4 f32 planes ⇒ ~8 MB at 4096 points)
@@ -130,3 +131,61 @@ def clustered_decode(q, k_cents, v_cents, counts, k_tail, v_tail, t, cov,
     return _clustered_decode_jit(
         q, k_cents, v_cents, counts, k_tail, v_tail, t, cov, chunk_len,
         scale=scale, softcap=softcap, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("scale", "softcap", "interpret"))
+def _paged_clustered_decode_jit(q, k_cents, v_cents, counts, k_pool, v_pool,
+                                row_slot, row_bt, qpos1, tw, cov, *,
+                                scale: float, softcap: float | None,
+                                interpret: bool):
+    return _pcd.paged_clustered_decode_pallas(
+        q, k_cents, v_cents, counts, k_pool, v_pool, row_slot, row_bt,
+        qpos1, tw, cov, scale=scale, softcap=softcap, interpret=interpret)
+
+
+def paged_clustered_decode(q, k_cents, v_cents, counts, k_pool, v_pool,
+                           row_slot, row_bt, qpos1, tw, cov, *, scale: float,
+                           softcap: float | None = None,
+                           interpret: bool | None = None):
+    """Paged clustered-KV decode over packed ragged rows.
+
+    The paged-vs-dense choice is made at trace time by the caller
+    (models/attention dispatches here when the cache carries a block
+    pool, and to ``clustered_decode`` above for the dense per-slot ring)
+    — this wrapper then picks shard_map vs plain launch exactly like the
+    dense one.  q (N, Hq, Dh) packed (slot, position) rows; k/v_pool
+    (nb, bs, Hkv, Dh) tail block pools; row_bt (N, T) physical block per
+    ring block (all entries valid — unmapped blocks pre-sanitized to a
+    masked garbage block); qpos1/tw/cov per-row position + 1 / ring
+    watermark / coverage frontier.
+
+    Under mesh serving rows, slots, and the pool shard over ``data``
+    (block ids are global and rebased per shard inside the island), heads
+    over ``model``.  Divisibility of the rows, slots, AND pool blocks is
+    required for data sharding — the engine packs rows per shard, so a
+    fallback to replication only triggers for indivisible slot counts,
+    matching the dense path."""
+    if interpret is None:
+        interpret = interpret_default()
+    hq = q.shape[-2]
+    from repro.sharding import current_rules
+    r = current_rules()
+    if r is not None:
+        data_axes, model_axes = _kernel_shard_axes(
+            r, k_cents.shape[0], hq, k_cents.shape[2])
+        if data_axes is not None:
+            # rows and pool must split the same way as slots
+            total = 1
+            for a in data_axes:
+                total *= r.mesh.shape[a]
+            if q.shape[0] % total or k_pool.shape[0] % total:
+                data_axes = None
+        if data_axes is not None or model_axes is not None:
+            return _pcd.paged_clustered_decode_shardmap(
+                q, k_cents, v_cents, counts, k_pool, v_pool, row_slot,
+                row_bt, qpos1, tw, cov, mesh=r.mesh, data_axes=data_axes,
+                model_axes=model_axes, scale=scale, softcap=softcap,
+                interpret=interpret)
+    return _paged_clustered_decode_jit(
+        q, k_cents, v_cents, counts, k_pool, v_pool, row_slot, row_bt,
+        qpos1, tw, cov, scale=scale, softcap=softcap, interpret=interpret)

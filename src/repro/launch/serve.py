@@ -35,8 +35,10 @@ import numpy as np  # noqa: E402
 from repro import configs  # noqa: E402
 from repro.core.request_cluster import (Request, plan_batches,  # noqa: E402
                                         plan_fifo)
+from repro.core import kv_compress  # noqa: E402
 from repro.launch.mesh import make_serving_mesh  # noqa: E402
 from repro.models import transformer as tfm  # noqa: E402
+from repro.runtime.kv_pool import PagedKVConfig  # noqa: E402
 from repro.runtime.server import Server, ServerConfig  # noqa: E402
 
 
@@ -58,6 +60,29 @@ def main():
                          "admission prompts in chunks of this many tokens "
                          "fused into the decode launch (0 = blocking "
                          "prefill); hides admission latency under load")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged clustered-KV memory manager: tail rings "
+                         "live in a per-shard block pool behind per-slot "
+                         "block tables, decode runs as packed ragged "
+                         "launches (compute ∝ real tokens); implies "
+                         "clustered-KV serving (--kv-clusters et al.)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged: ring positions per pool block (must "
+                         "divide --keep-recent)")
+    ap.add_argument("--pool-blocks", type=int, default=0,
+                    help="paged: blocks per data shard (0 = full "
+                         "provisioning; less oversubscribes and relies "
+                         "on compaction give-back)")
+    ap.add_argument("--kv-clusters", type=int, default=None,
+                    help="clustered serving: centroids per slot/head "
+                         "(setting any --kv-* flag enables clustered-KV "
+                         "serving; default 32)")
+    ap.add_argument("--keep-recent", type=int, default=None,
+                    help="clustered serving: exact tail ring length "
+                         "(default 64)")
+    ap.add_argument("--refresh-every", type=int, default=None,
+                    help="clustered serving: decode steps between "
+                         "compactions (default 32)")
     args = ap.parse_args()
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
@@ -86,10 +111,27 @@ def main():
         mesh = make_serving_mesh(args.mesh)
         print(f"[serve] mesh {args.mesh}: slots over data={mesh.shape['data']}"
               f", heads over model={mesh.shape['model']}")
+    ccfg = paged = None
+    clustered = args.paged or any(
+        v is not None for v in (args.kv_clusters, args.keep_recent,
+                                args.refresh_every))
+    if clustered:
+        ccfg = kv_compress.KVCompressConfig(
+            n_clusters=args.kv_clusters or 32, iters=4,
+            keep_recent=args.keep_recent or 64,
+            refresh_every=args.refresh_every or 32)
+        print(f"[serve] clustered KV: C={ccfg.n_clusters} "
+              f"R={ccfg.keep_recent} refresh={ccfg.refresh_every}")
+    if args.paged:
+        paged = PagedKVConfig(block_size=args.block_size,
+                              pool_blocks=args.pool_blocks)
+        print(f"[serve] paged KV: {args.block_size}-position blocks, "
+              f"{args.pool_blocks or 'auto'} blocks/shard")
     srv = Server(cfg, ServerConfig(
         batch_size=args.batch_size, max_seq=args.max_seq,
         use_clustered_batching=not args.no_clustering, mesh=mesh,
-        prefill_chunk=args.prefill_chunk), params)
+        prefill_chunk=args.prefill_chunk, kv_compress=ccfg,
+        paged=paged), params)
     t0 = time.perf_counter()
     outs = srv.serve(reqs, prompts)
     dt = time.perf_counter() - t0
@@ -109,6 +151,13 @@ def main():
               f"{st['launch_bucket_mean']:.2f} slots/shard, launched "
               f"{st['launch_rows_frac'] * 100:.0f}% of {args.batch_size} "
               f"slots per step")
+    if "pool_occupancy_peak" in st and args.paged:
+        print(f"[serve] paged pool: peak occupancy "
+              f"{st['pool_occupancy_peak'] * 100:.0f}%, "
+              f"{st['pool_allocs']:.0f} allocs / {st['pool_frees']:.0f} "
+              f"frees, launch padding {st['launch_pad_frac'] * 100:.0f}%, "
+              f"peak KV {st['kv_bytes_peak_per_shard'] / 1024:.0f} "
+              f"KiB/shard (frag {st['kv_frag'] * 100:.0f}%)")
     if mesh is not None:
         if "n_data_shards" in srv.last_stats:
             ws = [f"{srv.last_stats[f'slot_waste_shard{s}']:.2f}"

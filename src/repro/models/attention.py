@@ -308,21 +308,33 @@ def attn_prefill(p, x, cfg: ModelConfig, *, layer_kind: str, positions,
 
 def init_cache_attn_clustered(cfg: ModelConfig, batch: int, *,
                               n_clusters: int = 512, tail: int = 256,
-                              kv_repeat: int = 1, dtype=None):
+                              kv_repeat: int = 1, dtype=None,
+                              pool_blocks: int = 0, block_size: int = 0):
     """Clustered KV cache for global-attention layers (the paper's memory
     manager): C median centroids (+ per-centroid counts) stand in for the
     compressed prefix; the most recent ``tail`` keys stay exact in a ring.
     The serving runtime refreshes centroids with core.kv_compress every
-    ``tail`` steps, so the prefix is always covered."""
+    ``tail`` steps, so the prefix is always covered.
+
+    With ``pool_blocks``/``block_size`` set (paged serving), the tail
+    leaves become a shared block pool ``(pool_blocks, block_size, H, Dh)``
+    instead of a per-slot ring — ring offset ``r`` of a slot lives at
+    offset ``r % block_size`` of the physical block its block table maps
+    for ring block ``r // block_size`` (runtime/kv_pool.py).  Centroids,
+    counts, and ``cov`` stay dense per slot either way."""
     dt = dtype or cdtype(cfg)
     hkv = cfg.n_kv_heads * kv_repeat
     dh = cfg.head_dim
+    if pool_blocks:
+        tail_shape = (pool_blocks, block_size, hkv, dh)
+    else:
+        tail_shape = (batch, tail, hkv, dh)
     return {
         "k_cents": jnp.zeros((batch, n_clusters, hkv, dh), dt),
         "v_cents": jnp.zeros((batch, n_clusters, hkv, dh), dt),
         "counts": jnp.zeros((batch, n_clusters, hkv), jnp.float32),
-        "k_tail": jnp.zeros((batch, tail, hkv, dh), dt),
-        "v_tail": jnp.zeros((batch, tail, hkv, dh), dt),
+        "k_tail": jnp.zeros(tail_shape, dt),
+        "v_tail": jnp.zeros(tail_shape, dt),
         # centroids summarize positions [0, cov); tail is exact for
         # [cov, t) — the partition makes compaction loss-free at the
         # ring-eviction boundary
@@ -420,6 +432,63 @@ def attn_decode_clustered(p, x, cfg: ModelConfig, *, cache, t,
                         "batch", "seq", None)
     y = out_flat.astype(x.dtype) @ p["wo"].astype(cdtype(cfg))
     new_cache = dict(cache, k_tail=k_tail, v_tail=v_tail)
+    return y, new_cache
+
+
+def attn_decode_clustered_packed(p, x, cfg: ModelConfig, *, cache,
+                                 row_slot, row_pos, row_tw, block_tables,
+                                 block_size: int, kv_repeat: int = 1):
+    """Paged clustered-KV attention over packed ragged rows.
+
+    x (N, 1, d): one embedding per real (slot, position) pair this step —
+    every decode slot's pending token ⊕ each admitting slot's prompt-chunk
+    rows, padded only to the per-shard row bucket (compute ∝ real tokens,
+    PagedAttention-style).  row_slot (N,) physical slot; row_pos (N,) the
+    row's absolute position (−1 ⇒ padding row, output garbage by
+    contract); row_tw (N,) the row's slot ring watermark t + chunk_len
+    (all of a chunk's rows are written before any row scores, so
+    intra-chunk causality falls out of the per-row position mask exactly
+    as in the dense mixed launch); block_tables (B, T) global physical
+    block ids — every entry valid, with blocks being *written* this step
+    freshly allocated by the engine (a sanitized dead-block alias would
+    corrupt its true owner).
+
+    The tail write scatters each row's K/V into its slot's pool block at
+    the ring offset the dense path would use, so the paged cache holds
+    bit-identical live bytes and greedy outputs match the dense engine
+    exactly."""
+    n = x.shape[0]
+    positions = row_pos[:, None]                          # (N, 1)
+    q, k, v = _qkv(p, x, cfg, positions, "G", kv_repeat)
+    k, v = k[:, 0], v[:, 0]                               # (N, Hkv, Dh)
+    t_blocks = block_tables.shape[1]
+    ring = t_blocks * block_size
+    nb = cache["k_tail"].shape[0]
+    row_bt = jnp.take(block_tables, row_slot, axis=0)     # (N, T)
+    roff = jnp.mod(row_pos, ring)
+    blk = jnp.take_along_axis(row_bt, (roff // block_size)[:, None],
+                              axis=1)[:, 0]
+    valid = row_pos >= 0
+    blk = jnp.where(valid, blk, nb)                       # pad rows drop
+    off = roff % block_size
+    k_pool = cache["k_tail"].at[blk, off].set(
+        k.astype(cache["k_tail"].dtype), mode="drop")
+    v_pool = cache["v_tail"].at[blk, off].set(
+        v.astype(cache["v_tail"].dtype), mode="drop")
+
+    qpos1 = jnp.where(valid, row_pos + 1, 0)
+    row_cov = jnp.take(cache["cov"], row_slot, axis=0)
+    hq = cfg.n_heads
+    from repro.kernels import ops as kops
+    out = kops.paged_clustered_decode(
+        q[:, 0], cache["k_cents"], cache["v_cents"], cache["counts"],
+        k_pool, v_pool, row_slot, row_bt, qpos1, row_tw, row_cov,
+        scale=_scale(cfg), softcap=cfg.attn_logit_softcap)
+    # same head-gather-before-wo rule as the dense clustered path
+    out_flat = annotate(out.reshape(n, 1, hq * cfg.head_dim),
+                        "batch", "seq", None)
+    y = out_flat.astype(x.dtype) @ p["wo"].astype(cdtype(cfg))
+    new_cache = dict(cache, k_tail=k_pool, v_tail=v_pool)
     return y, new_cache
 
 

@@ -128,14 +128,16 @@ def sublayer_train(p, h, cfg: ModelConfig, kind: str, *, positions,
 def init_sublayer_cache(cfg: ModelConfig, kind: str, batch: int,
                         max_seq: int, kv_repeat: int,
                         kv_mode: str = "exact", kv_clusters: int = 512,
-                        kv_tail: int = 256):
+                        kv_tail: int = 256, kv_pool_blocks: int = 0,
+                        kv_block_size: int = 0):
     if kind in ("G", "L"):
         if cfg.attn_kind == "mla":
             return attn.init_cache_mla(cfg, batch, max_seq)
         if kind == "G" and kv_mode == "clustered":
             return attn.init_cache_attn_clustered(
                 cfg, batch, n_clusters=kv_clusters, tail=kv_tail,
-                kv_repeat=kv_repeat)
+                kv_repeat=kv_repeat, pool_blocks=kv_pool_blocks,
+                block_size=kv_block_size)
         return attn.init_cache_attn(cfg, kind, batch, max_seq, kv_repeat,
                                     quantized=(kv_mode == "int8"))
     if kind == "M":
@@ -498,10 +500,16 @@ def _all_kinds(cfg: ModelConfig):
 
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
                kv_repeat: int = 1, kv_mode: str = "exact",
-               kv_clusters: int = 512, kv_tail: int = 256):
+               kv_clusters: int = 512, kv_tail: int = 256,
+               kv_pool_blocks: int = 0, kv_block_size: int = 0):
+    """``kv_pool_blocks``/``kv_block_size`` switch clustered tails to the
+    paged block-pool layout (see runtime/kv_pool.py); one pool per layer
+    leaf (scan-stacked leaves carry the layer dim), sharing the engine's
+    single block table."""
     n_prefix, n_rep, tail = layout(cfg)
     mk = lambda kind: init_sublayer_cache(  # noqa: E731
-        cfg, kind, batch, max_seq, kv_repeat, kv_mode, kv_clusters, kv_tail)
+        cfg, kind, batch, max_seq, kv_repeat, kv_mode, kv_clusters, kv_tail,
+        kv_pool_blocks, kv_block_size)
     cache = {
         "prefix": [mk("G") for _ in range(n_prefix)],
         "tail": [mk(k) for k in tail],
@@ -652,5 +660,80 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, t, *,
         idx = (jnp.broadcast_to(jnp.asarray(chunk_len, jnp.int32),
                                 (h.shape[0],)) - 1)[:, None, None]
         h = jnp.take_along_axis(h, idx, axis=1)
+    logits = lm_logits(params["embed"], h, cfg)[:, 0]
+    return logits, new_cache
+
+
+def _sublayer_decode_packed(p, h, cfg: ModelConfig, cache, *, row_slot,
+                            row_pos, row_tw, block_tables, block_size,
+                            kv_repeat):
+    """One 'G' sublayer over packed rows (paged clustered KV).  h
+    (N, 1, d); every non-attention op is row-wise, so rows stand in for
+    the batch axis exactly."""
+    x = apply_norm(p["norm1"], h, cfg)
+    y, cache = attn.attn_decode_clustered_packed(
+        p["attn"], x, cfg, cache=cache, row_slot=row_slot, row_pos=row_pos,
+        row_tw=row_tw, block_tables=block_tables, block_size=block_size,
+        kv_repeat=kv_repeat)
+    if cfg.post_norms:
+        y = apply_norm(p["post_attn_norm"], y, cfg)
+    h = h + y
+    h, _ = _ffn(p, h, cfg)
+    return h, cache
+
+
+def decode_step_packed(params, cfg: ModelConfig, cache, tokens, row_slot,
+                       row_pos, row_tw, block_tables, *, block_size: int,
+                       kv_repeat: int = 1):
+    """Packed ragged engine step for the paged clustered-KV path.
+
+    Instead of the dense launch's (slots, width) token grid — every slot
+    paying ``width`` rows of trunk compute — each *real* (slot, position)
+    pair is one row: tokens (N,), row_slot (N,) physical slot, row_pos
+    (N,) absolute position (−1 ⇒ padding row), row_tw (N,) the slot's
+    ring watermark t + chunk_len this step, block_tables (B, T) global
+    physical tail-block ids.  Returns (logits (N, V), cache'): every
+    row's next-token distribution — the engine reads each slot's last
+    valid row (decode slots: their one row; an admitting slot's final
+    chunk row carries its first generated token).  Decoder-only
+    all-global-attention models (the paged engine's gate); MLP / norms /
+    embeddings are position-independent, so treating rows as batch is
+    exact, and per-row outputs are bit-identical to the dense launch."""
+    tokens = jnp.where(row_pos >= 0, tokens, 0)[:, None]   # (N, 1)
+    h = embed_tokens(params["embed"], tokens, cfg)
+    if cfg.pos_kind == "abs_sinusoidal":
+        pe = jax.vmap(lambda ti: sinusoidal_pos(1, cfg.d_model,
+                                                offset=ti))(row_pos)
+        h = h + pe.astype(h.dtype)
+    h = annotate(h, "batch", "seq", "d_model")
+
+    step = lambda p, hh, c: _sublayer_decode_packed(  # noqa: E731
+        p, hh, cfg, c, row_slot=row_slot, row_pos=row_pos, row_tw=row_tw,
+        block_tables=block_tables, block_size=block_size,
+        kv_repeat=kv_repeat)
+
+    new_cache = {"prefix": [], "tail": []}
+    for lp, c in zip(params["prefix"], cache["prefix"]):
+        h, c2 = step(lp, h, c)
+        new_cache["prefix"].append(c2)
+
+    if "scan" in params:
+        def group_body(hh, xs):
+            lp, cs = xs
+            cs2 = dict(cs)
+            for j, _kind in enumerate(cfg.layer_pattern):
+                hh, cnew = step(lp[f"sub{j}"], hh, cs[f"sub{j}"])
+                cs2[f"sub{j}"] = cnew
+            return hh, cs2
+
+        h, scan_caches = jax.lax.scan(group_body, h,
+                                      (params["scan"], cache["scan"]))
+        new_cache["scan"] = scan_caches
+
+    for i, lp in enumerate(params["tail"]):
+        h, c2 = step(lp, h, cache["tail"][i])
+        new_cache["tail"].append(c2)
+
+    h = apply_norm(params["final_norm"], h, cfg)
     logits = lm_logits(params["embed"], h, cfg)[:, 0]
     return logits, new_cache

@@ -1,0 +1,290 @@
+"""Paged clustered-KV memory manager: a block-pool allocator for the
+tail rings of the clustered KV cache (PagedAttention-style memory
+management built on the paper's clustering-as-memory-manager thesis).
+
+The dense engine allocates every slot's exact tail as a contiguous
+``(slots, R, H, Dh)`` ring — a finished slot, an empty slot, and a slot
+whose ring is mostly *covered* (positions already folded into centroids)
+all pay the full ``R``.  The paged engine instead carves the tail into
+fixed-size blocks of ``block_size`` positions drawn from a shared
+per-shard pool:
+
+  * ring offset ``r`` lives at offset ``r % block_size`` of the block at
+    ``block_table[slot, r // block_size]`` — the ring *semantics* (position
+    ``p`` at offset ``p % R``) are unchanged, only the storage is
+    scattered, so the dense and paged engines stay token-identical;
+  * blocks are allocated lazily right before the decode/chunk write that
+    first touches them, recycled the moment a request exits, and returned
+    mid-stream by compaction: once the coverage frontier ``cov`` passes
+    every position a block claims, the block's payload is dead (centroids
+    summarize it) and it goes back to the free list;
+  * one block table is shared by every layer's pool: all clustered leaves
+    of a slot advance in lockstep (same ``t``/``cov``), so a single
+    (slot, ring-block) → physical-block mapping serves the whole stack.
+
+The allocator itself is host-side (the engine loop is host-driven and the
+table is pushed to the device as a small int32 array each launch); the
+block *payloads* are device-resident pool arrays inside the cache pytree
+(``k_tail``/``v_tail`` become ``(n_blocks, block_size, H, Dh)``), sharded
+over the data mesh axis exactly like slots (sharding/rules.cache_spec).
+
+Ref counts are kept per block so a future prefix-sharing admission path
+can map one physical block into several slots (copy-on-write); today
+every block has at most one owner and the counts back the allocator
+invariants pinned in tests/test_properties.py: no double allocation,
+alloc/free conservation, and live block tables only.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedKVConfig:
+    """Engine-facing paged-KV knobs (ServerConfig.paged).
+
+    ``block_size`` positions per block (must divide the clustered tail
+    ``keep_recent``); ``pool_blocks`` blocks per data shard shared by all
+    of that shard's slots — 0 = full provisioning (``slots_per_shard *
+    keep_recent / block_size``, never exhausts); sizing below that
+    oversubscribes memory and relies on admission laziness + compaction
+    returning covered blocks (PoolExhausted if a burst outruns it)."""
+    block_size: int = 16
+    pool_blocks: int = 0
+
+
+class PoolExhausted(RuntimeError):
+    """The per-shard free list ran dry.  Raise rather than silently
+    spilling: the caller chose the oversubscription ratio."""
+
+
+def ring_claims(t: int, r: int) -> np.ndarray:
+    """Host mirror of kv_compress.ring_positions: the absolute position
+    each of the ``r`` ring offsets claims at watermark ``t`` (next write
+    goes to offset ``t % r``)."""
+    s = np.arange(r)
+    if t <= r:
+        return s
+    return t - r + np.mod(s - t, r)
+
+
+def live_blocks(t: int, cov: int, r: int, block_size: int) -> List[int]:
+    """Ring-block indices holding at least one live position (claimed
+    position in ``[cov, t)``) at watermark ``t``."""
+    claims = ring_claims(t, r)
+    live = (claims >= cov) & (claims < t)
+    return sorted(set((np.nonzero(live)[0] // block_size).tolist()))
+
+
+def write_blocks(start: int, count: int, r: int, block_size: int) -> List[int]:
+    """Ring-block indices touched by writing positions
+    ``start .. start+count-1`` (a decode token or a prompt chunk)."""
+    offs = np.mod(start + np.arange(count), r)
+    return sorted(set((offs // block_size).tolist()))
+
+
+class BlockPool:
+    """Free-list block allocator with per-slot block tables.
+
+    Physical block ids are *global* (``shard * pool_blocks + local``) and
+    NamedSharding partitions the pool array's leading axis contiguously,
+    so shard ``s`` owns exactly the ids ``[s*pool_blocks, (s+1)*pool_blocks)``
+    — a slot only ever references blocks of its own shard, which is what
+    lets the Pallas kernel run per mesh shard without collectives.
+    """
+
+    def __init__(self, n_slots: int, tail: int, cfg: PagedKVConfig,
+                 n_shards: int = 1, slots_per_shard: Optional[int] = None):
+        if tail % cfg.block_size != 0:
+            raise ValueError(
+                f"block_size {cfg.block_size} must divide the clustered "
+                f"tail keep_recent={tail}")
+        self.cfg = cfg
+        self.tail = tail
+        self.block_size = cfg.block_size
+        self.blocks_per_slot = tail // cfg.block_size      # T
+        self.n_slots = n_slots
+        self.n_shards = max(n_shards, 1)
+        self.slots_per_shard = (slots_per_shard
+                                or max(n_slots // self.n_shards, 1))
+        self.pool_blocks = (cfg.pool_blocks or
+                            self.slots_per_shard * self.blocks_per_slot)
+        if self.pool_blocks < self.blocks_per_slot:
+            raise ValueError(
+                f"pool_blocks {self.pool_blocks} cannot hold even one "
+                f"slot's tail ({self.blocks_per_slot} blocks)")
+        self.n_blocks = self.n_shards * self.pool_blocks
+        # -1 = unmapped; otherwise a global physical block id
+        self.table = np.full((n_slots, self.blocks_per_slot), -1, np.int32)
+        self.ref = np.zeros(self.n_blocks, np.int32)
+        # min-heaps per shard (lowest free id first, O(log n) alloc/free)
+        self._free: List[List[int]] = [
+            list(range(s * self.pool_blocks, (s + 1) * self.pool_blocks))
+            for s in range(self.n_shards)
+        ]
+        self._live = 0
+        self._live_shard = np.zeros(self.n_shards, np.int64)
+        self.peak_blocks = 0
+        self.peak_blocks_shard = np.zeros(self.n_shards, np.int64)
+        self.n_allocs = 0
+        self.n_frees = 0
+        # set on every table mutation; the engine caches the device copy
+        # of the table and only re-uploads when this flips
+        self.dirty = True
+
+    # ------------------------------------------------------------------
+    # shard bookkeeping
+    # ------------------------------------------------------------------
+
+    def shard_of(self, slot: int) -> int:
+        return min(slot // self.slots_per_shard, self.n_shards - 1)
+
+    def shard_base(self, slot: int) -> int:
+        return self.shard_of(slot) * self.pool_blocks
+
+    # ------------------------------------------------------------------
+    # alloc / free
+    # ------------------------------------------------------------------
+
+    def allocated(self) -> int:
+        return self._live
+
+    def alloc(self, slot: int, block_idx: int) -> int:
+        """Map (slot, ring-block ``block_idx``) to a fresh physical block
+        from the slot's shard.  Lowest free id first (deterministic)."""
+        if self.table[slot, block_idx] >= 0:
+            return int(self.table[slot, block_idx])
+        s = self.shard_of(slot)
+        if not self._free[s]:
+            raise PoolExhausted(
+                f"KV block pool exhausted on data shard {s}: "
+                f"{self.pool_blocks} blocks all live — raise "
+                f"pool_blocks or shorten refresh_every so compaction "
+                f"returns covered blocks sooner")
+        gid = heapq.heappop(self._free[s])
+        self.ref[gid] = 1
+        self.table[slot, block_idx] = gid
+        self.dirty = True
+        self.n_allocs += 1
+        self._live += 1
+        self._live_shard[s] += 1
+        self.peak_blocks = max(self.peak_blocks, self._live)
+        self.peak_blocks_shard[s] = max(self.peak_blocks_shard[s],
+                                        self._live_shard[s])
+        return gid
+
+    def ensure(self, slot: int, block_indices: Sequence[int]) -> None:
+        for bi in block_indices:
+            self.alloc(slot, bi)
+
+    def share(self, gid: int) -> None:
+        """Take an extra reference on a live block (prefix sharing)."""
+        if self.ref[gid] <= 0:
+            raise ValueError(f"block {gid} is not live")
+        self.ref[gid] += 1
+
+    def _release(self, gid: int) -> None:
+        self.ref[gid] -= 1
+        if self.ref[gid] == 0:
+            s = gid // self.pool_blocks
+            heapq.heappush(self._free[s], int(gid))
+            self.n_frees += 1
+            self._live -= 1
+            self._live_shard[s] -= 1
+        elif self.ref[gid] < 0:
+            raise ValueError(f"double free of block {gid}")
+
+    def free_block(self, slot: int, block_idx: int) -> None:
+        gid = int(self.table[slot, block_idx])
+        if gid < 0:
+            return
+        self.table[slot, block_idx] = -1
+        self.dirty = True
+        self._release(gid)
+
+    def free_slot(self, slot: int) -> None:
+        """Recycle every block a slot holds (request exit / slot reset)."""
+        for bi in range(self.blocks_per_slot):
+            self.free_block(slot, bi)
+
+    def free_covered(self, slot: int, t: int, cov: int) -> int:
+        """Return blocks whose every claimed position is dead (< ``cov``
+        or not yet written) to the pool — the compaction give-back.  Safe
+        because a claim only changes when its offset is written, and every
+        write re-allocates through ``ensure`` first."""
+        freed = 0
+        claims = ring_claims(t, self.tail)
+        for bi in range(self.blocks_per_slot):
+            if self.table[slot, bi] < 0:
+                continue
+            blk = claims[bi * self.block_size:(bi + 1) * self.block_size]
+            if ((blk < cov) | (blk >= t)).all():
+                self.free_block(slot, bi)
+                freed += 1
+        return freed
+
+    # ------------------------------------------------------------------
+    # device views
+    # ------------------------------------------------------------------
+
+    def table_for_read(self) -> np.ndarray:
+        """Block table with unmapped entries pointing at the slot's shard
+        base block — a valid gather target whose payload is garbage at
+        offsets the position/coverage masks already exclude."""
+        out = self.table.copy()
+        for slot in range(self.n_slots):
+            row = out[slot]
+            row[row < 0] = self.shard_base(slot)
+        return out
+
+    def row_for_read(self, slot: int) -> np.ndarray:
+        """One slot's read-sanitized table row (per-slot absorb path —
+        avoids copying the whole table for a (T,) gather)."""
+        row = self.table[slot].copy()
+        row[row < 0] = self.shard_base(slot)
+        return row
+
+    def table_for_write(self) -> np.ndarray:
+        """Block table with unmapped entries out of range (``n_blocks``)
+        so scatters with mode='drop' skip them."""
+        out = self.table.copy()
+        out[out < 0] = self.n_blocks
+        return out
+
+    def row_for_write(self, slot: int) -> np.ndarray:
+        """One slot's write-sanitized table row (admission slot-write)."""
+        row = self.table[slot].copy()
+        row[row < 0] = self.n_blocks
+        return row
+
+    # ------------------------------------------------------------------
+    # invariant checks (exercised by Hypothesis property tests)
+    # ------------------------------------------------------------------
+
+    def check_invariants(self) -> None:
+        owners: Dict[int, List[Tuple[int, int]]] = {}
+        for slot in range(self.n_slots):
+            for bi in range(self.blocks_per_slot):
+                gid = int(self.table[slot, bi])
+                if gid >= 0:
+                    owners.setdefault(gid, []).append((slot, bi))
+        for gid, who in owners.items():
+            assert self.ref[gid] >= len(who), (
+                f"block {gid} mapped {len(who)}x with ref {self.ref[gid]}")
+            assert self.ref[gid] > 0, f"table points at dead block {gid}"
+        assert self._live == int((self.ref > 0).sum()), \
+            "live counter drifted from ref counts"
+        for s in range(self.n_shards):
+            lo, hi = s * self.pool_blocks, (s + 1) * self.pool_blocks
+            free = set(self._free[s])
+            live = {g for g in range(lo, hi) if self.ref[g] > 0}
+            assert not (free & live), "free list overlaps live blocks"
+            assert len(free) + len(live) == self.pool_blocks, (
+                "alloc/free leak: free + live != pool")
+            for g in free:
+                assert lo <= g < hi, "free id escaped its shard"

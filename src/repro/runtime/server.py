@@ -57,8 +57,10 @@ from repro.core import kv_compress
 from repro.core.request_cluster import BatchPlan, Request, plan_batches, plan_fifo
 from repro.models import transformer as tfm
 from repro.models.config import ModelConfig
+from repro.runtime import kv_pool
 from repro.sharding import (Rules, constrain_cache, default_table,
-                            place_admission, shard_cache, use_rules)
+                            place_admission, place_block_tables,
+                            shard_cache, use_rules)
 from repro.sharding.rules import _key_str as _key_name
 
 
@@ -90,6 +92,17 @@ class ServerConfig:
     kv_compress: Optional[kv_compress.KVCompressConfig] = None
     # when set, the engine serves from a clustered KV cache end to end and
     # re-compacts every kv_compress.refresh decode steps
+    paged: Optional[kv_pool.PagedKVConfig] = None
+    # paged clustered-KV memory manager: the exact tail rings live in a
+    # per-shard block pool (block_size positions per block, pool_blocks
+    # blocks per data shard) behind per-slot block tables — blocks are
+    # allocated on admission / right before the write that needs them,
+    # recycled on request exit, and returned mid-stream once compaction
+    # covers them (runtime/kv_pool.py).  Decode runs as PACKED ragged
+    # launches: one row per real (slot, position) pair instead of
+    # slots × chunk, so mixed prefill+decode compute scales with real
+    # tokens.  Requires kv_compress (the clustered path is what paging
+    # replaces); greedy outputs are token-identical to the dense engine.
     mesh: Optional[Mesh] = None
     # (data, model) device mesh (launch/mesh.make_serving_mesh): decode
     # slots + their KV caches partition over "data", attention heads (and
@@ -156,6 +169,30 @@ class Server:
                     "continuous serving with kv_compress needs "
                     "refresh_every >= 1 (ring entries must reach "
                     "centroids before eviction)")
+        self._paged = scfg.paged
+        if self._paged is not None:
+            if scfg.kv_compress is None:
+                raise ValueError(
+                    "paged serving requires kv_compress: the block pool "
+                    "replaces the dense tail ring of the CLUSTERED cache "
+                    "(exact-KV serving has no coverage frontier to return "
+                    "blocks against)")
+            if scfg.engine != "continuous":
+                raise ValueError("paged serving requires the continuous "
+                                 "engine")
+            if scfg.kv_compress.keep_recent % self._paged.block_size:
+                raise ValueError(
+                    f"block_size {self._paged.block_size} must divide "
+                    f"keep_recent {scfg.kv_compress.keep_recent} (ring "
+                    "offsets map to whole blocks)")
+            if (cfg.is_encdec or cfg.attn_kind == "mla"
+                    or set(cfg.layer_pattern) - set("G")
+                    or cfg.n_frontend_tokens):
+                raise ValueError(
+                    "paged serving drives decoder-only global-attention "
+                    "models (all-'G' layer pattern, GQA): the packed "
+                    "ragged launch has no per-row recurrent/MLA/window "
+                    "state path")
         self._chunk = scfg.prefill_chunk
         if self._chunk:
             if scfg.engine != "continuous":
@@ -249,6 +286,40 @@ class Server:
 
         self._absorb = jax.jit(_absorb_fn, donate_argnums=(0,))
 
+        if self._paged is not None:
+            blk = self._paged.block_size
+
+            def _packed_fn(c, tk, rs, rp, rtw, bt):
+                with _ctx():
+                    logits, c2 = tfm.decode_step_packed(
+                        self.params, cfg, c, tk, rs, rp, rtw, bt,
+                        block_size=blk)
+                    return logits, self._constrain(c2)
+
+            def _write_slot_paged_fn(dst, src, j, bt_row):
+                with _ctx():
+                    return self._constrain(
+                        self._write_slot_paged_impl(dst, src, j, bt_row,
+                                                    blk))
+
+            def _absorb_paged_fn(c, j, lengths, target, bt_row):
+                with _ctx():
+                    return self._constrain(self._absorb_paged_impl(
+                        c, j, lengths, target, bt_row, ccfg))
+
+            def _compact_paged_fn(c, lengths, bt):
+                with _ctx():
+                    return self._constrain(
+                        self._compact_paged_impl(c, lengths, bt, ccfg))
+
+            self._decode_packed = jax.jit(_packed_fn, donate_argnums=(0,))
+            self._write_slot_paged = jax.jit(_write_slot_paged_fn,
+                                             donate_argnums=(0,))
+            self._absorb_paged = jax.jit(_absorb_paged_fn,
+                                         donate_argnums=(0,))
+            self._compact_paged = jax.jit(_compact_paged_fn,
+                                          donate_argnums=(0,))
+
     def _constrain(self, cache):
         """Pin engine-cache leaves to their mesh layout inside traced fns
         (slots over data, kv heads over model) so decode/admission outputs
@@ -309,14 +380,27 @@ class Server:
         def phys(j):
             return shard_of(j) * bucket + idx_of(j)
 
+        # paged memory manager: tail rings live in a per-shard block pool
+        # behind per-slot block tables; the launch bucket never shrinks
+        # (packed rows already make compute ∝ real tokens, so the slot
+        # axis stays at one traced shape)
+        paged = self._paged
+        pool = None
+        if paged is not None:
+            pool = kv_pool.BlockPool(n, ccfg.keep_recent, paged,
+                                     n_shards=max(shards, 1),
+                                     slots_per_shard=per_shard)
         cache = tfm.init_cache(
             cfg, n, scfg.max_seq,
             kv_mode="clustered" if ccfg else "exact",
             kv_clusters=ccfg.n_clusters if ccfg else 512,
-            kv_tail=ccfg.keep_recent if ccfg else 256)
+            kv_tail=ccfg.keep_recent if ccfg else 256,
+            kv_pool_blocks=pool.n_blocks if pool else 0,
+            kv_block_size=paged.block_size if paged else 0)
         if self._rules is not None:
             # slot state becomes mesh-sharded arrays: slots over the data
-            # axis, kv heads over model (divisibility-aware per leaf)
+            # axis, kv heads over model (divisibility-aware per leaf; the
+            # paged pool's block axis shards over data like slots)
             cache = shard_cache(cache, self._rules)
 
         pos = np.zeros(n, np.int32)       # cache valid length per slot
@@ -324,7 +408,12 @@ class Server:
         active = np.zeros(n, bool)        # decoding
         admitting = np.zeros(n, bool)     # chunked prefill in flight
         fed = np.zeros(n, np.int32)       # prompt tokens streamed so far
-        cov_h = np.zeros(n, np.int32)     # host mirror of admission cov
+        cov_h = np.zeros(n, np.int32)     # host mirror of every slot's
+                                          # coverage frontier (drives the
+                                          # paged block give-back + live-
+                                          # token stats; kept in lockstep
+                                          # with the device cov by
+                                          # replaying the same formulas)
         slot_uid = [-1] * n
         prompt_np: Dict[int, np.ndarray] = {}
         toks: Dict[int, List[int]] = {}
@@ -345,6 +434,17 @@ class Server:
         R = ccfg.keep_recent if ccfg else 0
         shard_busy_steps = np.zeros(max(shards, 1), np.int64)
         shard_steps = 0
+        # packed-launch accounting: real (slot, position) pairs fed vs
+        # rows×width actually launched — the dense bucketed path pays
+        # slots × chunk on mixed steps, the paged packed path only its
+        # per-shard row bucket
+        launch_real = launch_padded = 0
+        # KV-allocation accounting (clustered serving): live ring tokens
+        # vs allocated ring capacity, so paged and dense runs report
+        # comparable occupancy / fragmentation / peak-bytes numbers
+        kv_live_sum = kv_alloc_sum = 0
+        kv_alloc_peak = 0
+        tail_bpt = self._tail_bytes_per_token(cache) if ccfg else 0
 
         def resize_to(nb):
             nonlocal cache, bucket
@@ -352,6 +452,20 @@ class Server:
                 return
             cache = self._resize_cache(cache, bucket, nb)
             bucket = nb
+
+        bt_cache = [None]
+
+        def bt_device():
+            """Device copy of the block table, re-uploaded only when the
+            allocator mutated it since the last launch (steady-state
+            decode reuses the cached array)."""
+            if bt_cache[0] is None or pool.dirty:
+                arr = jnp.asarray(pool.table_for_read())
+                if self._rules is not None:
+                    arr = place_block_tables(arr, self._rules)
+                bt_cache[0] = arr
+                pool.dirty = False
+            return bt_cache[0]
 
         def occupancy():
             occ = np.zeros(max(shards, 1), np.int32)
@@ -378,6 +492,8 @@ class Server:
             fed[j] = 0
             cov_h[j] = 0
             slot_uid[j] = uid
+            if pool is not None:
+                pool.free_slot(j)   # recycle the previous occupant's blocks
             if ccfg is not None:
                 # the slot's previous occupant left stale centroids; its
                 # ring entries are hidden by the position mask, but stale
@@ -415,7 +531,22 @@ class Server:
                 # path removes the B=1 cache entirely
                 c1 = place_admission(c1, self._rules)
             ensure_row(j)
-            cache = self._write_slot(cache, c1, jnp.int32(phys(j)))
+            if pool is not None:
+                # allocation on admission: only the blocks holding live
+                # (uncovered) prompt positions; centroid-covered offsets
+                # stay unmapped and the scatter drops them
+                cov0 = int(np.clip(plen - R + ccfg.refresh, 0, plen))
+                pool.free_slot(j)
+                pool.ensure(j, kv_pool.live_blocks(plen, cov0, R,
+                                                   paged.block_size))
+                cov_h[j] = cov0
+                bt_row = jnp.asarray(pool.row_for_write(j))
+                cache = self._write_slot_paged(cache, c1, jnp.int32(phys(j)),
+                                               bt_row)
+            else:
+                cov_h[j] = (int(np.clip(plen - R + ccfg.refresh, 0, plen))
+                            if ccfg is not None else 0)
+                cache = self._write_slot(cache, c1, jnp.int32(phys(j)))
             cur[j], pos[j] = first, plen
             active[j] = True
             since_tok[j] = 0
@@ -461,7 +592,7 @@ class Server:
             # where shrinking pays, and its shapes ({per_shard,
             # per_shard/2, ..., 1}) are shared across serves so the
             # decode-only traces amortize
-            if qi >= len(order) and not admitting.any():
+            if pool is None and qi >= len(order) and not admitting.any():
                 busy_idx = [idx_of(j) for j in range(n)
                             if active[j] or admitting[j]]
                 desired = min(per_shard, _pow2ceil(max(busy_idx) + 1))
@@ -479,45 +610,118 @@ class Server:
                     if ccfg is not None and fed[j] + cl - cov_h[j] > R:
                         target = int(np.clip(
                             fed[j] + cl - R + ccfg.refresh, 0, fed[j]))
-                        cache = self._absorb(cache, jnp.int32(phys(j)),
-                                             jnp.int32(fed[j]),
-                                             jnp.int32(target))
+                        if pool is not None:
+                            cache = self._absorb_paged(
+                                cache, jnp.int32(phys(j)),
+                                jnp.int32(fed[j]), jnp.int32(target),
+                                jnp.asarray(pool.row_for_read(j)))
+                            pool.free_covered(int(j), int(fed[j]), target)
+                        else:
+                            cache = self._absorb(cache, jnp.int32(phys(j)),
+                                                 jnp.int32(fed[j]),
+                                                 jnp.int32(target))
                         cov_h[j] = target
                         n_absorbs += 1
 
             # ---- build the launch -----------------------------------------
             mixed = bool(step_chunks)
             width = chunk if mixed else 1
-            tok = np.zeros((bp, width), np.int32)
-            t_vec = np.zeros(bp, np.int32)
-            cl_vec = np.ones(bp, np.int32)
-            for j in range(n):
-                if idx_of(j) >= bucket:
-                    continue
-                pj = phys(j)
-                if admitting[j]:
-                    cl = step_chunks[j]
-                    p = prompt_np[slot_uid[j]]
-                    tok[pj, :cl] = p[fed[j]:fed[j] + cl]
-                    t_vec[pj] = fed[j]
-                    cl_vec[pj] = cl
-                else:
-                    tok[pj, 0] = cur[j]
-                    t_vec[pj] = pos[j]
-
-            t0 = time.perf_counter()
-            if mixed:
-                logits, cache = self._mixed(cache, jnp.asarray(tok),
-                                            jnp.asarray(t_vec),
-                                            jnp.asarray(cl_vec))
+            real_rows = int(active.sum()) + sum(step_chunks.values())
+            if pool is not None:
+                # paged packed launch: one row per real (slot, position)
+                # pair, padded per data shard to a power-of-two row bucket
+                # (bounded trace count) — compute ∝ real tokens instead of
+                # slots × width.  Blocks this step's ring writes land in
+                # are allocated (or re-allocated after a give-back) first.
+                for j in range(n):
+                    if admitting[j]:
+                        pool.ensure(j, kv_pool.write_blocks(
+                            int(fed[j]), step_chunks[j], R,
+                            paged.block_size))
+                    elif active[j]:
+                        pool.ensure(j, kv_pool.write_blocks(
+                            int(pos[j]), 1, R, paged.block_size))
+                rows_by_shard = [[] for _ in range(max(shards, 1))]
+                for j in range(n):
+                    s = shard_of(j)
+                    if admitting[j]:
+                        cl = step_chunks[j]
+                        p = prompt_np[slot_uid[j]]
+                        for i in range(cl):
+                            rows_by_shard[s].append(
+                                (j, int(p[fed[j] + i]), int(fed[j]) + i,
+                                 int(fed[j]) + cl))
+                    elif active[j]:
+                        rows_by_shard[s].append(
+                            (j, int(cur[j]), int(pos[j]), int(pos[j]) + 1))
+                row_bucket = _pow2ceil(
+                    max(max(len(rs) for rs in rows_by_shard), 1))
+                np_rows = max(shards, 1) * row_bucket
+                tokp = np.zeros(np_rows, np.int32)
+                rslot = np.zeros(np_rows, np.int32)
+                rpos = np.full(np_rows, -1, np.int32)
+                rtw = np.zeros(np_rows, np.int32)
+                last_row: Dict[int, int] = {}
+                for s, rs in enumerate(rows_by_shard):
+                    base = s * row_bucket
+                    # padding rows reference a real slot of their own
+                    # shard (the shard's phys base) so the kernel's
+                    # gathers stay shard-local; their qpos1 of 0 masks
+                    # everything
+                    rslot[base:base + row_bucket] = s * bucket
+                    for i, (j, tk, p_, tw_) in enumerate(rs):
+                        tokp[base + i] = tk
+                        rslot[base + i] = phys(j)
+                        rpos[base + i] = p_
+                        rtw[base + i] = tw_
+                        last_row[j] = base + i
+                bt_dev = bt_device()
+                t0 = time.perf_counter()
+                logits, cache = self._decode_packed(
+                    cache, jnp.asarray(tokp), jnp.asarray(rslot),
+                    jnp.asarray(rpos), jnp.asarray(rtw), bt_dev)
+                nxt = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
+                nxt_of = lambda jj: nxt[last_row[jj]]      # noqa: E731
+                # launch_rows_frac / launch_bucket_mean stay SLOT
+                # bookkeeping (the slot axis never shrinks in paged
+                # mode); the packed-row picture lives in launch_pad_frac
+                # / launch_ragged_frac via compute_rows
+                rows_step, compute_rows = bp, np_rows
             else:
-                logits, cache = self._decode(cache, jnp.asarray(tok),
-                                             jnp.asarray(t_vec))
-            nxt = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
+                tok = np.zeros((bp, width), np.int32)
+                t_vec = np.zeros(bp, np.int32)
+                cl_vec = np.ones(bp, np.int32)
+                for j in range(n):
+                    if idx_of(j) >= bucket:
+                        continue
+                    pj = phys(j)
+                    if admitting[j]:
+                        cl = step_chunks[j]
+                        p = prompt_np[slot_uid[j]]
+                        tok[pj, :cl] = p[fed[j]:fed[j] + cl]
+                        t_vec[pj] = fed[j]
+                        cl_vec[pj] = cl
+                    else:
+                        tok[pj, 0] = cur[j]
+                        t_vec[pj] = pos[j]
+
+                t0 = time.perf_counter()
+                if mixed:
+                    logits, cache = self._mixed(cache, jnp.asarray(tok),
+                                                jnp.asarray(t_vec),
+                                                jnp.asarray(cl_vec))
+                else:
+                    logits, cache = self._decode(cache, jnp.asarray(tok),
+                                                 jnp.asarray(t_vec))
+                nxt = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
+                nxt_of = lambda jj: nxt[phys(jj)]          # noqa: E731
+                rows_step, compute_rows = bp, bp * width
             now = time.perf_counter()
             dec_s += now - t0
             decode_steps += 1
-            rows_launched += bp
+            rows_launched += rows_step
+            launch_real += real_rows
+            launch_padded += compute_rows
             wasted_slots += int(n - (active | admitting).sum())
             since_tok[active] += 1
             n_chunks += len(step_chunks)
@@ -526,6 +730,19 @@ class Server:
                 for j in range(n):
                     if active[j] or admitting[j]:
                         shard_busy_steps[shard_of(j)] += 1
+            if ccfg is not None:
+                live = 0
+                for j in range(n):
+                    if admitting[j]:
+                        live += min(int(fed[j]) + step_chunks[j]
+                                    - int(cov_h[j]), R)
+                    elif active[j]:
+                        live += min(int(pos[j]) + 1 - int(cov_h[j]), R)
+                alloc = (pool.allocated() * paged.block_size if pool
+                         else bp * R)
+                kv_live_sum += live
+                kv_alloc_sum += alloc
+                kv_alloc_peak = max(kv_alloc_peak, alloc)
 
             # ---- host update ---------------------------------------------
             for j in range(n):
@@ -546,31 +763,42 @@ class Server:
                         target_end = int(np.clip(plen - R + ccfg.refresh,
                                                  0, plen))
                         if cov_h[j] < target_end:
-                            cache = self._absorb(cache, jnp.int32(pj),
-                                                 jnp.int32(plen),
-                                                 jnp.int32(target_end))
+                            if pool is not None:
+                                cache = self._absorb_paged(
+                                    cache, jnp.int32(pj), jnp.int32(plen),
+                                    jnp.int32(target_end),
+                                    jnp.asarray(pool.row_for_read(j)))
+                                pool.free_covered(j, plen, target_end)
+                            else:
+                                cache = self._absorb(cache, jnp.int32(pj),
+                                                     jnp.int32(plen),
+                                                     jnp.int32(target_end))
                             cov_h[j] = target_end
                             n_absorbs += 1
-                    first = int(nxt[pj])
+                    first = int(nxt_of(j))
                     toks[uid] = [first]
                     token_t[uid] = [now]
                     pre_ms[uid] = (now - t0_serve) * 1e3    # TTFT
                     admitting[j] = False
                     if by_uid[uid].max_new_tokens <= 1:
                         slot_uid[j] = -1
+                        if pool is not None:
+                            pool.free_slot(j)   # recycling on early exit
                     else:
                         active[j] = True
                         since_tok[j] = 0
                         pos[j] = plen
                         cur[j] = first
                 elif active[j]:
-                    toks[uid].append(int(nxt[pj]))
+                    toks[uid].append(int(nxt_of(j)))
                     token_t[uid].append(now)
                     pos[j] += 1
-                    cur[j] = nxt[pj]
+                    cur[j] = nxt_of(j)
                     if len(toks[uid]) >= by_uid[uid].max_new_tokens:
                         active[j] = False
                         since_tok[j] = 0
+                        if pool is not None:
+                            pool.free_slot(j)   # recycling on early exit
 
             if (ccfg is not None and int(since_tok.max()) >= ccfg.refresh
                     and active.any()):
@@ -578,12 +806,28 @@ class Server:
                 for j in range(n):
                     if active[j] and idx_of(j) < bucket:
                         lengths[phys(j)] = pos[j]
-                cache = self.compact_kv(cache, lengths, ccfg)
-                if self._rules is not None:
-                    # eviction/compaction rebuilt the clustered leaves
-                    # outside the constrained decode jit — put them back
-                    # on their mesh layout before the next step
-                    cache = shard_cache(cache, self._rules)
+                if pool is not None:
+                    cache = self._compact_paged(cache, jnp.asarray(lengths),
+                                                bt_device())
+                else:
+                    cache = self.compact_kv(cache, lengths, ccfg)
+                    if self._rules is not None:
+                        # eviction/compaction rebuilt the clustered leaves
+                        # outside the constrained decode jit — put them
+                        # back on their mesh layout before the next step
+                        cache = shard_cache(cache, self._rules)
+                # host frontier mirror (recompact_clustered's formula) —
+                # compaction is when the paged engine returns covered
+                # blocks to the pool
+                for j in range(n):
+                    if not active[j]:
+                        continue
+                    newc = max(int(cov_h[j]),
+                               int(np.clip(pos[j] - R + ccfg.refresh,
+                                           0, pos[j])))
+                    cov_h[j] = newc
+                    if pool is not None:
+                        pool.free_covered(j, int(pos[j]), newc)
                 since_tok[:] = 0
                 n_compacts += 1
 
@@ -613,10 +857,43 @@ class Server:
             "launch_rows_frac": rows_launched / max(decode_steps * n, 1),
             "launch_bucket_mean": rows_launched
             / max(decode_steps * max(shards, 1), 1),
+            # padded-compute waste: launched rows × width that carried no
+            # real (slot, position) pair — the number the packed ragged
+            # launch exists to shrink — and its complement, the fraction
+            # of launched compute rows that were real tokens
+            "launch_pad_frac": 1.0 - launch_real / max(launch_padded, 1),
+            "launch_ragged_frac": launch_real / max(launch_padded, 1),
             "prefill_chunks": float(n_chunks),
             "kv_absorbs": float(n_absorbs),
             "kv_compactions": float(n_compacts),
         }
+        if ccfg is not None:
+            # KV-allocation picture, comparable across paged and dense:
+            # dense "allocates" every launched slot's full tail ring
+            self.last_stats.update({
+                "kv_frag": 1.0 - kv_live_sum / max(kv_alloc_sum, 1),
+                "kv_alloc_tokens_peak": float(kv_alloc_peak),
+            })
+            if pool is not None:
+                self.last_stats.update({
+                    "kv_bytes_peak_per_shard": float(
+                        int(pool.peak_blocks_shard.max())
+                        * paged.block_size * tail_bpt),
+                    "pool_blocks_total": float(pool.n_blocks),
+                    "pool_blocks_peak": float(pool.peak_blocks),
+                    "pool_occupancy_peak": pool.peak_blocks
+                    / max(pool.n_blocks, 1),
+                    "pool_allocs": float(pool.n_allocs),
+                    "pool_frees": float(pool.n_frees),
+                    # every request completed → every block recycled
+                    "pool_blocks_end": float(pool.allocated()),
+                })
+            else:
+                self.last_stats.update({
+                    "kv_bytes_peak_per_shard": float(
+                        per_shard * R * tail_bpt),
+                    "pool_occupancy_peak": 1.0,
+                })
         if shards > 1:
             self.last_stats["n_data_shards"] = float(shards)
             for s in range(shards):
@@ -627,6 +904,22 @@ class Server:
                            prefill_ms=pre_ms[r.uid],
                            decode_ms=dec_ms_tok * len(toks[r.uid]))
                 for r in requests]
+
+    @staticmethod
+    def _tail_bytes_per_token(cache) -> int:
+        """Bytes one ring position costs across every tail leaf of the
+        stack (k+v, all layers) — same accounting for the dense per-slot
+        ring and the paged block pool, so their peak-KV stats compare."""
+        total = 0
+        flat, _ = jax.tree_util.tree_flatten_with_path(cache)
+        for kp, leaf in flat:
+            if _key_name(kp[-1]) not in ("k_tail", "v_tail"):
+                continue
+            stacked = _key_name(kp[0]) == "scan"
+            h, dh = leaf.shape[-2], leaf.shape[-1]
+            lyr = leaf.shape[0] if stacked else 1
+            total += lyr * h * dh * leaf.dtype.itemsize
+        return total
 
     # ------------------------------------------------------------------
     # bucketed launches: slot-axis resize
@@ -710,6 +1003,170 @@ class Server:
             return {k: jax.lax.dynamic_update_slice_in_dim(
                 node[k], got[k].astype(node[k].dtype), j, axis=ax)
                 for k in node}
+
+        def walk(node):
+            if _is_clustered_kv(node):
+                return leaf(node)
+            if isinstance(node, dict):
+                return {k: walk(v) for k, v in node.items()}
+            if isinstance(node, list):
+                return [walk(v) for v in node]
+            return node
+
+        return walk(cache)
+
+    # ------------------------------------------------------------------
+    # paged path: pool gathers/scatters around the same compaction math
+    #
+    # Every paged op gathers a slot's tail blocks into the dense ring
+    # layout, runs the UNCHANGED kv_compress routine, and writes back
+    # only centroids/counts/cov (compaction never rewrites tail bytes).
+    # Offsets whose blocks are unmapped read garbage from the sanitized
+    # alias block — they are strictly outside [cov, t), so they carry
+    # weight 0 in the clustering and are masked in attention, and the
+    # results stay bit-identical to the dense engine.
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _gather_tail_rows(pool_arr, bt):
+        """Dense ring view of a paged tail pool.  pool (nb, bs, H, Dh) +
+        bt (..., T) → (..., T*bs, H, Dh); stacked pool (L, nb, bs, H, Dh)
+        → (L, ..., T*bs, H, Dh)."""
+        stacked = pool_arr.ndim == 5
+        h, dh = pool_arr.shape[-2], pool_arr.shape[-1]
+        if stacked:
+            lyr = pool_arr.shape[0]
+            got = pool_arr[:, bt]          # (L, ..., T, bs, H, Dh)
+            return got.reshape((lyr,) + bt.shape[:-1] + (-1, h, dh))
+        got = pool_arr[bt]                 # (..., T, bs, H, Dh)
+        return got.reshape(bt.shape[:-1] + (-1, h, dh))
+
+    def _write_slot_paged_impl(self, dst, src, j, bt_row, blk: int):
+        """Paged twin of ``_write_slot_impl``: clustered leaves write
+        centroids/counts/cov densely at slot j and scatter the B=1 dense
+        tail ring into the slot's freshly-allocated pool blocks
+        (``bt_row`` (T,), unmapped = covered offsets pointing out of
+        range so mode='drop' skips them); all other leaves take the
+        dense slot write."""
+        def upd(axis):
+            def f(d, s):
+                idx = (0,) * axis + (j,) + (0,) * (d.ndim - axis - 1)
+                return jax.lax.dynamic_update_slice(d, s.astype(d.dtype),
+                                                    idx)
+            return f
+
+        def leaf(dnode, snode, axis):
+            out = {}
+            for key in ("k_cents", "v_cents", "counts", "cov"):
+                out[key] = upd(axis)(dnode[key], snode[key])
+            for key in ("k_tail", "v_tail"):
+                pool_arr, srct = dnode[key], snode[key]
+                if axis == 1:              # scan-stacked: src (L, 1, R, …)
+                    lyr = srct.shape[0]
+                    blocks = srct.reshape(lyr, -1, blk, srct.shape[-2],
+                                          srct.shape[-1])
+                    out[key] = pool_arr.at[:, bt_row].set(
+                        blocks.astype(pool_arr.dtype), mode="drop")
+                else:                      # src (1, R, H, Dh)
+                    blocks = srct.reshape(-1, blk, srct.shape[-2],
+                                          srct.shape[-1])
+                    out[key] = pool_arr.at[bt_row].set(
+                        blocks.astype(pool_arr.dtype), mode="drop")
+            return out
+
+        def walk(dnode, snode, axis):
+            if _is_clustered_kv(dnode):
+                return leaf(dnode, snode, axis)
+            if isinstance(dnode, dict):
+                return {k: walk(dnode[k], snode[k], axis) for k in dnode}
+            if isinstance(dnode, list):
+                return [walk(d, s, axis) for d, s in zip(dnode, snode)]
+            return upd(axis)(dnode, snode)
+
+        out = dict(dst)
+        for key in ("prefix", "tail"):
+            out[key] = [walk(dc, sc, 0) for dc, sc in zip(dst[key],
+                                                          src[key])]
+        if "scan" in dst:
+            out["scan"] = walk(dst["scan"], src["scan"], 1)
+        return out
+
+    def _absorb_paged_impl(self, cache, j, lengths, target, bt_row, ccfg):
+        """Paged twin of ``_absorb_impl``: gather slot j's tail blocks
+        into ring order, fold the aged entries into its centroids, write
+        back centroids/counts/cov only (the pool bytes are untouched —
+        absorb never moves tail data)."""
+        keys = ("k_cents", "v_cents", "counts", "cov")
+
+        def leaf(node):
+            stacked = node["k_cents"].ndim == 5
+            ax = 1 if stacked else 0
+            sub = {k: jax.lax.dynamic_slice_in_dim(node[k], j, 1, axis=ax)
+                   for k in keys}
+            kt = self._gather_tail_rows(node["k_tail"], bt_row)
+            vt = self._gather_tail_rows(node["v_tail"], bt_row)
+            if stacked:
+                lyr = node["k_cents"].shape[0]
+                flat = {k: v.reshape((lyr,) + v.shape[2:])
+                        for k, v in sub.items()}
+                flat["k_tail"], flat["v_tail"] = kt, vt
+                got = kv_compress.absorb_chunk(
+                    flat, jnp.full((lyr,), lengths, jnp.int32),
+                    jnp.full((lyr,), target, jnp.int32), ccfg)
+                got = {k: got[k][:, None] for k in keys}
+            else:
+                sub["k_tail"], sub["v_tail"] = kt[None], vt[None]
+                got = kv_compress.absorb_chunk(
+                    sub, jnp.full((1,), lengths, jnp.int32),
+                    jnp.full((1,), target, jnp.int32), ccfg)
+            return dict(node, **{
+                k: jax.lax.dynamic_update_slice_in_dim(
+                    node[k], got[k].astype(node[k].dtype), j, axis=ax)
+                for k in keys})
+
+        def walk(node):
+            if _is_clustered_kv(node):
+                return leaf(node)
+            if isinstance(node, dict):
+                return {k: walk(v) for k, v in node.items()}
+            if isinstance(node, list):
+                return [walk(v) for v in node]
+            return node
+
+        return walk(cache)
+
+    def _compact_paged_impl(self, cache, lengths, bt, ccfg):
+        """Paged twin of ``compact_kv``'s recompaction: gather every
+        slot's tail blocks into the dense ring layout through the block
+        table (B, T), re-compact incrementally, keep the pool bytes and
+        write back centroids/counts/cov.  The engine then returns blocks
+        whose positions the new frontier covers to the free list (host
+        side — the give-back is bookkeeping, not data movement)."""
+        keys = ("k_cents", "v_cents", "counts", "cov")
+
+        def leaf(node):
+            stacked = node["k_cents"].ndim == 5
+            kt = self._gather_tail_rows(node["k_tail"], bt)
+            vt = self._gather_tail_rows(node["v_tail"], bt)
+            if stacked:
+                lyr, b = node["k_cents"].shape[:2]
+                flat = {k: node[k].reshape((lyr * b,) + node[k].shape[2:])
+                        for k in keys}
+                flat["k_tail"] = kt.reshape((lyr * b,) + kt.shape[2:])
+                flat["v_tail"] = vt.reshape((lyr * b,) + vt.shape[2:])
+                ln = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32),
+                                      (lyr, b)).reshape(-1)
+                got = kv_compress.recompact_clustered(flat, ln, ccfg)
+                got = {k: got[k].reshape((lyr, b) + got[k].shape[1:])
+                       for k in keys}
+            else:
+                b = node["k_cents"].shape[0]
+                dense = {k: node[k] for k in keys}
+                dense["k_tail"], dense["v_tail"] = kt, vt
+                ln = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (b,))
+                got = kv_compress.recompact_clustered(dense, ln, ccfg)
+            return dict(node,
+                        **{k: got[k].astype(node[k].dtype) for k in keys})
 
         def walk(node):
             if _is_clustered_kv(node):

@@ -1,6 +1,7 @@
 from repro.sharding.rules import (Rules, admission_spec, annotate,
-                                  annotate_prio, cache_spec, constrain_cache,
+                                  annotate_prio, block_table_spec,
+                                  cache_spec, constrain_cache,
                                   current_rules, default_table, param_spec,
-                                  place_admission, shard_cache,
-                                  shardings_from_specs, tree_param_specs,
-                                  use_rules)  # noqa: F401
+                                  place_admission, place_block_tables,
+                                  shard_cache, shardings_from_specs,
+                                  tree_param_specs, use_rules)  # noqa: F401

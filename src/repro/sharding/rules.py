@@ -258,6 +258,15 @@ def cache_spec(path: str, shape: Sequence[int], rules: Rules) -> P:
     small models on big meshes degrade to partial parallelism instead of
     crashing.  Non-KV state (MLA latents, SSM/RG-LRU state, int8 scales)
     gets slot sharding only.
+
+    Paged tail pools (runtime/kv_pool.py) flow through the same rule: a
+    pool leaf ``k_tail (n_blocks, block_size, H, Dh)`` shards its leading
+    block axis over the ``batch`` mesh axes — the pool is sized
+    ``shards × pool_blocks``, NamedSharding partitions the axis
+    contiguously, and the allocator hands each shard's slots only that
+    shard's block-id range, so the pool shards over ``data`` exactly like
+    the slots it backs (same for the scan-stacked ``(L, n_blocks, …)``
+    form via the layer-dim shift).
     """
     parts = path.split("/")
     name = parts[-1]
@@ -282,6 +291,24 @@ def cache_spec(path: str, shape: Sequence[int], rules: Rules) -> P:
     if head_off is not None and len(shape) - head_off > (1 if stacked else 0):
         put(len(shape) - head_off, "kv_heads")
     return P(*dims)
+
+
+def block_table_spec(shape: Sequence[int], rules: Rules) -> P:
+    """Partition spec for the paged engine's block table ``(slots, T)``:
+    rows follow the slots over the ``batch`` mesh axes (each shard sees
+    only its own slots' rows — entries hold global block ids that the
+    shard_map island rebases locally), ring-block columns replicated."""
+    dims: list = [None] * len(shape)
+    res = rules.axes_for("batch", shape[0])
+    if res:
+        dims[0] = res
+    return P(*dims)
+
+
+def place_block_tables(bt, rules: Rules):
+    """Host-side mesh placement for the block table pushed each launch."""
+    return jax.device_put(
+        bt, NamedSharding(rules.mesh, block_table_spec(bt.shape, rules)))
 
 
 def admission_spec(path: str, shape: Sequence[int], rules: Rules) -> P:

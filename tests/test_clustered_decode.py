@@ -164,6 +164,58 @@ def test_mixed_mode_masks_rows_past_chunk_len():
                                   np.asarray(out2b)[:, :2])
 
 
+def test_paged_kernel_bit_identical_to_dense():
+    """The packed ragged paged kernel must reproduce the dense mixed-mode
+    kernel BIT-exactly per (slot, position) row: same staged f32 tail
+    operand, same dot_general contractions, same mask order — that is
+    what makes the paged engine token-identical to the dense engine.
+    Covers wrapped rings, a mid-flight chunk, decode rows at mixed
+    depths, and fully-masked padding rows."""
+    from repro.kernels.clustered_decode import clustered_decode_pallas
+    from repro.kernels.paged_clustered_decode import (
+        paged_clustered_decode_pallas)
+    rng = np.random.default_rng(7)
+    B, C, R, hq, hkv, dh, L = 4, 6, 16, 4, 2, 16, 5
+    bs = 4
+    T = R // bs
+    k_cents = jnp.asarray(rng.normal(size=(B, C, hkv, dh)), jnp.float32)
+    v_cents = jnp.asarray(rng.normal(size=(B, C, hkv, dh)), jnp.float32)
+    counts = jnp.asarray(rng.uniform(0, 3, size=(B, C, hkv)), jnp.float32)
+    k_tail = jnp.asarray(rng.normal(size=(B, R, hkv, dh)), jnp.float32)
+    v_tail = jnp.asarray(rng.normal(size=(B, R, hkv, dh)), jnp.float32)
+    t = jnp.asarray([9, 3, 30, 21], jnp.int32)      # pre/post ring wrap
+    cov = jnp.asarray([6, 0, 20, 10], jnp.int32)
+    cl = jnp.asarray([L, 1, 1, 1], jnp.int32)       # slot 0 admits a chunk
+    q = jnp.asarray(rng.normal(size=(B, L, hq, dh)), jnp.float32)
+
+    dense = clustered_decode_pallas(q, k_cents, v_cents, counts, k_tail,
+                                    v_tail, t, cov, cl, scale=dh**-0.5)
+
+    # paged view: identity block table, pool = the same ring bytes in
+    # (nb, bs, H, Dh) blocks; pack the real rows + 2 padding rows
+    k_pool = k_tail.reshape(B * T, bs, hkv, dh)
+    v_pool = v_tail.reshape(B * T, bs, hkv, dh)
+    bt = jnp.arange(B * T, dtype=jnp.int32).reshape(B, T)
+    rows = [(b, i) for b in range(B) for i in range(int(cl[b]))]
+    n = len(rows) + 2
+    row_slot = jnp.asarray([b for b, _ in rows] + [0, 0], jnp.int32)
+    row_pos = jnp.asarray([int(t[b]) + i for b, i in rows] + [-1, -1],
+                          jnp.int32)
+    qp = jnp.concatenate([
+        jnp.stack([q[b, i] for b, i in rows]),
+        jnp.zeros((2, hq, dh), jnp.float32)])
+    qpos1 = jnp.where(row_pos >= 0, row_pos + 1, 0)
+    tw = (t + cl)[row_slot]
+    got = paged_clustered_decode_pallas(
+        qp, k_cents, v_cents, counts, k_pool, v_pool, row_slot,
+        bt[row_slot], qpos1, tw, cov[row_slot], scale=dh**-0.5)
+    assert got.shape == (n, hq, dh)
+    for ri, (b, i) in enumerate(rows):
+        np.testing.assert_array_equal(np.asarray(got)[ri],
+                                      np.asarray(dense)[b, i],
+                                      err_msg=f"row ({b},{i})")
+
+
 def test_int8_kv_decode_close_to_bf16():
     """int8 KV cache with per-head scales ≈ exact decode (scales set from
     observed key/value ranges)."""

@@ -309,6 +309,82 @@ class TestAbsorbChunkProperties:
                                           np.asarray(cc[key]), err_msg=key)
 
 
+class TestBlockPoolProperties:
+    """Allocator invariants of the paged KV memory manager
+    (runtime/kv_pool.BlockPool) under random alloc/free/give-back
+    sequences: no block is ever handed to two owners, the free list +
+    live set always partition the pool exactly (alloc+free roundtrip
+    restores it), and every block-table entry points at a live
+    (ref > 0) block of the slot's own shard."""
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 2), st.sampled_from([4, 8]),
+           st.lists(st.tuples(st.integers(0, 3), st.integers(0, 3),
+                              st.sampled_from(["alloc", "free_block",
+                                               "free_slot", "covered"])),
+                    min_size=1, max_size=60),
+           st.integers(0, 10_000))
+    def test_random_op_sequences_conserve_pool(self, shards, bsz, ops,
+                                               seed):
+        from repro.runtime import kv_pool
+        rng = np.random.default_rng(seed)
+        R = 16
+        n_slots = 4 * shards
+        pool = kv_pool.BlockPool(
+            n_slots, R, kv_pool.PagedKVConfig(block_size=bsz),
+            n_shards=shards, slots_per_shard=4)
+        t_of = np.zeros(n_slots, np.int64)
+        for slot_raw, bi_raw, op in ops:
+            slot = (slot_raw * shards) % n_slots
+            bi = bi_raw % pool.blocks_per_slot
+            if op == "alloc":
+                try:
+                    gid = pool.alloc(slot, bi)
+                except kv_pool.PoolExhausted:
+                    pass
+                else:
+                    # the block came from the slot's own shard
+                    assert (gid // pool.pool_blocks == pool.shard_of(slot))
+            elif op == "free_block":
+                pool.free_block(slot, bi)
+            elif op == "free_slot":
+                pool.free_slot(slot)
+            else:
+                # simulate decode progress then the compaction give-back
+                t_of[slot] += int(rng.integers(1, R))
+                cov = max(0, int(t_of[slot]) - int(rng.integers(0, R)))
+                pool.free_covered(slot, int(t_of[slot]), cov)
+            pool.check_invariants()
+        # roundtrip: freeing everything restores the full free list
+        for slot in range(n_slots):
+            pool.free_slot(slot)
+        pool.check_invariants()
+        assert pool.allocated() == 0
+        assert (pool.table == -1).all()
+        assert pool.n_frees == pool.n_allocs
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 500), st.integers(0, 500), st.sampled_from([2, 4]))
+    def test_write_and_live_blocks_agree_with_ring_claims(self, t, back,
+                                                          bsz):
+        """write_blocks(start, count) covers exactly the blocks whose
+        offsets a position write touches; live_blocks ⊆ mapped blocks a
+        real stream would hold, and a block never appears in both the
+        'dead after free_covered' set and live_blocks."""
+        from repro.runtime import kv_pool
+        R = 16
+        cov = max(0, t - back)
+        live = kv_pool.live_blocks(t, cov, R, bsz)
+        claims = kv_pool.ring_claims(t, R)
+        for b in range(R // bsz):
+            blk = claims[b * bsz:(b + 1) * bsz]
+            has_live = bool(((blk >= cov) & (blk < t)).any())
+            assert (b in live) == has_live
+        wb = kv_pool.write_blocks(t, 3, R, bsz)
+        for i in range(3):
+            assert ((t + i) % R) // bsz in wb
+
+
 class TestGradCompressProperties:
     @settings(max_examples=10, deadline=None)
     @given(st.integers(0, 1000))

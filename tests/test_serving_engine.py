@@ -20,6 +20,7 @@ from repro.core import kv_compress
 from repro.core.request_cluster import Request
 from repro.models import transformer as tfm
 from repro.models.config import ModelConfig
+from repro.runtime.kv_pool import PagedKVConfig, PoolExhausted
 from repro.runtime.server import Server, ServerConfig
 
 TINY = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
@@ -242,6 +243,140 @@ class TestBucketedLaunch:
         srv = Server(TINY, ServerConfig(batch_size=2, max_seq=64), params)
         srv.serve(reqs, prompts)
         assert srv.last_stats["launch_rows_frac"] == 1.0
+
+
+class TestPagedEngine:
+    """Paged clustered-KV memory manager: block-pool tail rings behind
+    per-slot block tables, decoded via packed ragged launches.  The paged
+    engine must emit greedy tokens BIT-IDENTICAL to the dense clustered
+    engine (same ccfg, same queue) — the pool only changes where tail
+    bytes live, and the packed kernel reproduces the dense kernel's math
+    exactly — across blocking and chunked admission, with mid-stream
+    compaction and streaming absorbs in play."""
+
+    CCFG = kv_compress.KVCompressConfig(n_clusters=8, iters=4,
+                                        keep_recent=16, refresh_every=8)
+    PG = PagedKVConfig(block_size=4)
+
+    @staticmethod
+    def _stream(seed=9):
+        rng = np.random.default_rng(seed)
+        # long prompts (> keep_recent → absorbs under chunked admission)
+        # and long budgets (> refresh_every → mid-stream compactions)
+        reqs = [Request(i, int(l), g) for i, (l, g) in
+                enumerate([(60, 12), (9, 10), (48, 9), (21, 14)])]
+        prompts = {r.uid: rng.integers(0, 64, size=(r.prompt_len,)).astype(
+            np.int32) for r in reqs}
+        return reqs, prompts
+
+    @pytest.mark.parametrize("chunk", [0, 8])
+    def test_token_identical_to_dense(self, pieces, chunk):
+        params = pieces[0]
+        reqs, prompts = self._stream()
+        dense = Server(TINY, ServerConfig(batch_size=2, max_seq=96,
+                                          kv_compress=self.CCFG,
+                                          prefill_chunk=chunk), params)
+        ref = {o.uid: o.tokens for o in dense.serve(reqs, prompts)}
+        srv = Server(TINY, ServerConfig(batch_size=2, max_seq=96,
+                                        kv_compress=self.CCFG,
+                                        prefill_chunk=chunk, paged=self.PG),
+                     params)
+        outs = srv.serve(reqs, prompts)
+        for o in outs:
+            assert o.tokens == ref[o.uid], o.uid
+        st = srv.last_stats
+        assert st["kv_compactions"] > 0       # the paths really diverged
+        if chunk:
+            assert st["kv_absorbs"] > 0
+        # every block recycled once the stream drains
+        assert st["pool_blocks_end"] == 0.0
+        assert 0.0 < st["pool_occupancy_peak"] <= 1.0
+
+    def test_packed_launch_beats_dense_padding(self, pieces):
+        """Mixed prefill+decode compute ∝ real tokens: the packed ragged
+        launch must waste strictly less padded compute than the dense
+        bucketed launch on the same chunked stream, at identical
+        tokens."""
+        params = pieces[0]
+        reqs, prompts = self._stream()
+        dense = Server(TINY, ServerConfig(batch_size=2, max_seq=96,
+                                          kv_compress=self.CCFG,
+                                          prefill_chunk=8), params)
+        dense.serve(reqs, prompts)
+        srv = Server(TINY, ServerConfig(batch_size=2, max_seq=96,
+                                        kv_compress=self.CCFG,
+                                        prefill_chunk=8, paged=self.PG),
+                     params)
+        srv.serve(reqs, prompts)
+        assert (srv.last_stats["launch_pad_frac"]
+                < dense.last_stats["launch_pad_frac"])
+        assert srv.last_stats["launch_ragged_frac"] > \
+            dense.last_stats["launch_ragged_frac"]
+        # the pool never allocates beyond the dense ring (it may touch it
+        # transiently when every slot is at full depth at a compaction
+        # boundary), and allocation tracks live tokens tighter than the
+        # always-full dense ring does
+        assert (srv.last_stats["kv_bytes_peak_per_shard"]
+                <= dense.last_stats["kv_bytes_peak_per_shard"])
+        assert srv.last_stats["kv_frag"] < dense.last_stats["kv_frag"]
+
+    def test_blocks_recycle_and_reallocate(self, pieces):
+        """Compaction give-back and slot recycling really return blocks:
+        total allocations exceed the peak simultaneously live (blocks
+        were freed and handed out again), and the pool drains to zero."""
+        params = pieces[0]
+        reqs, prompts = self._stream()
+        srv = Server(TINY, ServerConfig(batch_size=2, max_seq=96,
+                                        kv_compress=self.CCFG,
+                                        prefill_chunk=8, paged=self.PG),
+                     params)
+        srv.serve(reqs, prompts)
+        st = srv.last_stats
+        assert st["pool_allocs"] > st["pool_blocks_peak"]
+        assert st["pool_frees"] == st["pool_allocs"]      # all returned
+
+    def test_oversubscribed_pool_serves_short_streams(self, pieces):
+        """A pool smaller than slots × blocks-per-slot still serves when
+        live windows stay short (blocks map lazily, only live positions
+        hold storage); an undersized pool on a deep stream raises
+        PoolExhausted instead of corrupting."""
+        params = pieces[0]
+        rng = np.random.default_rng(3)
+        # every request's final depth <= 8 positions -> <= 2 live blocks
+        # per slot, so 5 blocks serve 2 slots that would dense-allocate 8
+        short = [Request(i, int(l), g) for i, (l, g) in
+                 enumerate([(5, 3), (4, 2), (6, 2), (5, 3), (4, 2)])]
+        sp = {r.uid: rng.integers(0, 64, size=(r.prompt_len,)).astype(
+            np.int32) for r in short}
+        dense = Server(TINY, ServerConfig(batch_size=2, max_seq=96,
+                                          kv_compress=self.CCFG), params)
+        ref = {o.uid: o.tokens for o in dense.serve(short, sp)}
+        srv = Server(TINY, ServerConfig(
+            batch_size=2, max_seq=96, kv_compress=self.CCFG,
+            paged=PagedKVConfig(block_size=4, pool_blocks=5)), params)
+        for o in srv.serve(short, sp):
+            assert o.tokens == ref[o.uid], o.uid
+        assert srv.last_stats["pool_occupancy_peak"] <= 1.0
+        reqs, prompts = self._stream()
+        with pytest.raises(PoolExhausted):
+            tight = Server(TINY, ServerConfig(
+                batch_size=2, max_seq=96, kv_compress=self.CCFG,
+                paged=PagedKVConfig(block_size=4, pool_blocks=4)), params)
+            tight.serve(reqs, prompts)
+
+    def test_validation(self, pieces):
+        params = pieces[0]
+        with pytest.raises(ValueError, match="kv_compress"):
+            Server(TINY, ServerConfig(paged=self.PG), params)
+        with pytest.raises(ValueError, match="block_size"):
+            Server(TINY, ServerConfig(
+                kv_compress=self.CCFG,
+                paged=PagedKVConfig(block_size=5)), params)
+        import dataclasses as dc
+        gl = dc.replace(TINY, layer_pattern="GL", sliding_window=8)
+        with pytest.raises(ValueError, match="global-attention"):
+            Server(gl, ServerConfig(kv_compress=self.CCFG, paged=self.PG),
+                   tfm.init_params(jax.random.PRNGKey(3), gl))
 
 
 class TestBatchedCompress:

@@ -125,6 +125,45 @@ def test_sharded_chunked_prefill_parity():
 
 
 @pytest.mark.slow
+def test_sharded_paged_parity():
+    """Paged memory manager on a 2x4 mesh: the block pool shards over the
+    data axis like slots (global block ids rebased per shard inside the
+    shard_map island), packed ragged rows shard per data shard, and
+    greedy tokens must stay bit-identical to BOTH the single-device paged
+    engine and the dense clustered engine — blocking and chunked
+    admission, with streaming absorbs in play."""
+    run_sub(_COMMON + """
+    from repro.runtime.kv_pool import PagedKVConfig
+    ccfg = kv_compress.KVCompressConfig(n_clusters=8, iters=4,
+                                        keep_recent=16, refresh_every=8)
+    pg = PagedKVConfig(block_size=4)
+    for chunk in (0, 8):
+        ref = Server(CFG, ServerConfig(batch_size=4, max_seq=64,
+                                       kv_compress=ccfg,
+                                       prefill_chunk=chunk, paged=pg),
+                     params)
+        ref_out = {o.uid: o.tokens for o in ref.serve(reqs, prompts)}
+        dense = Server(CFG, ServerConfig(batch_size=4, max_seq=64,
+                                         kv_compress=ccfg,
+                                         prefill_chunk=chunk), params)
+        dense_out = {o.uid: o.tokens for o in dense.serve(reqs, prompts)}
+        srv = Server(CFG, ServerConfig(batch_size=4, max_seq=64,
+                                       kv_compress=ccfg,
+                                       prefill_chunk=chunk, paged=pg,
+                                       mesh=mesh), params)
+        outs = srv.serve(reqs, prompts)
+        assert sorted(o.uid for o in outs) == sorted(r.uid for r in reqs)
+        for o in outs:
+            assert o.tokens == ref_out[o.uid], (chunk, o.uid)
+            assert o.tokens == dense_out[o.uid], (chunk, o.uid)
+        assert srv.last_stats["pool_blocks_end"] == 0.0
+        if chunk:
+            assert srv.last_stats["kv_absorbs"] > 0
+    print("sharded paged parity OK")
+    """)
+
+
+@pytest.mark.slow
 def test_indivisible_heads_fall_back_to_replication():
     """A model whose kv-head count doesn't divide the model axis must
     still serve correctly (heads replicate, slots stay data-sharded)."""
@@ -163,6 +202,15 @@ def test_cache_partition_specs_single_device():
         P(None, ("data",), None, ("model",))
     assert cache_spec("tail/0/cov", (4,), rules) == P(("data",))
     assert cache_spec("tail/0/k_scale", (2,), rules) == P(("model",))
+    # paged pool leaves: block axis over data (pool sized shards ×
+    # pool_blocks, contiguous partition = shard-local block ids), heads
+    # over model; block tables follow slots with columns replicated
+    from repro.sharding import block_table_spec
+    assert cache_spec("tail/0/k_tail", (8, 4, 2, 16), rules) == \
+        P(("data",), None, ("model",), None)
+    assert cache_spec("scan/sub0/v_tail", (2, 8, 4, 2, 16), rules) == \
+        P(None, ("data",), None, ("model",), None)
+    assert block_table_spec((4, 4), rules) == P(("data",), None)
     # MLA latents / SSM state: slot sharding only
     assert cache_spec("tail/0/ckv", (4, 64, 8), rules) == \
         P(("data",), None, None)
