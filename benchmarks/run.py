@@ -16,6 +16,13 @@ Prints ``name,us_per_call,derived`` CSV rows:
   request_batching         padding waste: clustered vs FIFO batching
   grad_compress            codebook gradient compression: wire ratio +
                            quantization error
+  prefix_share             shared-prefix burst on the paged chunked
+                           engine: every request = one long template +
+                           a short unique suffix; with prefix sharing
+                           on, admissions adopt the template's tail
+                           blocks + centroids (copy-on-write) instead
+                           of re-prefilling — p95 TTFT and physical
+                           peak-KV must drop at identical tokens
   serve                    end-to-end serving engine: tokens/s + padded-
                            token waste for FIFO vs clustered batching,
                            static vs continuous, and continuous with
@@ -244,6 +251,37 @@ def _git_sha() -> str:
         return "unknown"
 
 
+def _append_serve_json(json_out, run_key, payload) -> int:
+    """Append one serve-bench run record, deduplicated on (git sha, seed,
+    mesh, scenario) — re-runs of the same commit/config replace their
+    record instead of stacking duplicates.  Legacy records (pre-scenario)
+    are rekeyed from their quick flag.  Returns the history length."""
+    def _key_of(h):
+        sc = h.get("scenario")
+        if sc is None:          # legacy record: quick flag only
+            sc = "serve" + ("_quick" if h.get("quick") else "")
+        return {"git_sha": h.get("git_sha"), "seed": h.get("seed"),
+                "mesh": h.get("mesh"), "scenario": sc}
+
+    os.makedirs(os.path.dirname(json_out) or ".", exist_ok=True)
+    history = []
+    if os.path.exists(json_out):
+        try:
+            with open(json_out) as fh:
+                history = json.load(fh)
+            if not isinstance(history, list):
+                history = []
+        except (json.JSONDecodeError, OSError):
+            history = []
+    history = [h for h in history
+               if isinstance(h, dict) and "records" in h  # old format
+               and _key_of(h) != run_key]
+    history.append({**run_key, **payload})
+    with open(json_out, "w") as fh:
+        json.dump(history, fh, indent=1)
+    return len(history)
+
+
 def serve_bench(quick=False, seed=7, mesh_spec=None,
                 json_out="artifacts/serve_bench.json", paged=False):
     from repro.kernels.ops import interpret_default
@@ -447,47 +485,149 @@ def serve_bench(quick=False, seed=7, mesh_spec=None,
              f"tokens_identical={same}")
 
     if json_out:
-        os.makedirs(os.path.dirname(json_out) or ".", exist_ok=True)
-        # append-mode perf trajectory deduplicated on (git sha, seed,
-        # mesh, scenario) — re-runs of the same commit/config replace
-        # their record instead of stacking duplicates.  Legacy records
-        # (pre-scenario) are rekeyed from their quick flag.
         scenario = ("serve" + ("_paged" if paged else "")
                     + ("_quick" if quick else ""))
         run_key = {"git_sha": _git_sha(), "seed": seed,
                    "mesh": mesh_spec or "1x1", "scenario": scenario}
-
-        def _key_of(h):
-            sc = h.get("scenario")
-            if sc is None:          # legacy record: quick flag only
-                sc = "serve" + ("_quick" if h.get("quick") else "")
-            return {"git_sha": h.get("git_sha"), "seed": h.get("seed"),
-                    "mesh": h.get("mesh"), "scenario": sc}
-
-        history = []
-        if os.path.exists(json_out):
-            try:
-                with open(json_out) as fh:
-                    history = json.load(fh)
-                if not isinstance(history, list):
-                    history = []
-            except (json.JSONDecodeError, OSError):
-                history = []
-        history = [h for h in history
-                   if isinstance(h, dict) and "records" in h  # old format
-                   and _key_of(h) != run_key]
-        history.append({**run_key, "quick": bool(quick),
-                        "timestamp": time.time(),
-                        # which Pallas backend produced these numbers —
-                        # interpret-mode CPU results are not comparable
-                        # to Mosaic-compiled TPU runs
-                        "backend": jax.default_backend(),
-                        "pallas_interpret": bool(interpret_default()),
-                        "records": records, "comparisons": comparisons})
-        with open(json_out, "w") as fh:
-            json.dump(history, fh, indent=1)
+        n_runs = _append_serve_json(json_out, run_key, {
+            "quick": bool(quick), "timestamp": time.time(),
+            # which Pallas backend produced these numbers —
+            # interpret-mode CPU results are not comparable
+            # to Mosaic-compiled TPU runs
+            "backend": jax.default_backend(),
+            "pallas_interpret": bool(interpret_default()),
+            "records": records, "comparisons": comparisons})
         emit("serve_json", 0.0,
-             f"runs={len(history)};records={len(records)};path={json_out}")
+             f"runs={n_runs};records={len(records)};path={json_out}")
+
+
+def prefix_share_bench(quick=False, seed=7, mesh_spec=None,
+                       json_out="artifacts/serve_bench.json"):
+    """Shared-prefix burst: the templated-traffic regime prefix sharing
+    exists for — every request is the same long template plus a short
+    unique suffix, all queued at t0.  Serves the burst on the paged
+    chunked engine with and without ``prefix_share`` and records p95
+    TTFT, physical peak KV bytes, and the sharing counters
+    (kv_bytes_saved, prefix_hits); greedy tokens must be identical —
+    sharing only skips recomputing state the unshared run derives from
+    the same prefix tokens."""
+    from repro.kernels.ops import interpret_default
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models import transformer as tfm
+    from repro.models.config import ModelConfig
+    from repro.runtime.kv_pool import PagedKVConfig
+    from repro.runtime.prefix_cache import PrefixShareConfig
+    from repro.runtime.server import Server, ServerConfig
+
+    SMALL = ModelConfig(name="serve-lm", family="dense", n_layers=2,
+                        d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+                        d_ff=256, vocab=256, pad_vocab_multiple=128,
+                        dtype="float32")
+    params = tfm.init_params(jax.random.PRNGKey(0), SMALL)
+    rng = np.random.default_rng(seed)
+    n = 8 if quick else 16
+    # template ≫ suffix and refresh < keep_recent: the live ring window
+    # at admission is mostly template positions, so later admissions
+    # adopt those blocks instead of materializing their own — that is
+    # where the physical peak-KV drop comes from (TTFT drops from the
+    # skipped template chunks either way)
+    template = rng.integers(0, 256, size=(64,)).astype(np.int32)
+    reqs, prompts = [], {}
+    for i in range(n):
+        sfx = rng.integers(0, 256, size=(int(rng.integers(2, 7)),))
+        prompts[i] = np.concatenate([template, sfx]).astype(np.int32)
+        reqs.append(Request(i, len(prompts[i]), int(rng.integers(3, 6))))
+    ccfg = kv_compress.KVCompressConfig(n_clusters=16, iters=4,
+                                        keep_recent=32, refresh_every=12)
+    chunk, pcfg = 16, PagedKVConfig(block_size=4)
+    mesh = make_serving_mesh(mesh_spec) if mesh_spec else None
+
+    def scfg(share, use_mesh):
+        # max_entries=1: single-template traffic only ever hits one
+        # boundary (the pure template), and a tight cap keeps the
+        # cache's pinned blocks from inflating the physical peak the
+        # scenario is measuring
+        return ServerConfig(
+            batch_size=4, max_seq=256, kv_compress=ccfg,
+            prefill_chunk=chunk, paged=pcfg,
+            prefix_share=(PrefixShareConfig(max_entries=1)
+                          if share else None),
+            mesh=mesh if use_mesh else None)
+
+    variants = [("serve_prefix_unshared", scfg(False, False)),
+                ("serve_prefix_shared", scfg(True, False))]
+    if mesh is not None:
+        tag = mesh_spec.lower()
+        variants += [(f"serve_prefix_unshared_mesh{tag}", scfg(False, True)),
+                     (f"serve_prefix_shared_mesh{tag}", scfg(True, True))]
+    probe = [Request(10_000 + i, l, g)
+             for i, (l, g) in enumerate([(9, 3), (11, 5)])]
+    probe_prompts = {r.uid: rng.integers(0, 256, size=(r.prompt_len,))
+                     .astype(np.int32) for r in probe}
+
+    records, tokens_by_variant = [], {}
+    for name, cfg in variants:
+        srv = Server(SMALL, cfg, params)
+        srv.serve(probe, probe_prompts)       # warm the launch shapes
+        t0 = time.perf_counter()
+        outs = srv.serve(reqs, prompts)
+        wall = time.perf_counter() - t0
+        st = {k: float(v) for k, v in srv.last_stats.items()}
+        tokens_by_variant[name] = {o.uid: o.tokens for o in outs}
+        emit(name, wall * 1e6,
+             f"ttft_p95_ms={st['ttft_p95_ms']:.1f};"
+             f"kv_bytes_peak_per_shard={st['kv_bytes_peak_per_shard']:.0f};"
+             f"prefix_hits={st.get('prefix_hits', 0.0):.0f};"
+             f"kv_bytes_saved={st.get('kv_bytes_saved', 0.0):.0f}")
+        records.append({
+            "name": name, "seed": seed,
+            "mesh": mesh_spec if cfg.mesh is not None else "1x1",
+            "batch_size": cfg.batch_size, "requests": n,
+            "wall_s": wall,
+            "gen_tokens": sum(len(o.tokens) for o in outs), **st,
+        })
+
+    by_name = {r["name"]: r for r in records}
+    comparisons = {}
+    for off, on in [("serve_prefix_unshared", "serve_prefix_shared"),
+                    (f"serve_prefix_unshared_mesh{(mesh_spec or '').lower()}",
+                     f"serve_prefix_shared_mesh{(mesh_spec or '').lower()}")]:
+        if off not in by_name or on not in by_name:
+            continue
+        ro, rs = by_name[off], by_name[on]
+        same = tokens_by_variant[off] == tokens_by_variant[on]
+        cmp = {
+            "ttft_p95_ms_unshared": ro["ttft_p95_ms"],
+            "ttft_p95_ms_shared": rs["ttft_p95_ms"],
+            "ttft_p95_ratio": rs["ttft_p95_ms"]
+            / max(ro["ttft_p95_ms"], 1e-9),
+            "kv_bytes_peak_unshared": ro["kv_bytes_peak_per_shard"],
+            "kv_bytes_peak_shared": rs["kv_bytes_peak_per_shard"],
+            "kv_bytes_peak_below_unshared": bool(
+                rs["kv_bytes_peak_per_shard"]
+                <= ro["kv_bytes_peak_per_shard"]),
+            "kv_bytes_saved": rs.get("kv_bytes_saved", 0.0),
+            "prefix_hits": rs.get("prefix_hits", 0.0),
+            "tokens_identical": bool(same),
+        }
+        comparisons[on] = cmp
+        emit(f"{on}_vs_unshared", 0.0,
+             f"ttft_p95_ratio={cmp['ttft_p95_ratio']:.2f};"
+             f"kv_bytes_ratio={rs['kv_bytes_peak_per_shard'] / max(ro['kv_bytes_peak_per_shard'], 1e-9):.2f};"
+             f"kv_bytes_saved={cmp['kv_bytes_saved']:.0f};"
+             f"tokens_identical={same}")
+
+    if json_out:
+        scenario = "serve_prefix" + ("_quick" if quick else "")
+        run_key = {"git_sha": _git_sha(), "seed": seed,
+                   "mesh": mesh_spec or "1x1", "scenario": scenario}
+        n_runs = _append_serve_json(json_out, run_key, {
+            "quick": bool(quick), "timestamp": time.time(),
+            "backend": jax.default_backend(),
+            "pallas_interpret": bool(interpret_default()),
+            "records": records, "comparisons": comparisons})
+        emit("serve_prefix_json", 0.0,
+             f"runs={n_runs};records={len(records)};path={json_out}")
 
 
 def roofline_summary(quick=False):
@@ -521,7 +661,7 @@ def roofline_summary(quick=False):
 BENCHES = [t1_median_throughput, t2_recognition_rate, t3_fixed_point,
            t4_optimal_k, t5_kmedians_end2end, kv_compress_bench,
            request_batching_bench, grad_compress_bench, serve_bench,
-           roofline_summary]
+           prefix_share_bench, roofline_summary]
 
 
 def main() -> None:
@@ -554,6 +694,9 @@ def main() -> None:
         if b is serve_bench:
             b(quick=args.quick, seed=args.seed, mesh_spec=args.mesh,
               json_out=args.json_out, paged=args.paged)
+        elif b is prefix_share_bench:
+            b(quick=args.quick, seed=args.seed, mesh_spec=args.mesh,
+              json_out=args.json_out)
         else:
             b(quick=args.quick)
 

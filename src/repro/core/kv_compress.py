@@ -201,7 +201,19 @@ def recompact_clustered(cache, lengths, cfg: KVCompressConfig,
 
     ``axis_name`` makes the k-medians psum-consistent when the point rows
     are sharded across a mesh axis under shard_map (the warm-started
-    centroids satisfy the distributed-init requirement)."""
+    centroids satisfy the distributed-init requirement).
+
+    Slots whose frontier does not advance (``new_cov == cov``: drained
+    slots, admitting slots passed length 0, slots compacted again before
+    new tokens aged past the frontier) keep their centroid bank
+    BIT-IDENTICAL — re-running Lloyd over the old centroids with zero new
+    mass is not a bitwise no-op (duplicate centroids merge under
+    lowest-index tie-breaking), so without the gate a compaction
+    triggered by one slot would perturb every other slot's summaries,
+    making per-slot state depend on *when* neighbours forced a pass.
+    Per-slot determinism is what lets the engine compact slots on their
+    own cadence and admit prefix-shared requests on a different schedule
+    without changing anyone's tokens."""
     k_cents = cache["k_cents"].astype(jnp.float32)     # (B, C, H, Dh)
     v_cents = cache["v_cents"].astype(jnp.float32)
     counts = cache["counts"]                           # (B, C, H)
@@ -235,11 +247,14 @@ def recompact_clustered(cache, lengths, cfg: KVCompressConfig,
 
     nk, nv, ncnt = jax.vmap(one_slot)(k_cents, v_cents, counts,
                                       k_tail, v_tail, w_tail)
+    changed = (new_cov > cov)[:, None, None]
     return dict(
         cache,
-        k_cents=nk.transpose(0, 2, 1, 3).astype(cache["k_cents"].dtype),
-        v_cents=nv.transpose(0, 2, 1, 3).astype(cache["v_cents"].dtype),
-        counts=ncnt.transpose(0, 2, 1),
+        k_cents=jnp.where(changed[..., None], nk.transpose(0, 2, 1, 3),
+                          k_cents).astype(cache["k_cents"].dtype),
+        v_cents=jnp.where(changed[..., None], nv.transpose(0, 2, 1, 3),
+                          v_cents).astype(cache["v_cents"].dtype),
+        counts=jnp.where(changed, ncnt.transpose(0, 2, 1), counts),
         cov=new_cov.astype(jnp.int32),
     )
 

@@ -39,6 +39,7 @@ from repro.core import kv_compress  # noqa: E402
 from repro.launch.mesh import make_serving_mesh  # noqa: E402
 from repro.models import transformer as tfm  # noqa: E402
 from repro.runtime.kv_pool import PagedKVConfig  # noqa: E402
+from repro.runtime.prefix_cache import PrefixShareConfig  # noqa: E402
 from repro.runtime.server import Server, ServerConfig  # noqa: E402
 
 
@@ -66,6 +67,12 @@ def main():
                          "block tables, decode runs as packed ragged "
                          "launches (compute ∝ real tokens); implies "
                          "clustered-KV serving (--kv-clusters et al.)")
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="prefix-sharing paged admission: prompts "
+                         "sharing a prefix adopt the same tail-ring "
+                         "blocks (copy-on-write) and reuse absorbed "
+                         "prompt centroids instead of re-prefilling; "
+                         "requires --paged and --prefill-chunk")
     ap.add_argument("--block-size", type=int, default=16,
                     help="paged: ring positions per pool block (must "
                          "divide --keep-recent)")
@@ -127,11 +134,16 @@ def main():
                               pool_blocks=args.pool_blocks)
         print(f"[serve] paged KV: {args.block_size}-position blocks, "
               f"{args.pool_blocks or 'auto'} blocks/shard")
+    pshare = None
+    if args.prefix_share:
+        pshare = PrefixShareConfig()
+        print("[serve] prefix sharing: block-granular prompt-prefix "
+              "admission (copy-on-write)")
     srv = Server(cfg, ServerConfig(
         batch_size=args.batch_size, max_seq=args.max_seq,
         use_clustered_batching=not args.no_clustering, mesh=mesh,
         prefill_chunk=args.prefill_chunk, kv_compress=ccfg,
-        paged=paged), params)
+        paged=paged, prefix_share=pshare), params)
     t0 = time.perf_counter()
     outs = srv.serve(reqs, prompts)
     dt = time.perf_counter() - t0
@@ -158,6 +170,11 @@ def main():
               f"frees, launch padding {st['launch_pad_frac'] * 100:.0f}%, "
               f"peak KV {st['kv_bytes_peak_per_shard'] / 1024:.0f} "
               f"KiB/shard (frag {st['kv_frag'] * 100:.0f}%)")
+    if args.prefix_share and "prefix_hits" in st:
+        print(f"[serve] prefix sharing: {st['prefix_hits']:.0f} hits, "
+              f"{st['prefix_tokens_reused']:.0f} prompt tokens reused, "
+              f"{st['kv_bytes_saved'] / 1024:.1f} KiB tail KV shared "
+              f"({st['pool_cow']:.0f} copy-on-write swaps)")
     if mesh is not None:
         if "n_data_shards" in srv.last_stats:
             ws = [f"{srv.last_stats[f'slot_waste_shard{s}']:.2f}"

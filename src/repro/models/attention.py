@@ -342,6 +342,13 @@ def init_cache_attn_clustered(cfg: ModelConfig, batch: int, *,
     }
 
 
+# The per-SLOT summary state of a clustered cache leaf: everything a
+# slot owns beyond its tail-ring payload.  This is exactly the state the
+# prefix-sharing admission path snapshots at chunk boundaries and
+# restores into a fresh slot (runtime/prefix_cache.py) — the tail bytes
+# themselves are shared at block granularity through the pool instead.
+CLUSTERED_SLOT_KEYS = ("k_cents", "v_cents", "counts", "cov")
+
 USE_CLUSTERED_KERNEL = True  # Pallas fused path (interpret mode off-TPU)
 
 
@@ -450,8 +457,17 @@ def attn_decode_clustered_packed(p, x, cfg: ModelConfig, *, cache,
     intra-chunk causality falls out of the per-row position mask exactly
     as in the dense mixed launch); block_tables (B, T) global physical
     block ids — every entry valid, with blocks being *written* this step
-    freshly allocated by the engine (a sanitized dead-block alias would
-    corrupt its true owner).
+    freshly allocated OR copy-on-write-owned by the engine (a sanitized
+    dead-block alias, or a block another slot still references, would
+    corrupt its true owner: kv_pool.ensure enforces ref == 1 before any
+    row's write lands).
+
+    Prefix sharing needs no change here: a shared prefix is just several
+    table rows pointing at the same physical blocks, and a slot seeded
+    mid-prompt (fed = F tokens reused, cov from the shared frontier)
+    feeds its first row at position F like any other chunk row — the
+    gather/mask math is identical, which is what keeps shared-admission
+    greedy tokens bit-identical to unshared serving.
 
     The tail write scatters each row's K/V into its slot's pool block at
     the ring offset the dense path would use, so the paged cache holds

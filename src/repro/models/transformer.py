@@ -522,6 +522,54 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
     return cache
 
 
+def clustered_slot_state(cache, j):
+    """Snapshot slot ``j``'s per-slot clustered summary rows — centroids,
+    counts, coverage frontier (attention.CLUSTERED_SLOT_KEYS) — from
+    every clustered leaf of an engine cache.  Tail payloads are NOT
+    copied: in the paged engine they live in shared pool blocks that the
+    prefix cache pins by ref count instead.  Returns a cache-shaped
+    pytree (non-clustered leaves dropped to None) that
+    ``restore_clustered_slot_state`` writes back into any slot."""
+    def leaf(node):
+        stacked = node["k_cents"].ndim == 5       # scan: (L, B, ...)
+        ax = 1 if stacked else 0
+        return {k: jax.lax.dynamic_slice_in_dim(node[k], j, 1, axis=ax)
+                for k in attn.CLUSTERED_SLOT_KEYS}
+
+    def walk(node):
+        if isinstance(node, dict):
+            if "k_cents" in node:
+                return leaf(node)
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        return None
+
+    return walk(cache)
+
+
+def restore_clustered_slot_state(cache, snap, j):
+    """Write a ``clustered_slot_state`` snapshot into slot ``j`` of every
+    clustered leaf (prefix-sharing admission: the reused prompt centroids
+    + coverage frontier land in the fresh slot; its tail blocks are
+    adopted through the block table separately)."""
+    def walk(node, s):
+        if isinstance(node, dict):
+            if "k_cents" in node:
+                stacked = node["k_cents"].ndim == 5
+                ax = 1 if stacked else 0
+                return dict(node, **{
+                    k: jax.lax.dynamic_update_slice_in_dim(
+                        node[k], s[k].astype(node[k].dtype), j, axis=ax)
+                    for k in attn.CLUSTERED_SLOT_KEYS})
+            return {k: walk(v, s[k]) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v, sv) for v, sv in zip(node, s)]
+        return node
+
+    return walk(cache, snap)
+
+
 def prefill(params, cfg: ModelConfig, tokens, *, max_seq: int,
             frontend_embeds=None, enc_embeds=None, kv_repeat: int = 1,
             last_pos=None):

@@ -28,11 +28,30 @@ block *payloads* are device-resident pool arrays inside the cache pytree
 (``k_tail``/``v_tail`` become ``(n_blocks, block_size, H, Dh)``), sharded
 over the data mesh axis exactly like slots (sharding/rules.cache_spec).
 
-Ref counts are kept per block so a future prefix-sharing admission path
-can map one physical block into several slots (copy-on-write); today
-every block has at most one owner and the counts back the allocator
-invariants pinned in tests/test_properties.py: no double allocation,
-alloc/free conservation, and live block tables only.
+Ref counts are kept per block so the prefix-sharing admission path
+(runtime/prefix_cache.py) can map one physical block into several slots:
+``adopt`` installs an extra table mapping onto a live block and
+``retain``/``release`` let the prefix cache hold blocks alive with no
+table mapping at all.
+
+**Copy-on-write rule** (the sharing twin of the ``free_covered`` safety
+argument below): a ring write may only land in a block the writing slot
+owns *exclusively* (``ref == 1``).  ``ensure`` — which every engine-side
+ring write goes through first — enforces it: when the write's target
+block has ``ref > 1``, a fresh block is allocated from the slot's shard,
+the slot's table entry is swapped to it, the shared block's ref is
+dropped, and the (src, dst) pair is returned so the engine copies the
+payload on device *before* the write executes.  Together with
+``free_covered``'s invariant (a ring offset's claimed position only
+changes when written, and every write re-allocates through ``ensure``
+first), this means a shared block's payload is immutable for as long as
+anyone else holds a reference — readers of a shared prefix can never
+observe another slot's divergent suffix.
+
+The ref counts back the allocator invariants pinned in
+tests/test_properties.py: no double allocation, alloc/free conservation,
+live block tables only, no free-list entry with ``ref > 0``, and
+COW never mutating a block someone else still references.
 """
 
 from __future__ import annotations
@@ -133,6 +152,8 @@ class BlockPool:
         self.peak_blocks_shard = np.zeros(self.n_shards, np.int64)
         self.n_allocs = 0
         self.n_frees = 0
+        self.n_retains = 0         # extra refs taken (adopt/retain)
+        self.n_cow = 0             # copy-on-write block swaps
         # set on every table mutation; the engine caches the device copy
         # of the table and only re-uploads when this flips
         self.dirty = True
@@ -152,13 +173,21 @@ class BlockPool:
     # ------------------------------------------------------------------
 
     def allocated(self) -> int:
+        """Physical live blocks — blocks mapped by several slots (or
+        pinned by the prefix cache) count ONCE (occupancy and peak-KV
+        stats must not double-count shared blocks)."""
         return self._live
 
-    def alloc(self, slot: int, block_idx: int) -> int:
-        """Map (slot, ring-block ``block_idx``) to a fresh physical block
-        from the slot's shard.  Lowest free id first (deterministic)."""
-        if self.table[slot, block_idx] >= 0:
-            return int(self.table[slot, block_idx])
+    def shared_extra(self) -> int:
+        """Logical table mappings beyond one per physical block — the
+        blocks-worth of tail KV that prefix sharing avoided
+        materializing at this instant."""
+        vals = self.table[self.table >= 0]
+        return int(vals.size - np.unique(vals).size)
+
+    def _fresh(self, slot: int) -> int:
+        """Pop a free block of the slot's shard.  Lowest free id first
+        (deterministic)."""
         s = self.shard_of(slot)
         if not self._free[s]:
             raise PoolExhausted(
@@ -168,8 +197,6 @@ class BlockPool:
                 f"returns covered blocks sooner")
         gid = heapq.heappop(self._free[s])
         self.ref[gid] = 1
-        self.table[slot, block_idx] = gid
-        self.dirty = True
         self.n_allocs += 1
         self._live += 1
         self._live_shard[s] += 1
@@ -178,17 +205,79 @@ class BlockPool:
                                         self._live_shard[s])
         return gid
 
-    def ensure(self, slot: int, block_indices: Sequence[int]) -> None:
-        for bi in block_indices:
-            self.alloc(slot, bi)
+    def alloc(self, slot: int, block_idx: int) -> int:
+        """Map (slot, ring-block ``block_idx``) to a fresh physical block
+        from the slot's shard; existing mappings are returned as is."""
+        if self.table[slot, block_idx] >= 0:
+            return int(self.table[slot, block_idx])
+        gid = self._fresh(slot)
+        self.table[slot, block_idx] = gid
+        self.dirty = True
+        return gid
 
-    def share(self, gid: int) -> None:
-        """Take an extra reference on a live block (prefix sharing)."""
+    def ensure(self, slot: int, block_indices: Sequence[int],
+               pairs: Optional[List[Tuple[int, int]]] = None,
+               ) -> List[Tuple[int, int]]:
+        """Make every listed ring block writable by ``slot``: unmapped
+        blocks get a fresh allocation, and mapped blocks with ``ref > 1``
+        are COPY-ON-WRITE swapped — a fresh block replaces the shared one
+        in this slot's table and the shared ref is dropped.  The
+        (src_gid, dst_gid) pairs the caller must copy on device BEFORE
+        the write that prompted the ensure are appended to ``pairs`` (and
+        returned).  Raises PoolExhausted mid-list without rolling back
+        earlier allocations or COW swaps — pass a caller-owned ``pairs``
+        list when a retry/stall path catches the exception, because a
+        swap already performed will NOT re-emit its pair on retry (the
+        fresh block is exclusively owned by then) and dropping it would
+        skip the payload copy and leave the new block uninitialized."""
+        if pairs is None:
+            pairs = []
+        for bi in block_indices:
+            gid = int(self.table[slot, bi])
+            if gid < 0:
+                self.alloc(slot, bi)
+            elif self.ref[gid] > 1:
+                nid = self._fresh(slot)
+                self.table[slot, bi] = nid
+                self.dirty = True
+                self.n_cow += 1
+                self._release(gid)
+                pairs.append((gid, nid))
+        return pairs
+
+    def retain(self, gid: int) -> None:
+        """Take an extra reference on a live block (prefix sharing: the
+        prefix cache pins registered blocks, tables aside)."""
         if self.ref[gid] <= 0:
-            raise ValueError(f"block {gid} is not live")
+            raise ValueError(f"retain of dead block {gid} (ref "
+                             f"{int(self.ref[gid])})")
         self.ref[gid] += 1
+        self.n_retains += 1
+
+    def release(self, gid: int) -> None:
+        """Drop a reference taken with ``retain``.  Releasing a dead
+        block raises cleanly BEFORE any mutation — the count never
+        underflows and the free list can never see a double insert."""
+        self._release(gid)
+
+    def adopt(self, slot: int, block_idx: int, gid: int) -> None:
+        """Map an (unmapped) ring block of ``slot`` onto a live shared
+        block — the prefix-sharing admission fast path.  The block must
+        belong to the slot's shard (the kernel gathers shard-locally)."""
+        if self.table[slot, block_idx] >= 0:
+            raise ValueError(
+                f"slot {slot} ring block {block_idx} already mapped")
+        if gid // self.pool_blocks != self.shard_of(slot):
+            raise ValueError(f"block {gid} is not on slot {slot}'s shard")
+        self.retain(gid)
+        self.table[slot, block_idx] = gid
+        self.dirty = True
 
     def _release(self, gid: int) -> None:
+        if self.ref[gid] <= 0:
+            raise ValueError(
+                f"release of dead block {gid} (ref {int(self.ref[gid])}): "
+                "double free — the count is left untouched")
         self.ref[gid] -= 1
         if self.ref[gid] == 0:
             s = gid // self.pool_blocks
@@ -196,8 +285,6 @@ class BlockPool:
             self.n_frees += 1
             self._live -= 1
             self._live_shard[s] -= 1
-        elif self.ref[gid] < 0:
-            raise ValueError(f"double free of block {gid}")
 
     def free_block(self, slot: int, block_idx: int) -> None:
         gid = int(self.table[slot, block_idx])
@@ -212,15 +299,22 @@ class BlockPool:
         for bi in range(self.blocks_per_slot):
             self.free_block(slot, bi)
 
-    def free_covered(self, slot: int, t: int, cov: int) -> int:
+    def free_covered(self, slot: int, t: int, cov: int,
+                     exclude: Sequence[int] = ()) -> int:
         """Return blocks whose every claimed position is dead (< ``cov``
         or not yet written) to the pool — the compaction give-back.  Safe
         because a claim only changes when its offset is written, and every
-        write re-allocates through ``ensure`` first."""
+        write re-allocates through ``ensure`` first.
+
+        ``exclude``: ring blocks to keep even if dead — the pool-pressure
+        sweep passes each slot's *upcoming* write blocks, which may be
+        allocated-but-unwritten mid-step (their stale claims look dead);
+        freeing one would just force ``ensure`` to re-allocate it and the
+        reclaim loop to spin."""
         freed = 0
         claims = ring_claims(t, self.tail)
         for bi in range(self.blocks_per_slot):
-            if self.table[slot, bi] < 0:
+            if self.table[slot, bi] < 0 or bi in exclude:
                 continue
             blk = claims[bi * self.block_size:(bi + 1) * self.block_size]
             if ((blk < cov) | (blk >= t)).all():
@@ -277,6 +371,9 @@ class BlockPool:
             assert self.ref[gid] >= len(who), (
                 f"block {gid} mapped {len(who)}x with ref {self.ref[gid]}")
             assert self.ref[gid] > 0, f"table points at dead block {gid}"
+            for slot, _bi in who:
+                assert gid // self.pool_blocks == self.shard_of(slot), (
+                    f"slot {slot} maps block {gid} of another shard")
         assert self._live == int((self.ref > 0).sum()), \
             "live counter drifted from ref counts"
         for s in range(self.n_shards):

@@ -28,6 +28,25 @@ Memory management: the clustered-KV cache is compressed/refreshed with one
 jitted, vmap-over-(batch ⊕ head) call (core/kv_compress.py) — no host
 loops — and decode attention over [centroids ⊕ tail ring] runs in the
 fused Pallas ``clustered_decode`` kernel (interpret-mode on CPU).
+Compaction runs on a **per-slot cadence**: a slot is refreshed after
+``refresh_every`` of its own decode tokens, and slots whose frontier
+does not move keep their summaries bit-identical (gated in
+``recompact_clustered``) — each slot's state is a function of its own
+token stream alone, independent of neighbours' admission timing.
+
+Prefix sharing (``ServerConfig.prefix_share``, paged + chunked only):
+admission hashes prompt prefixes at chunk boundaries into a per-data-
+shard prefix cache (runtime/prefix_cache.py); a matching request adopts
+the registered tail-ring pool blocks (ref-counted, copy-on-write at the
+first divergent write via ``kv_pool.ensure``) and restores the absorbed
+prompt centroids + coverage frontier, resuming admission mid-prompt with
+greedy tokens bit-identical to unshared paged serving.
+
+Pool pressure never kills the batch: an admission that cannot get its
+blocks is deferred back to the queue, a slot whose ring write cannot be
+backed stalls for the step (its packed row is simply not launched) and
+retries after the next compaction give-back or prefix-cache eviction;
+``PoolExhausted`` only surfaces when zero forward progress is possible.
 
 Decode launches are **bucketed** per data shard: the physical cache holds
 ``shards × bucket`` slots where the bucket shrinks (powers of two) on the
@@ -55,12 +74,14 @@ from jax.sharding import Mesh
 
 from repro.core import kv_compress
 from repro.core.request_cluster import BatchPlan, Request, plan_batches, plan_fifo
+from repro.models import attention as attn
 from repro.models import transformer as tfm
 from repro.models.config import ModelConfig
 from repro.runtime import kv_pool
+from repro.runtime import prefix_cache as prefix_mod
 from repro.sharding import (Rules, constrain_cache, default_table,
                             place_admission, place_block_tables,
-                            shard_cache, use_rules)
+                            place_prefix_snapshot, shard_cache, use_rules)
 from repro.sharding.rules import _key_str as _key_name
 
 
@@ -103,6 +124,17 @@ class ServerConfig:
     # slots × chunk, so mixed prefill+decode compute scales with real
     # tokens.  Requires kv_compress (the clustered path is what paging
     # replaces); greedy outputs are token-identical to the dense engine.
+    prefix_share: Optional[prefix_mod.PrefixShareConfig] = None
+    # prefix-sharing paged admission: prompts are hashed at chunk
+    # boundaries into a per-data-shard prefix cache
+    # (runtime/prefix_cache.py); a new request whose prompt matches a
+    # registered prefix adopts the matching tail-ring pool blocks
+    # (ref-counted, copy-on-write at the first divergent write) and
+    # restores the absorbed prompt centroids + coverage frontier instead
+    # of re-prefilling — greedy tokens stay bit-identical to unshared
+    # paged serving while shared-prefix bursts skip most prompt chunks
+    # (TTFT) and share tail blocks (KV bytes).  Requires ``paged`` +
+    # ``prefill_chunk``.
     mesh: Optional[Mesh] = None
     # (data, model) device mesh (launch/mesh.make_serving_mesh): decode
     # slots + their KV caches partition over "data", attention heads (and
@@ -193,6 +225,15 @@ class Server:
                     "models (all-'G' layer pattern, GQA): the packed "
                     "ragged launch has no per-row recurrent/MLA/window "
                     "state path")
+        self._pshare = scfg.prefix_share
+        if self._pshare is not None:
+            if self._paged is None or not scfg.prefill_chunk:
+                raise ValueError(
+                    "prefix_share requires the paged engine with chunked "
+                    "prefill (paged= + prefill_chunk=): block-granular "
+                    "sharing needs the block pool's ref counts, and "
+                    "prefix-pure registration points only exist on the "
+                    "chunked admission schedule")
         self._chunk = scfg.prefill_chunk
         if self._chunk:
             if scfg.engine != "continuous":
@@ -312,6 +353,19 @@ class Server:
                     return self._constrain(
                         self._compact_paged_impl(c, lengths, bt, ccfg))
 
+            def _snap_fn(c, j):
+                with _ctx():
+                    return tfm.clustered_slot_state(c, j)
+
+            def _restore_fn(c, snap, j):
+                with _ctx():
+                    return self._constrain(
+                        tfm.restore_clustered_slot_state(c, snap, j))
+
+            def _cow_fn(c, src, dst):
+                with _ctx():
+                    return self._constrain(self._cow_impl(c, src, dst))
+
             self._decode_packed = jax.jit(_packed_fn, donate_argnums=(0,))
             self._write_slot_paged = jax.jit(_write_slot_paged_fn,
                                              donate_argnums=(0,))
@@ -319,6 +373,10 @@ class Server:
                                          donate_argnums=(0,))
             self._compact_paged = jax.jit(_compact_paged_fn,
                                           donate_argnums=(0,))
+            self._snap_slot = jax.jit(_snap_fn)
+            self._restore_slot_state = jax.jit(_restore_fn,
+                                               donate_argnums=(0,))
+            self._cow = jax.jit(_cow_fn, donate_argnums=(0,))
 
     def _constrain(self, cache):
         """Pin engine-cache leaves to their mesh layout inside traced fns
@@ -386,10 +444,14 @@ class Server:
         # axis stays at one traced shape)
         paged = self._paged
         pool = None
+        pcache = None
         if paged is not None:
             pool = kv_pool.BlockPool(n, ccfg.keep_recent, paged,
                                      n_shards=max(shards, 1),
                                      slots_per_shard=per_shard)
+            if self._pshare is not None:
+                pcache = prefix_mod.PrefixCache(self._pshare,
+                                                max(shards, 1), pool)
         cache = tfm.init_cache(
             cfg, n, scfg.max_seq,
             kv_mode="clustered" if ccfg else "exact",
@@ -444,6 +506,9 @@ class Server:
         # comparable occupancy / fragmentation / peak-bytes numbers
         kv_live_sum = kv_alloc_sum = 0
         kv_alloc_peak = 0
+        # prefix sharing: peak count of extra logical block mappings —
+        # blocks-worth of tail KV that sharing avoided materializing
+        kv_shared_peak = 0
         tail_bpt = self._tail_bytes_per_token(cache) if ccfg else 0
 
         def resize_to(nb):
@@ -474,6 +539,81 @@ class Server:
                     occ[shard_of(j)] += 1
             return occ
 
+        def sweep_covered(s):
+            """Give back every block shard ``s``'s host frontier already
+            covers (idempotent: absorb/compaction normally do this the
+            moment ``cov`` advances, so a sweep only recovers blocks
+            under pool pressure).  Each slot's UPCOMING write blocks are
+            excluded — mid-step they may be allocated but not yet
+            written (stale claims look dead), and freeing one would only
+            make ``ensure`` re-allocate it and the reclaim loop spin."""
+            freed = 0
+            for j in range(n):
+                if shard_of(j) != s:
+                    continue
+                if admitting[j]:
+                    plen = len(prompt_np[slot_uid[j]])
+                    cl = int(min(chunk, plen - fed[j])) if chunk else 0
+                    excl = kv_pool.write_blocks(int(fed[j]), max(cl, 1), R,
+                                                paged.block_size)
+                    freed += pool.free_covered(j, int(fed[j]),
+                                               int(cov_h[j]), excl)
+                elif active[j]:
+                    excl = kv_pool.write_blocks(int(pos[j]), 1, R,
+                                                paged.block_size)
+                    freed += pool.free_covered(j, int(pos[j]),
+                                               int(cov_h[j]), excl)
+            return freed
+
+        def reclaim_all():
+            """Last-resort pool reclaim: sweep every shard's covered
+            blocks and drain the prefix cache entirely.  Returns the
+            number of blocks freed — the zero-forward-progress raise
+            paths fire only after this comes back empty twice."""
+            held = pool.allocated()
+            for s in range(max(shards, 1)):
+                sweep_covered(s)
+                while pcache is not None and pcache.evict_lru(s):
+                    pass
+            return held - pool.allocated()
+
+        def try_ensure(j, blocks, pairs):
+            """``pool.ensure`` with pool-pressure reclaim: on exhaustion,
+            sweep covered blocks, then evict prefix-cache entries (LRU)
+            — blocks pinned by the cache are an optimization, never an
+            obligation — and retry.  Returns False when the shard
+            genuinely cannot supply the blocks right now (the caller
+            defers the slot and retries after the next compaction
+            give-back instead of killing the whole batch).
+
+            ``pairs`` MUST be the step's shared COW accumulator: a swap
+            performed before a mid-list PoolExhausted is not re-emitted
+            on retry (the fresh block is exclusively owned by then), so
+            pairs recorded by failed attempts still need their payload
+            copy this step — even when the slot ends up stalling."""
+            while True:
+                try:
+                    pool.ensure(j, blocks, pairs)
+                    return True
+                except kv_pool.PoolExhausted:
+                    s = shard_of(j)
+                    if sweep_covered(s):
+                        continue
+                    if pcache is not None and pcache.evict_lru(s):
+                        continue
+                    return False
+
+        def apply_cow(pairs):
+            """Run the device block copies for this step's COW swaps
+            (padded to a pow2 bucket with a repeated real pair so traced
+            shapes stay bounded)."""
+            nonlocal cache
+            m = _pow2ceil(len(pairs))
+            pad = pairs + [pairs[0]] * (m - len(pairs))
+            src = jnp.asarray([p[0] for p in pad], jnp.int32)
+            dst = jnp.asarray([p[1] for p in pad], jnp.int32)
+            cache = self._cow(cache, src, dst)
+
         def ensure_row(j):
             """Re-grow the launch bucket so logical slot j has a physical
             row.  Under the current policy this never fires — shrink only
@@ -482,6 +622,18 @@ class Server:
             shrink policy ever loosens."""
             if idx_of(j) >= bucket:
                 resize_to(min(per_shard, _pow2ceil(idx_of(j) + 1)))
+
+        # per-request candidate digests, hashed once (admission steering
+        # re-consults the prefix maps every engine step while a request
+        # queues — only the map lookups need repeating, not the hashing)
+        dig_by_uid: Dict[int, list] = {}
+
+        def prefix_digests(uid):
+            d = dig_by_uid.get(uid)
+            if d is None:
+                p = np.asarray(prompts[uid], np.int32)[-scfg.max_seq:]
+                d = dig_by_uid[uid] = pcache.prefix_digests(p, chunk)
+            return d
 
         def start_admission(j, uid):
             nonlocal cache
@@ -494,17 +646,51 @@ class Server:
             slot_uid[j] = uid
             if pool is not None:
                 pool.free_slot(j)   # recycle the previous occupant's blocks
-            if ccfg is not None:
+            hit = (pcache.lookup(shard_of(j), p, chunk,
+                                 digests=prefix_digests(uid))
+                   if pcache is not None else None)
+            if hit is not None:
+                # prefix-sharing fast path: adopt the registered tail
+                # blocks (ref-counted; any divergent write COWs) and
+                # restore the absorbed prompt centroids + coverage
+                # frontier — admission resumes at fed = hit.fed instead
+                # of re-streaming the shared prefix through the model
+                for bi, gid in hit.blocks.items():
+                    pool.adopt(j, bi, gid)
+                cache = self._restore_slot_state(cache, hit.snap,
+                                                 jnp.int32(phys(j)))
+                fed[j] = hit.fed
+                cov_h[j] = hit.cov
+            elif ccfg is not None:
                 # the slot's previous occupant left stale centroids; its
                 # ring entries are hidden by the position mask, but stale
-                # counts would unmask stale centroids
+                # counts would unmask stale centroids (on a prefix hit
+                # the restore overwrites all of this state instead)
                 cache = self._reset_slot(cache, jnp.int32(phys(j)))
 
-        def admit_blocking(j, uid):
+        def admit_blocking(j, uid) -> bool:
             nonlocal cache, pad_toks, useful_toks
             r = by_uid[uid]
             p = np.asarray(prompts[uid], np.int32)[-scfg.max_seq:]
             plen = len(p)
+            cov0 = (int(np.clip(plen - R + ccfg.refresh, 0, plen))
+                    if ccfg is not None else 0)
+            if pool is not None and r.max_new_tokens > 1:
+                # allocation on admission — BEFORE the prefill compute,
+                # so an exhausted pool defers the request back to the
+                # queue (retried after the next compaction give-back)
+                # instead of wasting a prefill or killing the batch.
+                # Only the blocks holding live (uncovered) prompt
+                # positions are claimed; centroid-covered offsets stay
+                # unmapped and the scatter drops them
+                pool.free_slot(j)
+                # a freshly freed slot has no shared mappings, so no COW
+                # pairs can arise here (blocking admission and prefix
+                # sharing are mutually exclusive by validation)
+                if not try_ensure(j, kv_pool.live_blocks(
+                        plen, cov0, R, paged.block_size), []):
+                    pool.free_slot(j)
+                    return False
             bkt = min(scfg.max_seq,
                       -(-plen // self._bucket) * self._bucket)
             padded = np.zeros((1, bkt), np.int32)
@@ -520,7 +706,9 @@ class Server:
             pad_toks += bkt - plen
             useful_toks += plen
             if r.max_new_tokens <= 1:
-                return                  # done at prefill; slot stays free
+                if pool is not None:
+                    pool.free_slot(j)   # done at prefill; slot stays free
+                return True
             if ccfg is not None:
                 c1 = self._clusterize(c1, cache, plen, ccfg)
             if self._rules is not None:
@@ -531,35 +719,34 @@ class Server:
                 # path removes the B=1 cache entirely
                 c1 = place_admission(c1, self._rules)
             ensure_row(j)
+            cov_h[j] = cov0
             if pool is not None:
-                # allocation on admission: only the blocks holding live
-                # (uncovered) prompt positions; centroid-covered offsets
-                # stay unmapped and the scatter drops them
-                cov0 = int(np.clip(plen - R + ccfg.refresh, 0, plen))
-                pool.free_slot(j)
-                pool.ensure(j, kv_pool.live_blocks(plen, cov0, R,
-                                                   paged.block_size))
-                cov_h[j] = cov0
                 bt_row = jnp.asarray(pool.row_for_write(j))
                 cache = self._write_slot_paged(cache, c1, jnp.int32(phys(j)),
                                                bt_row)
             else:
-                cov_h[j] = (int(np.clip(plen - R + ccfg.refresh, 0, plen))
-                            if ccfg is not None else 0)
                 cache = self._write_slot(cache, c1, jnp.int32(phys(j)))
             cur[j], pos[j] = first, plen
             active[j] = True
             since_tok[j] = 0
             slot_uid[j] = uid
+            return True
 
+        idle_retries = stall_retries = 0
         while True:
             # ---- admission ------------------------------------------------
             # next slot: the emptiest data shard's lowest free index
             # (recomputed per admission so a burst spreads across shards
-            # AND keeps within-shard indices low for tight launch buckets);
-            # chunked mode starts at most one in-flight prefill per shard
+            # AND keeps within-shard indices low for tight launch buckets;
+            # with prefix sharing, occupancy ties prefer the shard already
+            # holding the longest matching prefix entry — block ids are
+            # shard-local, so reuse can't cross shards); chunked mode
+            # starts at most one in-flight prefill per shard
             while qi < len(order):
                 occ = occupancy()
+                uid = order[qi]
+                p_next = (np.asarray(prompts[uid], np.int32)[-scfg.max_seq:]
+                          if pcache is not None else None)
                 cands = []
                 for s in range(max(shards, 1)):
                     slots = range(s * per_shard, min((s + 1) * per_shard, n))
@@ -568,19 +755,39 @@ class Server:
                     free = [j for j in slots
                             if not (active[j] or admitting[j])]
                     if free:
-                        cands.append((occ[s], s, free[0]))
+                        match = (pcache.match_len(
+                            s, p_next, chunk,
+                            digests=prefix_digests(uid))
+                                 if pcache is not None else 0)
+                        cands.append((occ[s], -match, s, free[0]))
                 if not cands:
                     break
-                j = min(cands)[2]
-                uid = order[qi]
-                qi += 1
+                j = min(cands)[3]
                 if chunk:
+                    qi += 1
                     start_admission(j, uid)
+                elif admit_blocking(j, uid):
+                    qi += 1
                 else:
-                    admit_blocking(j, uid)
+                    break   # pool-deferred: retry after the give-back
 
             if not (active.any() or admitting.any()):
-                break
+                if qi >= len(order):
+                    break
+                # admission deferred on an idle engine: reclaim covered
+                # blocks + prefix-cache pins and retry; only a genuinely
+                # unservable request (nothing left to reclaim, nothing in
+                # flight to make progress) surfaces PoolExhausted
+                freed = reclaim_all()
+                idle_retries += 1
+                if idle_retries > 1 and freed == 0:
+                    raise kv_pool.PoolExhausted(
+                        "zero forward progress: an idle engine cannot "
+                        "admit the next request even with every "
+                        "reclaimable block returned — raise pool_blocks "
+                        "(one slot's live window no longer fits)")
+                continue
+            idle_retries = 0
 
             # ---- bucketed launch: shrink to live occupancy ----------------
             # only once the queue has drained AND no prefill is in flight:
@@ -627,31 +834,66 @@ class Server:
             mixed = bool(step_chunks)
             width = chunk if mixed else 1
             real_rows = int(active.sum()) + sum(step_chunks.values())
+            stalled_decode = set()
             if pool is not None:
                 # paged packed launch: one row per real (slot, position)
                 # pair, padded per data shard to a power-of-two row bucket
                 # (bounded trace count) — compute ∝ real tokens instead of
                 # slots × width.  Blocks this step's ring writes land in
-                # are allocated (or re-allocated after a give-back) first.
+                # are made WRITABLE first: unmapped blocks allocate (or
+                # re-allocate after a give-back) and shared blocks
+                # copy-on-write swap (prefix sharing) — the payload copies
+                # run on device before any ring write.  A slot whose shard
+                # cannot supply its blocks even after reclaim stalls for
+                # the step (its row is simply not packed) and retries
+                # after the next give-back, instead of killing the batch.
+                # one shared accumulator: COW swaps performed before a
+                # mid-list exhaustion (or by a slot that then stalls)
+                # still get their payload copies below — the table
+                # already points at the fresh blocks
+                cow_pairs = []
                 for j in range(n):
-                    if admitting[j]:
-                        pool.ensure(j, kv_pool.write_blocks(
-                            int(fed[j]), step_chunks[j], R,
-                            paged.block_size))
+                    if admitting[j] and j in step_chunks:
+                        if not try_ensure(j, kv_pool.write_blocks(
+                                int(fed[j]), step_chunks[j], R,
+                                paged.block_size), cow_pairs):
+                            del step_chunks[j]
                     elif active[j]:
-                        pool.ensure(j, kv_pool.write_blocks(
-                            int(pos[j]), 1, R, paged.block_size))
+                        if not try_ensure(j, kv_pool.write_blocks(
+                                int(pos[j]), 1, R, paged.block_size),
+                                cow_pairs):
+                            stalled_decode.add(j)
+                if cow_pairs:
+                    apply_cow(cow_pairs)
+                mixed = bool(step_chunks)
+                real_rows = (int(active.sum()) - len(stalled_decode)
+                             + sum(step_chunks.values()))
+                if real_rows == 0:
+                    # every slot is pool-stalled: nothing can advance
+                    # until blocks come back, and nothing is running to
+                    # give them back — reclaim; if that yields nothing
+                    # twice, no forward progress is possible
+                    freed = reclaim_all()
+                    stall_retries += 1
+                    if stall_retries > 1 and freed == 0:
+                        raise kv_pool.PoolExhausted(
+                            "zero forward progress: every slot's next "
+                            "ring write needs a block and no block is "
+                            "reclaimable — raise pool_blocks or shorten "
+                            "refresh_every")
+                    continue
+                stall_retries = 0
                 rows_by_shard = [[] for _ in range(max(shards, 1))]
                 for j in range(n):
                     s = shard_of(j)
-                    if admitting[j]:
+                    if admitting[j] and j in step_chunks:
                         cl = step_chunks[j]
                         p = prompt_np[slot_uid[j]]
                         for i in range(cl):
                             rows_by_shard[s].append(
                                 (j, int(p[fed[j] + i]), int(fed[j]) + i,
                                  int(fed[j]) + cl))
-                    elif active[j]:
+                    elif active[j] and j not in stalled_decode:
                         rows_by_shard[s].append(
                             (j, int(cur[j]), int(pos[j]), int(pos[j]) + 1))
                 row_bucket = _pow2ceil(
@@ -723,7 +965,10 @@ class Server:
             launch_real += real_rows
             launch_padded += compute_rows
             wasted_slots += int(n - (active | admitting).sum())
-            since_tok[active] += 1
+            advanced = active.copy()
+            for j in stalled_decode:
+                advanced[j] = False     # a pool-stalled slot didn't decode
+            since_tok[advanced] += 1
             n_chunks += len(step_chunks)
             if shards > 1:
                 shard_steps += 1
@@ -734,15 +979,21 @@ class Server:
                 live = 0
                 for j in range(n):
                     if admitting[j]:
-                        live += min(int(fed[j]) + step_chunks[j]
+                        live += min(int(fed[j]) + step_chunks.get(int(j), 0)
                                     - int(cov_h[j]), R)
                     elif active[j]:
                         live += min(int(pos[j]) + 1 - int(cov_h[j]), R)
+                # physical blocks only: a block mapped by several slots
+                # (prefix sharing) counts once — the duplicate-mapping
+                # surplus is tracked separately as the sharing saving
                 alloc = (pool.allocated() * paged.block_size if pool
                          else bp * R)
                 kv_live_sum += live
                 kv_alloc_sum += alloc
                 kv_alloc_peak = max(kv_alloc_peak, alloc)
+                if pool is not None:
+                    kv_shared_peak = max(kv_shared_peak,
+                                         pool.shared_extra())
 
             # ---- host update ---------------------------------------------
             for j in range(n):
@@ -751,11 +1002,34 @@ class Server:
                 pj = phys(j)
                 uid = slot_uid[j]
                 if admitting[j]:
+                    if j not in step_chunks:
+                        continue        # pool-stalled this step
                     cl = step_chunks[j]
                     fed[j] += cl
                     plen = len(prompt_np[uid])
                     useful_toks += cl
                     if fed[j] < plen:
+                        # chunk-boundary state is prefix-pure — a
+                        # deterministic function of tokens[:fed] alone
+                        # (per-slot compaction gating keeps neighbours
+                        # from perturbing it) — so register it for
+                        # later same-prefix admissions
+                        if (pcache is not None and fed[j] % chunk == 0
+                                and fed[j] >= max(self._pshare.min_prefix,
+                                                  chunk)):
+                            blocks = {
+                                bi: int(pool.table[j, bi])
+                                for bi in kv_pool.live_blocks(
+                                    int(fed[j]), int(cov_h[j]), R,
+                                    paged.block_size)
+                                if pool.table[j, bi] >= 0}
+                            snap = self._snap_slot(cache, jnp.int32(pj))
+                            if self._rules is not None:
+                                snap = place_prefix_snapshot(
+                                    snap, self._rules)
+                            pcache.register(shard_of(j), prompt_np[uid],
+                                            int(fed[j]), int(cov_h[j]),
+                                            blocks, snap)
                         continue
                     # final chunk landed: its last row's logits are the
                     # request's first generated token
@@ -789,7 +1063,7 @@ class Server:
                         since_tok[j] = 0
                         pos[j] = plen
                         cur[j] = first
-                elif active[j]:
+                elif active[j] and j not in stalled_decode:
                     toks[uid].append(int(nxt_of(j)))
                     token_t[uid].append(now)
                     pos[j] += 1
@@ -800,12 +1074,23 @@ class Server:
                         if pool is not None:
                             pool.free_slot(j)   # recycling on early exit
 
-            if (ccfg is not None and int(since_tok.max()) >= ccfg.refresh
-                    and active.any()):
+            # ---- compaction: per-slot cadence -----------------------------
+            # a slot is due after ``refresh`` of its OWN decode tokens;
+            # one batched call refreshes every due slot (others pass
+            # length 0 and recompact_clustered's per-slot gate keeps
+            # their summaries bit-identical).  Per-slot triggering —
+            # rather than the old global since_tok reset — makes each
+            # slot's compaction schedule a function of its own stream
+            # alone, so admission timing (bursts, prefix-shared fast
+            # paths, pool stalls) can never shift a neighbour's
+            # compaction points and change its tokens
+            due = [j for j in range(n)
+                   if ccfg is not None and active[j]
+                   and since_tok[j] >= ccfg.refresh and idx_of(j) < bucket]
+            if due:
                 lengths = np.zeros(bp, np.int32)
-                for j in range(n):
-                    if active[j] and idx_of(j) < bucket:
-                        lengths[phys(j)] = pos[j]
+                for j in due:
+                    lengths[phys(j)] = pos[j]
                 if pool is not None:
                     cache = self._compact_paged(cache, jnp.asarray(lengths),
                                                 bt_device())
@@ -819,18 +1104,20 @@ class Server:
                 # host frontier mirror (recompact_clustered's formula) —
                 # compaction is when the paged engine returns covered
                 # blocks to the pool
-                for j in range(n):
-                    if not active[j]:
-                        continue
+                for j in due:
                     newc = max(int(cov_h[j]),
                                int(np.clip(pos[j] - R + ccfg.refresh,
                                            0, pos[j])))
                     cov_h[j] = newc
                     if pool is not None:
                         pool.free_covered(j, int(pos[j]), newc)
-                since_tok[:] = 0
+                    since_tok[j] = 0
                 n_compacts += 1
 
+        if pcache is not None:
+            # entries are a per-serve cache: release every pinned block
+            # so the pool drains to zero with the request stream
+            pcache.clear()
         wall = time.perf_counter() - t0_serve
         gen_total = sum(len(v) for v in toks.values())
         # each request's first token comes from prefill; tokens/s rates
@@ -876,6 +1163,8 @@ class Server:
             })
             if pool is not None:
                 self.last_stats.update({
+                    # physical blocks only: shared blocks count once
+                    # (kv_shared_blocks/kv_bytes_saved carry the surplus)
                     "kv_bytes_peak_per_shard": float(
                         int(pool.peak_blocks_shard.max())
                         * paged.block_size * tail_bpt),
@@ -885,9 +1174,23 @@ class Server:
                     / max(pool.n_blocks, 1),
                     "pool_allocs": float(pool.n_allocs),
                     "pool_frees": float(pool.n_frees),
+                    "pool_retains": float(pool.n_retains),
+                    "pool_cow": float(pool.n_cow),
+                    # peak surplus of logical block mappings over the
+                    # physical blocks backing them — the tail KV that
+                    # prefix sharing avoided materializing
+                    "kv_shared_blocks": float(kv_shared_peak),
+                    "kv_bytes_saved": float(
+                        kv_shared_peak * paged.block_size * tail_bpt),
                     # every request completed → every block recycled
                     "pool_blocks_end": float(pool.allocated()),
                 })
+                if pcache is not None:
+                    self.last_stats.update({
+                        "prefix_hits": float(pcache.hits),
+                        "prefix_tokens_reused": float(
+                            pcache.tokens_reused),
+                    })
             else:
                 self.last_stats.update({
                     "kv_bytes_peak_per_shard": float(
@@ -1091,12 +1394,42 @@ class Server:
             out["scan"] = walk(dst["scan"], src["scan"], 1)
         return out
 
+    def _cow_impl(self, cache, src, dst):
+        """Device half of copy-on-write (prefix sharing): copy pool
+        blocks ``src`` → ``dst`` ((m,) global ids, same shard per pair)
+        in every clustered tail leaf.  The allocator already swapped the
+        writing slot's table entry to ``dst`` (kv_pool.ensure), so this
+        copy must land before the step's ring writes — the engine threads
+        the cache through this jit first.  Padding pairs repeat a real
+        pair; the duplicate scatter writes identical values, so the
+        result is deterministic."""
+        def leaf(node):
+            out = dict(node)
+            for key in ("k_tail", "v_tail"):
+                p = node[key]
+                if p.ndim == 5:            # scan-stacked (L, nb, bs, H, Dh)
+                    out[key] = p.at[:, dst].set(p[:, src])
+                else:                      # (nb, bs, H, Dh)
+                    out[key] = p.at[dst].set(p[src])
+            return out
+
+        def walk(node):
+            if _is_clustered_kv(node):
+                return leaf(node)
+            if isinstance(node, dict):
+                return {k: walk(v) for k, v in node.items()}
+            if isinstance(node, list):
+                return [walk(v) for v in node]
+            return node
+
+        return walk(cache)
+
     def _absorb_paged_impl(self, cache, j, lengths, target, bt_row, ccfg):
         """Paged twin of ``_absorb_impl``: gather slot j's tail blocks
         into ring order, fold the aged entries into its centroids, write
         back centroids/counts/cov only (the pool bytes are untouched —
         absorb never moves tail data)."""
-        keys = ("k_cents", "v_cents", "counts", "cov")
+        keys = attn.CLUSTERED_SLOT_KEYS
 
         def leaf(node):
             stacked = node["k_cents"].ndim == 5
@@ -1142,7 +1475,7 @@ class Server:
         write back centroids/counts/cov.  The engine then returns blocks
         whose positions the new frontier covers to the free list (host
         side — the give-back is bookkeeping, not data movement)."""
-        keys = ("k_cents", "v_cents", "counts", "cov")
+        keys = attn.CLUSTERED_SLOT_KEYS
 
         def leaf(node):
             stacked = node["k_cents"].ndim == 5

@@ -3,5 +3,6 @@ from repro.sharding.rules import (Rules, admission_spec, annotate,
                                   cache_spec, constrain_cache,
                                   current_rules, default_table, param_spec,
                                   place_admission, place_block_tables,
+                                  place_prefix_snapshot,
                                   shard_cache, shardings_from_specs,
                                   tree_param_specs, use_rules)  # noqa: F401

@@ -336,6 +336,31 @@ def admission_spec(path: str, shape: Sequence[int], rules: Rules) -> P:
     return P(*dims)
 
 
+def place_prefix_snapshot(snap, rules: Rules):
+    """Mesh placement for a prefix-cache snapshot (one slot's clustered
+    summary rows, ``transformer.clustered_slot_state``).
+
+    The snapshot's slot dim is 1 so it cannot shard over ``data`` — the
+    B=1 admission argument applies (one device assignment per jit) — but
+    kv-head dims shard over ``model`` exactly like the admission specs,
+    so a pinned snapshot costs ``1/model``-th of a dense slot row per
+    device.  Note the asymmetry with the blocks the snapshot rides with:
+    physical block ids are meaningful ONLY on the data shard that owns
+    them (``block_table_spec`` partitions tables by slot, and the
+    shard_map island rebases ids per shard), so the host-side prefix
+    maps are kept strictly per data shard and an admission can only
+    adopt entries registered by slots of its own shard — the snapshot is
+    the one piece that crosses shards, and only because it is
+    slot-agnostic summary state."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(snap)
+    placed = [
+        jax.device_put(leaf, NamedSharding(
+            rules.mesh, admission_spec(_leaf_path(kp), leaf.shape, rules)))
+        for kp, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, placed)
+
+
 def place_admission(cache, rules: Rules):
     """Place a B=1 admission-prefill cache on the mesh with
     ``admission_spec`` layouts (model-sharded heads, minimal replication)

@@ -363,6 +363,144 @@ class TestBlockPoolProperties:
         assert (pool.table == -1).all()
         assert pool.n_frees == pool.n_allocs
 
+    def test_release_dead_block_raises_cleanly(self):
+        """Releasing a block with ref == 0 must raise BEFORE any
+        mutation: the count never underflows to -1 and the free list
+        never sees a double insert (pinned: the retain path always
+        guarded this, release did not)."""
+        from repro.runtime import kv_pool
+        pool = kv_pool.BlockPool(2, 16, kv_pool.PagedKVConfig(block_size=4))
+        gid = pool.alloc(0, 0)
+        pool.free_block(0, 0)
+        free_before = sorted(pool._free[0])
+        for _ in range(2):
+            with pytest.raises(ValueError, match="dead block"):
+                pool.release(gid)
+            assert int(pool.ref[gid]) == 0          # no underflow
+            assert sorted(pool._free[0]) == free_before  # no double insert
+        with pytest.raises(ValueError, match="dead block"):
+            pool.retain(gid)
+        pool.check_invariants()
+
+    def test_cow_never_mutates_a_referenced_block(self):
+        """ensure() on a shared mapping must swap in a fresh block and
+        hand back the copy pair — the shared block keeps its other
+        references (and its payload, since the writer now owns a
+        different block)."""
+        from repro.runtime import kv_pool
+        pool = kv_pool.BlockPool(2, 16, kv_pool.PagedKVConfig(block_size=4))
+        gid = pool.alloc(0, 1)
+        pool.adopt(1, 1, gid)                       # prefix-share mapping
+        pool.retain(gid)                            # prefix-cache pin
+        assert int(pool.ref[gid]) == 3
+        pairs = pool.ensure(0, [1])                 # slot 0 writes → COW
+        assert len(pairs) == 1 and pairs[0][0] == gid
+        src, dst = pairs[0]
+        assert int(pool.table[0, 1]) == dst != gid
+        assert int(pool.table[1, 1]) == gid         # other owner untouched
+        assert int(pool.ref[gid]) == 2 and int(pool.ref[dst]) == 1
+        # exclusive owner: a second ensure is a no-op (no more copies)
+        assert pool.ensure(0, [1]) == []
+        assert pool.ensure(1, [1]) == [(gid, int(pool.table[1, 1]))]
+        pool.check_invariants()
+
+    def test_cow_pairs_survive_midlist_exhaustion(self):
+        """A COW swap performed before ensure() raises PoolExhausted
+        mid-list must keep its (src, dst) pair in the caller-owned
+        accumulator — the retry sees an exclusively-owned block and
+        re-emits nothing, so dropping the pair would silently skip the
+        payload copy and leave the fresh block uninitialized."""
+        from repro.runtime import kv_pool
+        pool = kv_pool.BlockPool(
+            1, 16, kv_pool.PagedKVConfig(block_size=4, pool_blocks=5))
+        g0 = pool.alloc(0, 0)
+        for bi in (1, 2, 3):
+            pool.alloc(0, bi)
+        pool.retain(g0)                 # shared: ensure must COW bi=0
+        pool.free_block(0, 3)
+        spare = pool._fresh(0)          # leave exactly one free block
+        pairs: list = []
+        with pytest.raises(kv_pool.PoolExhausted):
+            # bi=0 COWs (consumes the last free block), bi=3 then raises
+            pool.ensure(0, [0, 3], pairs)
+        assert pairs == [(g0, int(pool.table[0, 0]))]
+        pool.release(spare)
+        pool.ensure(0, [0, 3], pairs)   # retry: no pair re-emitted
+        assert len(pairs) == 1
+        pool.check_invariants()
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 2), st.sampled_from([4, 8]),
+           st.lists(st.tuples(st.integers(0, 3), st.integers(0, 3),
+                              st.sampled_from(["ensure", "adopt", "retain",
+                                               "release", "free_slot",
+                                               "covered"])),
+                    min_size=1, max_size=60),
+           st.integers(0, 10_000))
+    def test_retain_release_cow_conserve_refs(self, shards, bsz, ops, seed):
+        """Sharing invariants under random retain/adopt/COW/free
+        sequences: every block's ref count equals its table mappings
+        plus the external pins we hold, COW pairs always leave the
+        source alive for its remaining owners, and releasing every pin +
+        slot restores the full free list."""
+        from repro.runtime import kv_pool
+        rng = np.random.default_rng(seed)
+        R = 16
+        n_slots = 4 * shards
+        pool = kv_pool.BlockPool(
+            n_slots, R, kv_pool.PagedKVConfig(block_size=bsz),
+            n_shards=shards, slots_per_shard=4)
+        pins: list = []                 # external retains we must release
+        t_of = np.zeros(n_slots, np.int64)
+        for slot_raw, bi_raw, op in ops:
+            slot = (slot_raw * shards) % n_slots
+            bi = bi_raw % pool.blocks_per_slot
+            if op == "ensure":
+                try:
+                    pairs = pool.ensure(slot, [bi])
+                except kv_pool.PoolExhausted:
+                    pairs = []
+                for src, dst in pairs:
+                    assert int(pool.ref[src]) >= 1, \
+                        "COW dropped a block others still reference"
+                    assert int(pool.ref[dst]) == 1
+                    assert int(pool.table[slot, bi]) == dst
+            elif op == "adopt":
+                # share a live same-shard mapping into this slot
+                base = pool.shard_of(slot) * pool.slots_per_shard
+                donor = base + int(rng.integers(0, pool.slots_per_shard))
+                gid = int(pool.table[donor, bi])
+                if gid >= 0 and pool.table[slot, bi] < 0:
+                    pool.adopt(slot, bi, gid)
+            elif op == "retain":
+                gid = int(pool.table[slot, bi])
+                if gid >= 0:
+                    pool.retain(gid)
+                    pins.append(gid)
+            elif op == "release":
+                if pins:
+                    pool.release(pins.pop(rng.integers(0, len(pins))))
+            elif op == "free_slot":
+                pool.free_slot(slot)
+            else:
+                t_of[slot] += int(rng.integers(1, R))
+                cov = max(0, int(t_of[slot]) - int(rng.integers(0, R)))
+                pool.free_covered(slot, int(t_of[slot]), cov)
+            pool.check_invariants()
+            # ref conservation: mappings + our pins, exactly
+            mapped = pool.table[pool.table >= 0]
+            for gid in np.unique(mapped):
+                expect = int((mapped == gid).sum()) + pins.count(int(gid))
+                assert int(pool.ref[gid]) == expect, (gid, expect)
+        for gid in pins:
+            pool.release(gid)
+        for slot in range(n_slots):
+            pool.free_slot(slot)
+        pool.check_invariants()
+        assert pool.allocated() == 0
+        assert (pool.table == -1).all()
+        assert pool.n_frees == pool.n_allocs
+
     @settings(max_examples=20, deadline=None)
     @given(st.integers(1, 500), st.integers(0, 500), st.sampled_from([2, 4]))
     def test_write_and_live_blocks_agree_with_ring_claims(self, t, back,

@@ -338,8 +338,11 @@ class TestPagedEngine:
     def test_oversubscribed_pool_serves_short_streams(self, pieces):
         """A pool smaller than slots × blocks-per-slot still serves when
         live windows stay short (blocks map lazily, only live positions
-        hold storage); an undersized pool on a deep stream raises
-        PoolExhausted instead of corrupting."""
+        hold storage); a pool too small for even serialized live windows
+        on a deep stream still raises PoolExhausted — but only at
+        genuine zero forward progress (every slot stalled, nothing
+        reclaimable), after admission deferral and per-slot write stalls
+        have been exhausted."""
         params = pieces[0]
         rng = np.random.default_rng(3)
         # every request's final depth <= 8 positions -> <= 2 live blocks
@@ -377,6 +380,154 @@ class TestPagedEngine:
         with pytest.raises(ValueError, match="global-attention"):
             Server(gl, ServerConfig(kv_compress=self.CCFG, paged=self.PG),
                    tfm.init_params(jax.random.PRNGKey(3), gl))
+
+
+class TestPrefixSharing:
+    """Prefix-shared paged admission (ServerConfig.prefix_share): chunked
+    admissions register prefix-pure state (tail blocks + absorbed
+    centroids + frontier) at chunk boundaries; later same-prefix requests
+    adopt the blocks (copy-on-write) and restore the state.  Greedy
+    tokens must be BIT-IDENTICAL to unshared paged serving — the reused
+    state is exactly what the unshared run recomputes from the same
+    prefix tokens, and per-slot compaction cadence + the
+    recompact_clustered no-advance gate make every slot's stream
+    schedule-independent."""
+
+    PG = PagedKVConfig(block_size=4)
+
+    @staticmethod
+    def _template_stream(n=6, tpl_len=40, seed=5):
+        """Bursty templated traffic: one shared template + short unique
+        suffixes, everything queued at t0."""
+        rng = np.random.default_rng(seed)
+        template = rng.integers(0, 64, size=(tpl_len,)).astype(np.int32)
+        reqs, prompts = [], {}
+        for i in range(n):
+            sfx = rng.integers(0, 64,
+                               size=(int(rng.integers(3, 9)),)).astype(
+                                   np.int32)
+            prompts[i] = np.concatenate([template, sfx])
+            reqs.append(Request(i, len(prompts[i]),
+                                int(rng.integers(6, 12))))
+        return reqs, prompts
+
+    # refresh 8: compactions fire mid-stream (token budgets reach 11);
+    # refresh 12: no slot ever hits the cadence — the ± compaction pair
+    @pytest.mark.parametrize("refresh", [8, 12])
+    def test_token_identical_to_unshared(self, pieces, refresh):
+        from repro.runtime.prefix_cache import PrefixShareConfig
+        params = pieces[0]
+        reqs, prompts = self._template_stream()
+        ccfg = kv_compress.KVCompressConfig(n_clusters=8, iters=4,
+                                            keep_recent=16,
+                                            refresh_every=refresh)
+        base = Server(TINY, ServerConfig(batch_size=2, max_seq=96,
+                                         kv_compress=ccfg, prefill_chunk=8,
+                                         paged=self.PG), params)
+        ref = {o.uid: o.tokens for o in base.serve(reqs, prompts)}
+        srv = Server(TINY, ServerConfig(batch_size=2, max_seq=96,
+                                        kv_compress=ccfg, prefill_chunk=8,
+                                        paged=self.PG,
+                                        prefix_share=PrefixShareConfig()),
+                     params)
+        outs = srv.serve(reqs, prompts)
+        for o in outs:
+            assert o.tokens == ref[o.uid], o.uid
+        st = srv.last_stats
+        # sharing really happened: admissions hit the cache, skipped
+        # feeding prefix chunks, shared physical blocks, and COW fired
+        # when divergent suffixes wrote into shared blocks
+        assert st["prefix_hits"] > 0
+        assert st["prefix_tokens_reused"] > 0
+        assert st["kv_shared_blocks"] > 0 and st["kv_bytes_saved"] > 0
+        # skipped prefix chunks = less prompt compute than unshared
+        assert st["prefill_chunks"] < base.last_stats["prefill_chunks"]
+        # every shared/retained block released at drain
+        assert st["pool_blocks_end"] == 0.0
+        if refresh == 8:
+            assert st["kv_compactions"] > 0
+            # divergent suffixes wrote into shared blocks → COW fired
+            # (at refresh 12 the live window is too short for writes to
+            # reach retained blocks, so sharing never needs a copy)
+            assert st["pool_cow"] > 0
+
+    def test_long_suffixes_still_hit_the_template_entry(self, pieces):
+        """Suffixes LONGER than a chunk: each stream registers chunk
+        boundaries inside its own unique suffix, but the pure-template
+        boundary entry must survive (shorter prefixes are never evicted
+        by longer registrations of the same stream) so every later
+        same-template request still hits it — tokens bit-identical to
+        unshared throughout."""
+        from repro.runtime.prefix_cache import PrefixShareConfig
+        params = pieces[0]
+        rng = np.random.default_rng(11)
+        template = rng.integers(0, 64, size=(24,)).astype(np.int32)
+        reqs, prompts = [], {}
+        for i in range(5):
+            sfx = rng.integers(0, 64, size=(int(rng.integers(10, 21)),))
+            prompts[i] = np.concatenate([template, sfx]).astype(np.int32)
+            reqs.append(Request(i, len(prompts[i]), 5))
+        ccfg = kv_compress.KVCompressConfig(n_clusters=8, iters=4,
+                                            keep_recent=16,
+                                            refresh_every=12)
+        base = Server(TINY, ServerConfig(batch_size=2, max_seq=96,
+                                         kv_compress=ccfg, prefill_chunk=8,
+                                         paged=self.PG), params)
+        ref = {o.uid: o.tokens for o in base.serve(reqs, prompts)}
+        srv = Server(TINY, ServerConfig(batch_size=2, max_seq=96,
+                                        kv_compress=ccfg, prefill_chunk=8,
+                                        paged=self.PG,
+                                        prefix_share=PrefixShareConfig()),
+                     params)
+        outs = srv.serve(reqs, prompts)
+        for o in outs:
+            assert o.tokens == ref[o.uid], o.uid
+        # at least every request after the first shares the 24-token
+        # template (3 chunks): the template boundary stays registered
+        # even as each stream registers suffix-contaminated boundaries
+        st = srv.last_stats
+        assert st["prefix_hits"] >= len(reqs) - 2
+        assert st["prefix_tokens_reused"] >= 24 * (len(reqs) - 2)
+        assert st["pool_blocks_end"] == 0.0
+
+    def test_oversubscribed_burst_defers_instead_of_raising(self, pieces):
+        """Regression (PoolExhausted mid-serve used to kill the whole
+        batch): an oversubscribed pool + burst completes — admissions
+        defer back to the queue and ring writes stall their slot until
+        the compaction give-back — with tokens STILL bit-identical to
+        the dense engine (stalls delay slots, but per-slot cadence keeps
+        every slot's stream a function of its own tokens)."""
+        params = pieces[0]
+        reqs, prompts = TestPagedEngine._stream()
+        ccfg = TestPagedEngine.CCFG
+        for chunk in (8, 0):
+            dense = Server(TINY, ServerConfig(batch_size=2, max_seq=96,
+                                              kv_compress=ccfg,
+                                              prefill_chunk=chunk), params)
+            ref = {o.uid: o.tokens for o in dense.serve(reqs, prompts)}
+            srv = Server(TINY, ServerConfig(
+                batch_size=2, max_seq=96, kv_compress=ccfg,
+                prefill_chunk=chunk,
+                paged=PagedKVConfig(block_size=4, pool_blocks=7)), params)
+            outs = srv.serve(reqs, prompts)       # must not raise
+            for o in outs:
+                assert o.tokens == ref[o.uid], (chunk, o.uid)
+            assert srv.last_stats["pool_blocks_end"] == 0.0
+
+    def test_validation(self, pieces):
+        from repro.runtime.prefix_cache import PrefixShareConfig
+        params = pieces[0]
+        ccfg = TestPagedEngine.CCFG
+        with pytest.raises(ValueError, match="prefix_share"):
+            Server(TINY, ServerConfig(batch_size=2, max_seq=96,
+                                      kv_compress=ccfg, prefill_chunk=8,
+                                      prefix_share=PrefixShareConfig()),
+                   params)
+        with pytest.raises(ValueError, match="prefix_share"):
+            Server(TINY, ServerConfig(batch_size=2, max_seq=96,
+                                      kv_compress=ccfg, paged=self.PG,
+                                      prefix_share=PrefixShareConfig()),
+                   params)
 
 
 class TestBatchedCompress:

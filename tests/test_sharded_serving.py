@@ -164,6 +164,52 @@ def test_sharded_paged_parity():
 
 
 @pytest.mark.slow
+def test_sharded_prefix_sharing_parity():
+    """Prefix-shared paged admission on a 2x4 mesh: prefix maps are kept
+    per data shard (block ids are shard-local), admission steers
+    same-prefix requests toward shards already holding an entry, and the
+    centroid snapshot crosses shards via place_prefix_snapshot.  Greedy
+    tokens must stay bit-identical to BOTH unshared mesh serving and the
+    single-device shared run — with mid-stream compaction in play."""
+    run_sub(_COMMON + """
+    from repro.runtime.kv_pool import PagedKVConfig
+    from repro.runtime.prefix_cache import PrefixShareConfig
+    ccfg = kv_compress.KVCompressConfig(n_clusters=8, iters=4,
+                                        keep_recent=16, refresh_every=8)
+    pg = PagedKVConfig(block_size=4)
+    # templated burst: one shared 40-token template + short suffixes
+    tpl = rng.integers(0, 64, size=(40,)).astype(np.int32)
+    treqs, tprompts = [], {}
+    for i in range(8):
+        sfx = rng.integers(0, 64, size=(int(rng.integers(3, 9)),))
+        tprompts[i] = np.concatenate([tpl, sfx]).astype(np.int32)
+        treqs.append(Request(i, len(tprompts[i]), int(rng.integers(6, 12))))
+
+    def toks_of(scfg):
+        srv = Server(CFG, scfg, params)
+        outs = srv.serve(treqs, tprompts)
+        return {o.uid: o.tokens for o in outs}, srv.last_stats
+
+    unshared_mesh, _ = toks_of(ServerConfig(
+        batch_size=4, max_seq=96, kv_compress=ccfg, prefill_chunk=8,
+        paged=pg, mesh=mesh))
+    shared_1dev, st1 = toks_of(ServerConfig(
+        batch_size=4, max_seq=96, kv_compress=ccfg, prefill_chunk=8,
+        paged=pg, prefix_share=PrefixShareConfig()))
+    shared_mesh, stm = toks_of(ServerConfig(
+        batch_size=4, max_seq=96, kv_compress=ccfg, prefill_chunk=8,
+        paged=pg, prefix_share=PrefixShareConfig(), mesh=mesh))
+    for uid in unshared_mesh:
+        assert shared_mesh[uid] == unshared_mesh[uid], uid
+        assert shared_mesh[uid] == shared_1dev[uid], uid
+    assert st1["prefix_hits"] > 0
+    assert stm["prefix_hits"] > 0       # shard-local maps still get hits
+    assert stm["pool_blocks_end"] == 0.0
+    print("sharded prefix sharing parity OK")
+    """)
+
+
+@pytest.mark.slow
 def test_indivisible_heads_fall_back_to_replication():
     """A model whose kv-head count doesn't divide the model axis must
     still serve correctly (heads replicate, slots stay data-sharded)."""
