@@ -630,6 +630,124 @@ def prefix_share_bench(quick=False, seed=7, mesh_spec=None,
              f"runs={n_runs};records={len(records)};path={json_out}")
 
 
+def window_bench(quick=False, seed=7, mesh_spec=None,
+                 json_out="artifacts/serve_bench.json"):
+    """Sliding-window serving — the model-zoo door the retention-policy
+    layer opens: a gemma2-style reduced config (alternating 'LG'
+    local/global layers, softcaps, sandwich norms) served by the chunked
+    + paged engine vs blocking dense admission.  'L' layers retire
+    behind WindowRetention (dense window rings, per-row wlo kernel
+    floors), 'G' layers stay clustered behind FrontierRetention; greedy
+    tokens must be identical across the two schedules, and the
+    per-policy retirement counters (kv_retired_window /
+    kv_retired_frontier) are recorded.  ``--mesh 2x4`` adds the sharded
+    pair."""
+    import dataclasses as dc
+
+    from repro import configs
+    from repro.kernels.ops import interpret_default
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models import transformer as tfm
+    from repro.runtime.kv_pool import PagedKVConfig
+    from repro.runtime.server import Server, ServerConfig
+
+    GL = dc.replace(configs.get_reduced("gemma2-27b"), dtype="float32")
+    params = tfm.init_params(jax.random.PRNGKey(0), GL)
+    rng = np.random.default_rng(seed)
+    n = 6 if quick else 12
+    # prompts fit the clustered tail ring (loss-free admission ⇒ token
+    # identity across schedules) but exceed the 16-token window; budgets
+    # push past keep_recent so compactions advance the 'G' frontier
+    reqs = [Request(i, int(rng.integers(8, 28)), int(rng.integers(4, 11)))
+            for i in range(n)]
+    prompts = {r.uid: rng.integers(0, GL.vocab, size=(r.prompt_len,))
+               .astype(np.int32) for r in reqs}
+    ccfg = kv_compress.KVCompressConfig(n_clusters=4, iters=2,
+                                        keep_recent=32, refresh_every=4)
+    chunk, pcfg = 8, PagedKVConfig(block_size=4)
+    mesh = make_serving_mesh(mesh_spec) if mesh_spec else None
+
+    def scfg(chunked_paged, use_mesh):
+        return ServerConfig(
+            batch_size=4, max_seq=96, kv_compress=ccfg,
+            prefill_chunk=chunk if chunked_paged else 0,
+            paged=pcfg if chunked_paged else None,
+            mesh=mesh if use_mesh else None)
+
+    variants = [("serve_window_blocking", scfg(False, False)),
+                ("serve_window_paged_chunked", scfg(True, False))]
+    if mesh is not None:
+        tag = mesh_spec.lower()
+        variants += [
+            (f"serve_window_blocking_mesh{tag}", scfg(False, True)),
+            (f"serve_window_paged_chunked_mesh{tag}", scfg(True, True))]
+    probe = [Request(10_000 + i, l, g)
+             for i, (l, g) in enumerate([(9, 3), (11, 5)])]
+    probe_prompts = {r.uid: rng.integers(0, GL.vocab, size=(r.prompt_len,))
+                     .astype(np.int32) for r in probe}
+
+    records, tokens_by_variant = [], {}
+    for name, cfg in variants:
+        srv = Server(GL, cfg, params)
+        srv.serve(probe, probe_prompts)       # warm the launch shapes
+        t0 = time.perf_counter()
+        outs = srv.serve(reqs, prompts)
+        wall = time.perf_counter() - t0
+        st = {k: float(v) for k, v in srv.last_stats.items()}
+        tokens_by_variant[name] = {o.uid: o.tokens for o in outs}
+        emit(name, wall * 1e6,
+             f"tokens_per_s_wall={st['tokens_per_s_wall']:.1f};"
+             f"ttft_p95_ms={st['ttft_p95_ms']:.1f};"
+             f"kv_retired_window={st['kv_retired_window']:.0f};"
+             f"kv_retired_frontier={st['kv_retired_frontier']:.0f}")
+        records.append({
+            "name": name, "seed": seed,
+            "mesh": mesh_spec if cfg.mesh is not None else "1x1",
+            "batch_size": cfg.batch_size, "requests": n,
+            "wall_s": wall,
+            "gen_tokens": sum(len(o.tokens) for o in outs), **st,
+        })
+
+    by_name = {r["name"]: r for r in records}
+    comparisons = {}
+    for blocking, paged_name in [
+            ("serve_window_blocking", "serve_window_paged_chunked"),
+            (f"serve_window_blocking_mesh{(mesh_spec or '').lower()}",
+             f"serve_window_paged_chunked_mesh{(mesh_spec or '').lower()}")]:
+        if blocking not in by_name or paged_name not in by_name:
+            continue
+        rb, rp = by_name[blocking], by_name[paged_name]
+        same = tokens_by_variant[blocking] == tokens_by_variant[paged_name]
+        cmp = {
+            "tokens_per_s_wall_blocking": rb["tokens_per_s_wall"],
+            "tokens_per_s_wall_paged_chunked": rp["tokens_per_s_wall"],
+            "speedup": rp["tokens_per_s_wall"]
+            / max(rb["tokens_per_s_wall"], 1e-9),
+            "ttft_p95_ratio": rp["ttft_p95_ms"]
+            / max(rb["ttft_p95_ms"], 1e-9),
+            "kv_retired_window": rp["kv_retired_window"],
+            "kv_retired_frontier": rp["kv_retired_frontier"],
+            "tokens_identical": bool(same),
+        }
+        comparisons[paged_name] = cmp
+        emit(f"{paged_name}_vs_blocking", 0.0,
+             f"speedup={cmp['speedup']:.2f}x;"
+             f"ttft_p95_ratio={cmp['ttft_p95_ratio']:.2f};"
+             f"tokens_identical={same}")
+
+    if json_out:
+        scenario = "serve_window" + ("_quick" if quick else "")
+        run_key = {"git_sha": _git_sha(), "seed": seed,
+                   "mesh": mesh_spec or "1x1", "scenario": scenario}
+        n_runs = _append_serve_json(json_out, run_key, {
+            "quick": bool(quick), "timestamp": time.time(),
+            "backend": jax.default_backend(),
+            "pallas_interpret": bool(interpret_default()),
+            "records": records, "comparisons": comparisons})
+        emit("serve_window_json", 0.0,
+             f"runs={n_runs};records={len(records)};path={json_out}")
+
+
 def roofline_summary(quick=False):
     arts = sorted(glob.glob("artifacts/dryrun/*.json"))
     if not arts:
@@ -661,7 +779,7 @@ def roofline_summary(quick=False):
 BENCHES = [t1_median_throughput, t2_recognition_rate, t3_fixed_point,
            t4_optimal_k, t5_kmedians_end2end, kv_compress_bench,
            request_batching_bench, grad_compress_bench, serve_bench,
-           prefix_share_bench, roofline_summary]
+           prefix_share_bench, window_bench, roofline_summary]
 
 
 def main() -> None:
@@ -694,7 +812,7 @@ def main() -> None:
         if b is serve_bench:
             b(quick=args.quick, seed=args.seed, mesh_spec=args.mesh,
               json_out=args.json_out, paged=args.paged)
-        elif b is prefix_share_bench:
+        elif b is prefix_share_bench or b is window_bench:
             b(quick=args.quick, seed=args.seed, mesh_spec=args.mesh,
               json_out=args.json_out)
         else:

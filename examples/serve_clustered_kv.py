@@ -191,6 +191,49 @@ def main():
           f"{stu['kv_bytes_peak_per_shard'] / 1024:.0f} KiB/shard — "
           f"faster admission keeps more requests in flight)")
 
+    # --- sliding-window serving (RetentionPolicy opens the model zoo) ---
+    # Everything above serves an all-global-attention model, where "which
+    # ring positions may be dropped?" is answered by the clustered
+    # coverage frontier.  That question now lives behind a per-layer
+    # RetentionPolicy (core/retention.py), so gemma2/3-style models with
+    # alternating local ('L') sliding-window layers serve through the
+    # SAME chunked + paged engine: 'G' layers keep FrontierRetention
+    # (centroids + cov frontier, unchanged), while each 'L' layer holds a
+    # dense window-sized ring under WindowRetention — positions retire
+    # the moment they fall more than `sliding_window` steps behind, the
+    # pool reclaims their blocks mid-stream, and the paged decode kernel
+    # applies the per-row window floor (wlo) alongside the cov mask.
+    # Greedy tokens stay bit-identical to blocking dense admission.
+    # (QuotaRetention, the third policy, gives un-clustered paged exact
+    # KV a per-slot block budget — see benchmarks/run.py serve --paged
+    # without --kv-* flags and tests/test_serving_engine.py.)
+    import dataclasses as dc
+    GLWIN = dc.replace(SMALL, name="serve-lm-gl", layer_pattern="GL",
+                       sliding_window=16)
+    params_w = tfm.init_params(jax.random.PRNGKey(1), GLWIN)
+    w_reqs = [Request(i, int(rng.integers(8, 28)), 8) for i in range(12)]
+    w_prompts = {r.uid: rng.integers(0, 512, size=(r.prompt_len,)).astype(
+        np.int32) for r in w_reqs}
+    ccfg_w = kv_compress.KVCompressConfig(n_clusters=8, iters=4,
+                                          keep_recent=32, refresh_every=8)
+    srv_wb = Server(GLWIN, ServerConfig(batch_size=4, max_seq=96,
+                                        kv_compress=ccfg_w), params_w)
+    outs_wb = srv_wb.serve(w_reqs, w_prompts)
+    srv_w = Server(GLWIN, ServerConfig(batch_size=4, max_seq=96,
+                                       kv_compress=ccfg_w, prefill_chunk=8,
+                                       paged=PagedKVConfig(block_size=8)),
+                   params_w)
+    outs_w = srv_w.serve(w_reqs, w_prompts)
+    same_w = all(a.tokens == b.tokens for a, b in
+                 zip(sorted(outs_w, key=lambda o: o.uid),
+                     sorted(outs_wb, key=lambda o: o.uid)))
+    stw = srv_w.last_stats
+    print(f"[server] sliding-window model ('GL' x2, window=16, chunked + "
+          f"paged): tokens {'identical' if same_w else 'DIVERGED'} vs "
+          f"blocking dense; window retired {stw['kv_retired_window']:.0f} "
+          f"positions, frontier retired {stw['kv_retired_frontier']:.0f}, "
+          f"{stw['pool_blocks_end']:.0f} blocks held at drain")
+
     # --- mesh-sharded serving (slots x tensor parallel) ---
     # With N>1 visible devices (XLA_FLAGS above) the same queue is served
     # on a (data, model) mesh: the engine cache becomes sharded arrays

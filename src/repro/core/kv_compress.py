@@ -55,6 +55,21 @@ class KVCompressConfig:
         return self.prompt_clusters or self.n_clusters
 
 
+def coverage_frontier(pos: int, cfg: KVCompressConfig) -> int:
+    """Loss-free coverage frontier for a stream at absolute length ``pos``.
+
+    Positions below the frontier are absorbed into centroids; the exact
+    tail ring keeps ``[frontier, pos)``, which fits in ``keep_recent``
+    slots with ``refresh`` steps of headroom before the next compaction
+    must run.  Every frontier target the serving engine uses (admission,
+    streaming absorb, compaction) is this one formula — the
+    ``FrontierRetention`` policy delegates here so the retirement rule
+    and the k-medians coverage can never drift apart.
+    """
+    pos = int(pos)
+    return max(0, min(pos, pos - cfg.keep_recent + cfg.refresh))
+
+
 class CompressedKV(NamedTuple):
     k_cents: jnp.ndarray      # (H, C, Dh) key centroids (bit-serial medians)
     v_cents: jnp.ndarray      # (H, C, Dh) mean value per cluster

@@ -1,0 +1,196 @@
+"""Retention policies: *what* the KV cache must keep, decoupled from
+*where* the bytes live.
+
+Every serving-engine component that drops cached positions — the block
+pool's sweep, the decode kernels' masks, the engine's host bookkeeping —
+used to hardcode the clustered coverage frontier: a ring position is
+dead once its claimed absolute position falls below ``cov`` (it has been
+absorbed into centroids) or at/after ``t`` (it was never written).  That
+welded the whole chunked/paged machinery to all-global-attention
+clustered models.
+
+This module names the rule instead.  A :class:`RetentionPolicy` answers
+one question — *which claimed positions must survive?* — via a per-slot
+lower bound ``retire_lo(slot, t)``: positions in ``[retire_lo, t)`` are
+live, positions below it are retired, and positions at/after ``t``
+(claimed by the ring layout but never written) are dead unless the
+policy sets ``keep_unwritten`` (quota mode reserves storage up front, so
+unwritten positions hold blocks that must not be swept).
+
+Three concrete policies:
+
+* :class:`FrontierRetention` — the clustered coverage frontier.  Owns
+  the host-side ``cov`` mirror and the frontier-advance formula
+  (delegating to :func:`repro.core.kv_compress.coverage_frontier`);
+  retire_lo is exactly ``cov``, so sweeps are bit-identical to the old
+  ``free_covered``.
+* :class:`WindowRetention` — sliding-window (gemma2/3-style local)
+  layers: retire_lo is ``t - window``.  The same claimed-position
+  safety argument applies: a ring of size >= window never overwrites an
+  in-window entry, so retiring ``< t - window`` is loss-free.
+* :class:`QuotaRetention` — paged exact-KV with a per-slot block
+  budget: nothing is ever retired mid-stream (retire_lo = 0,
+  keep_unwritten = True); instead the full depth of a request is
+  reserved at admission and returned only at slot exit, so an
+  oversubscribed burst defers admissions rather than dying mid-decode.
+
+Policies also carry the *write protection* registry that used to be
+``free_covered``'s ``exclude=`` parameter: before a sweep, the engine
+registers the blocks an imminent ring write will claim so a concurrent
+sweep can never free storage the very next launch scatters into.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import kv_compress
+
+
+class RetentionPolicy:
+    """Which claimed ring positions must survive a write?
+
+    ``retire_lo(slot, t)`` returns the retirement frontier: claimed
+    positions ``< retire_lo`` are dead, ``[retire_lo, t)`` are live, and
+    ``>= t`` (never written) are dead unless ``keep_unwritten``.
+    """
+
+    kind = "base"
+    #: True when positions claimed but not yet written still hold
+    #: storage that must survive a sweep (quota reservations).
+    keep_unwritten = False
+
+    def retire_lo(self, slot: int, t: int) -> int:
+        raise NotImplementedError
+
+    # -- write protection (absorbs free_covered's old ``exclude=``) ----
+    def protect_write(self, slot: int, blocks) -> None:
+        """Register block indices an imminent write will touch."""
+        self._protected()[slot] = frozenset(int(b) for b in blocks)
+
+    def clear_protection(self, slot: int) -> None:
+        self._protected().pop(slot, None)
+
+    def protected_blocks(self, slot: int) -> frozenset:
+        return self._protected().get(slot, frozenset())
+
+    def _protected(self) -> dict:
+        d = getattr(self, "_prot", None)
+        if d is None:
+            d = self._prot = {}
+        return d
+
+    def on_slot_free(self, slot: int) -> None:
+        """Reset per-slot policy state when the engine recycles a slot."""
+        self.clear_protection(slot)
+
+
+class FrontierRetention(RetentionPolicy):
+    """Today's clustered coverage frontier, bit-identical.
+
+    Owns the host mirror of the per-slot ``cov`` device array (the
+    engine used to keep a bare ``cov_h`` numpy array) and the frontier
+    formula: positions below ``cov`` were absorbed into k-medians
+    centroids, so dropping their exact bytes is loss-free by
+    construction.  All frontier targets (admission, streaming absorb,
+    compaction) come from :func:`kv_compress.coverage_frontier`.
+    """
+
+    kind = "frontier"
+
+    def __init__(self, n_slots: int, ccfg: "kv_compress.KVCompressConfig"):
+        self.ccfg = ccfg
+        self.cov = np.zeros(n_slots, np.int32)
+
+    def retire_lo(self, slot: int, t: int) -> int:
+        return int(self.cov[slot])
+
+    def frontier(self, slot: int) -> int:
+        return int(self.cov[slot])
+
+    def set_frontier(self, slot: int, cov: int) -> None:
+        self.cov[slot] = int(cov)
+
+    def target(self, pos: int) -> int:
+        """Loss-free frontier for a stream at absolute length ``pos``."""
+        return kv_compress.coverage_frontier(int(pos), self.ccfg)
+
+    def on_slot_free(self, slot: int) -> None:
+        super().on_slot_free(slot)
+        self.cov[slot] = 0
+
+
+class WindowRetention(RetentionPolicy):
+    """Sliding-window local attention: keep the last ``window`` positions.
+
+    A local layer at stream length ``t`` attends positions
+    ``[max(0, t - window), t)`` only, so anything older is dead by the
+    model's own mask — the ring analogue of the coverage frontier, with
+    the window edge instead of ``cov``.  ``advance(slot, t)`` tracks the
+    per-slot stream head and returns how many positions newly crossed
+    the window edge (the ``kv_retired_window`` counter); the count is in
+    positions, not blocks, because local rings are dense (never
+    pool-backed) — retirement is virtual until the ring slot is
+    overwritten.
+    """
+
+    kind = "window"
+
+    def __init__(self, window: int, n_slots: int = 0):
+        if window <= 0:
+            raise ValueError("WindowRetention needs a positive window")
+        self.window = int(window)
+        self._head = np.zeros(n_slots, np.int64)
+
+    def retire_lo(self, slot: int, t: int) -> int:
+        return max(0, int(t) - self.window)
+
+    def advance(self, slot: int, t: int) -> int:
+        """Move slot's stream head to ``t``; return newly retired count."""
+        old = int(self._head[slot])
+        t = max(old, int(t))
+        self._head[slot] = t
+        return max(0, t - self.window) - max(0, old - self.window)
+
+    def on_slot_free(self, slot: int) -> None:
+        super().on_slot_free(slot)
+        if slot < self._head.shape[0]:
+            self._head[slot] = 0
+
+
+class QuotaRetention(RetentionPolicy):
+    """Paged exact-KV with a per-slot block budget.
+
+    Exact caches have no loss-free retirement rule mid-stream — every
+    written position may be attended until the request exits — so
+    nothing retires (``retire_lo = 0``) and reserved-but-unwritten
+    positions keep their blocks (``keep_unwritten``).  The eviction
+    story moves to admission: ``admit_blocks`` computes the full block
+    depth a request will ever claim, the engine reserves it before
+    feeding the first token, and an admission that can't reserve defers
+    back to the queue instead of hitting ``PoolExhausted`` mid-decode.
+    Blocks return to the pool only at slot exit.
+    """
+
+    kind = "quota"
+    keep_unwritten = True
+
+    def __init__(self, block_size: int, blocks_per_slot: int):
+        self.block_size = int(block_size)
+        self.blocks_per_slot = int(blocks_per_slot)
+
+    def retire_lo(self, slot: int, t: int) -> int:
+        return 0
+
+    def admit_blocks(self, plen: int, max_new: int) -> int:
+        """Blocks needed for a request's full written depth.
+
+        Positions written over the request's life are ``0..plen-1``
+        (prompt) plus ``max_new - 1`` generated tokens (the final
+        sampled token is never written back), so the claim depth is
+        ``plen + max(1, max_new) - 1`` positions, rounded up to blocks
+        and clamped to the per-slot budget.
+        """
+        depth = int(plen) + max(1, int(max_new)) - 1
+        need = -(-depth // self.block_size)
+        return min(self.blocks_per_slot, max(1, need))

@@ -135,16 +135,18 @@ def clustered_decode(q, k_cents, v_cents, counts, k_tail, v_tail, t, cov,
 
 @partial(jax.jit, static_argnames=("scale", "softcap", "interpret"))
 def _paged_clustered_decode_jit(q, k_cents, v_cents, counts, k_pool, v_pool,
-                                row_slot, row_bt, qpos1, tw, cov, *,
+                                row_slot, row_bt, qpos1, tw, cov, wlo, *,
                                 scale: float, softcap: float | None,
                                 interpret: bool):
     return _pcd.paged_clustered_decode_pallas(
         q, k_cents, v_cents, counts, k_pool, v_pool, row_slot, row_bt,
-        qpos1, tw, cov, scale=scale, softcap=softcap, interpret=interpret)
+        qpos1, tw, cov, wlo, scale=scale, softcap=softcap,
+        interpret=interpret)
 
 
 def paged_clustered_decode(q, k_cents, v_cents, counts, k_pool, v_pool,
-                           row_slot, row_bt, qpos1, tw, cov, *, scale: float,
+                           row_slot, row_bt, qpos1, tw, cov, row_wlo=None,
+                           *, scale: float,
                            softcap: float | None = None,
                            interpret: bool | None = None):
     """Paged clustered-KV decode over packed ragged rows.
@@ -157,7 +159,9 @@ def paged_clustered_decode(q, k_cents, v_cents, counts, k_pool, v_pool,
     (nb, bs, Hkv, Dh) tail block pools; row_bt (N, T) physical block per
     ring block (all entries valid — unmapped blocks pre-sanitized to a
     masked garbage block); qpos1/tw/cov per-row position + 1 / ring
-    watermark / coverage frontier.
+    watermark / coverage frontier; ``row_wlo`` (N,) per-row retention
+    window lower bound (None ⇒ zeros: frontier-only masking, the
+    bit-identical pre-policy behavior).
 
     Under mesh serving rows, slots, and the pool shard over ``data``
     (block ids are global and rebased per shard inside the island), heads
@@ -167,6 +171,8 @@ def paged_clustered_decode(q, k_cents, v_cents, counts, k_pool, v_pool,
     matching the dense path."""
     if interpret is None:
         interpret = interpret_default()
+    if row_wlo is None:
+        row_wlo = jnp.zeros_like(jnp.asarray(qpos1, jnp.int32))
     hq = q.shape[-2]
     from repro.sharding import current_rules
     r = current_rules()
@@ -183,9 +189,10 @@ def paged_clustered_decode(q, k_cents, v_cents, counts, k_pool, v_pool,
         if data_axes is not None or model_axes is not None:
             return _pcd.paged_clustered_decode_shardmap(
                 q, k_cents, v_cents, counts, k_pool, v_pool, row_slot,
-                row_bt, qpos1, tw, cov, mesh=r.mesh, data_axes=data_axes,
-                model_axes=model_axes, scale=scale, softcap=softcap,
-                interpret=interpret)
+                row_bt, qpos1, tw, cov, row_wlo, mesh=r.mesh,
+                data_axes=data_axes, model_axes=model_axes, scale=scale,
+                softcap=softcap, interpret=interpret)
     return _paged_clustered_decode_jit(
         q, k_cents, v_cents, counts, k_pool, v_pool, row_slot, row_bt,
-        qpos1, tw, cov, scale=scale, softcap=softcap, interpret=interpret)
+        qpos1, tw, cov, row_wlo, scale=scale, softcap=softcap,
+        interpret=interpret)

@@ -50,9 +50,9 @@ from repro.kernels.clustered_decode import (_SHARD_MAP_NO_CHECK,
                                             score_and_combine, shard_map)
 
 
-def _kernel(bt_ref, slot_ref, qpos1_ref, tw_ref, cov_ref, q_ref, kc_ref,
-            vc_ref, cnt_ref, kp_ref, vp_ref, o_ref, kt_s, vt_s, *, bs: int,
-            nblk: int, r: int, scale: float, softcap):
+def _kernel(bt_ref, slot_ref, qpos1_ref, tw_ref, cov_ref, wlo_ref, q_ref,
+            kc_ref, vc_ref, cnt_ref, kp_ref, vp_ref, o_ref, kt_s, vt_s, *,
+            bs: int, nblk: int, r: int, scale: float, softcap):
     j = pl.program_id(2)
     # stage this row's tail block j into the scratch ring at its ring
     # offsets [j*bs, (j+1)*bs) — after the last step the scratch holds the
@@ -65,6 +65,7 @@ def _kernel(bt_ref, slot_ref, qpos1_ref, tw_ref, cov_ref, q_ref, kc_ref,
         qpos1 = qpos1_ref[0]
         tw = tw_ref[0]
         cov = cov_ref[0]
+        wlo = wlo_ref[0]
         q = q_ref[0, 0].astype(jnp.float32)                  # (G, Dh)
         kc = kc_ref[0, :, 0].astype(jnp.float32)             # (C, Dh)
         vc = vc_ref[0, :, 0].astype(jnp.float32)
@@ -74,11 +75,16 @@ def _kernel(bt_ref, slot_ref, qpos1_ref, tw_ref, cov_ref, q_ref, kc_ref,
 
         # ring offset s claims position s while tw <= R, else the wrapped
         # window — identical mask math to the dense kernel, with the
-        # row's own absolute position (qpos1 - 1) as the causal bound
+        # row's own absolute position (qpos1 - 1) as the causal bound.
+        # ``wlo`` is the row's retention window lower bound (0 under
+        # FrontierRetention — cov alone gates; t - window under
+        # WindowRetention), masked alongside cov so a retired-but-not-yet
+        # -overwritten ring entry can never score
         sl = jax.lax.broadcasted_iota(jnp.int32, (1, r), 1)
         wrapped = tw - r + jnp.mod(sl - tw, r)
         pos = jnp.where(tw <= r, sl, wrapped)                # (1, R)
-        ok = (pos >= 0) & (pos < qpos1) & (pos >= cov) & row_ok
+        ok = ((pos >= 0) & (pos < qpos1) & (pos >= cov) & (pos >= wlo)
+              & row_ok)
 
         # the scoring body is SHARED with the dense kernel — the staged
         # scratch ring is its (R, Dh) tail operand, so the paged engine's
@@ -90,7 +96,7 @@ def _kernel(bt_ref, slot_ref, qpos1_ref, tw_ref, cov_ref, q_ref, kc_ref,
 
 def paged_clustered_decode_pallas(q, k_cents, v_cents, counts, k_pool,
                                   v_pool, row_slot, row_bt, qpos1, tw, cov,
-                                  *, scale: float, softcap=None,
+                                  wlo=None, *, scale: float, softcap=None,
                                   interpret: bool | None = None):
     """q (N, Hq, Dh) packed rows; k/v_cents (B, C, Hkv, Dh); counts
     (B, C, Hkv); k/v_pool (nb, bs, Hkv, Dh) block pools; row_slot (N,)
@@ -98,8 +104,10 @@ def paged_clustered_decode_pallas(q, k_cents, v_cents, counts, k_pool,
     every entry must be a valid pool index (the caller maps unallocated
     blocks to a garbage block whose offsets the masks exclude); qpos1
     (N,) = row position + 1 (0 for padding rows); tw (N,) slot ring
-    watermark t + chunk_len; cov (N,) coverage frontier.  → (N, Hq, Dh);
-    padding rows return a degenerate uniform the caller must discard."""
+    watermark t + chunk_len; cov (N,) coverage frontier; wlo (N,) the
+    row's retention window lower bound (None/zeros ⇒ frontier-only
+    masking, bit-identical to before).  → (N, Hq, Dh); padding rows
+    return a degenerate uniform the caller must discard."""
     if interpret is None:
         from repro.kernels.ops import interpret_default
         interpret = interpret_default()
@@ -117,11 +125,16 @@ def paged_clustered_decode_pallas(q, k_cents, v_cents, counts, k_pool,
     qpos1 = jnp.asarray(qpos1, jnp.int32)
     tw = jnp.asarray(tw, jnp.int32)
     cov = jnp.asarray(cov, jnp.int32)
+    if wlo is None:
+        wlo = jnp.zeros_like(qpos1)
+    wlo = jnp.asarray(wlo, jnp.int32)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                # row_bt, row_slot
         grid=(n, hkv, t_blocks),
         in_specs=[
+            pl.BlockSpec((1,), lambda i, h, j, bt, sl: (i,),
+                         memory_space=pltpu.SMEM),
             pl.BlockSpec((1,), lambda i, h, j, bt, sl: (i,),
                          memory_space=pltpu.SMEM),
             pl.BlockSpec((1,), lambda i, h, j, bt, sl: (i,),
@@ -167,7 +180,7 @@ def paged_clustered_decode_pallas(q, k_cents, v_cents, counts, k_pool,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n, hkv, g, dh), q.dtype),
         **call_kwargs,
-    )(row_bt, row_slot, qpos1, tw, cov, qh, k_cents, v_cents, cnt_t,
+    )(row_bt, row_slot, qpos1, tw, cov, wlo, qh, k_cents, v_cents, cnt_t,
       k_pool, v_pool)
     return out.reshape(n, hq, dh)
 
@@ -181,8 +194,8 @@ def _fold_axis_index(axes, mesh):
 
 def paged_clustered_decode_shardmap(q, k_cents, v_cents, counts, k_pool,
                                     v_pool, row_slot, row_bt, qpos1, tw,
-                                    cov, *, mesh, data_axes, model_axes,
-                                    scale: float, softcap=None,
+                                    cov, wlo, *, mesh, data_axes,
+                                    model_axes, scale: float, softcap=None,
                                     interpret: bool = False):
     """Dispatch the paged kernel once per mesh shard.
 
@@ -194,13 +207,13 @@ def paged_clustered_decode_shardmap(q, k_cents, v_cents, counts, k_pool,
     a single flat table."""
     d, m = data_axes, model_axes
 
-    def body(q, kc, vc, cnt, kp, vp, rs, rbt, qp1, tw_, cov_):
+    def body(q, kc, vc, cnt, kp, vp, rs, rbt, qp1, tw_, cov_, wlo_):
         if d:
             di = _fold_axis_index(d, mesh)
             rs = rs - di * kc.shape[0]
             rbt = rbt - di * kp.shape[0]
         return paged_clustered_decode_pallas(
-            q, kc, vc, cnt, kp, vp, rs, rbt, qp1, tw_, cov_,
+            q, kc, vc, cnt, kp, vp, rs, rbt, qp1, tw_, cov_, wlo_,
             scale=scale, softcap=softcap, interpret=interpret)
 
     f = shard_map(
@@ -218,9 +231,10 @@ def paged_clustered_decode_shardmap(q, k_cents, v_cents, counts, k_pool,
             P(d),                 # qpos1    (N,)
             P(d),                 # tw       (N,)
             P(d),                 # cov      (N,)
+            P(d),                 # wlo      (N,) retention window floor
         ),
         out_specs=P(d, m, None),
         **_SHARD_MAP_NO_CHECK,
     )
     return f(q, k_cents, v_cents, counts, k_pool, v_pool, row_slot, row_bt,
-             qpos1, tw, cov)
+             qpos1, tw, cov, wlo)

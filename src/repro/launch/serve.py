@@ -8,6 +8,13 @@ Mesh-sharded (slots × tensor parallel), e.g. on an 8-device host:
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
         --requests 24 --batch-size 8 --mesh 2x4
 
+Sliding-window models (gemma2/3-style 'L' layers) serve chunked + paged
+through the retention-policy layer — ``--config`` is an alias for
+``--arch`` that reads naturally when picking one:
+
+    PYTHONPATH=src python -m repro.launch.serve --config gemma2-27b \
+        --reduced --requests 24 --prefill-chunk 16 --paged --kv-clusters 8
+
 Drives the full request-processing path: request queue → bit-serial
 k-medians batcher → prefill → decode loop; reports padding waste
 (clustered vs FIFO) and throughput.  ``--mesh DATAxMODEL`` runs the
@@ -45,7 +52,11 @@ from repro.runtime.server import Server, ServerConfig  # noqa: E402
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=list(configs.ARCH_IDS))
+    ap.add_argument("--arch", "--config", dest="arch", required=True,
+                    choices=list(configs.ARCH_IDS),
+                    help="model config to serve; windowed configs "
+                         "(gemma2-27b, gemma3-4b) run their 'L' layers "
+                         "under WindowRetention")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--batch-size", type=int, default=4)
@@ -97,6 +108,17 @@ def main():
     if cfg.is_encdec or cfg.attention_free:
         print(f"[serve] note: {args.arch} decode path exercised via its "
               f"own cache family")
+    if args.prefill_chunk or args.paged:
+        report = cfg.serving_gate_report()
+        if report is not None:
+            ap.error(f"{args.arch} cannot serve chunked/paged: {report}")
+    if cfg.sliding_window and "L" in cfg.layer_pattern:
+        n_local = sum(cfg.pattern_for_layer(i) == "L"
+                      for i in range(cfg.n_layers))
+        print(f"[serve] windowed model: {n_local}/{cfg.n_layers} local "
+              f"layers under WindowRetention(window="
+              f"{cfg.sliding_window}); global layers retire at the "
+              f"cov frontier")
     rng = np.random.default_rng(args.seed)
     params = tfm.init_params(jax.random.PRNGKey(args.seed), cfg)
 
@@ -170,6 +192,13 @@ def main():
               f"frees, launch padding {st['launch_pad_frac'] * 100:.0f}%, "
               f"peak KV {st['kv_bytes_peak_per_shard'] / 1024:.0f} "
               f"KiB/shard (frag {st['kv_frag'] * 100:.0f}%)")
+    retired = {k: st[k] for k in ("kv_retired_frontier", "kv_retired_window",
+                                  "kv_retired_quota")
+               if st.get(k)}
+    if retired:
+        print("[serve] retention: " + ", ".join(
+            f"{k.removeprefix('kv_retired_')} retired {v:.0f} positions"
+            for k, v in retired.items()))
     if args.prefix_share and "prefix_hits" in st:
         print(f"[serve] prefix sharing: {st['prefix_hits']:.0f} hits, "
               f"{st['prefix_tokens_reused']:.0f} prompt tokens reused, "

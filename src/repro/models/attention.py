@@ -444,7 +444,8 @@ def attn_decode_clustered(p, x, cfg: ModelConfig, *, cache, t,
 
 def attn_decode_clustered_packed(p, x, cfg: ModelConfig, *, cache,
                                  row_slot, row_pos, row_tw, block_tables,
-                                 block_size: int, kv_repeat: int = 1):
+                                 block_size: int, kv_repeat: int = 1,
+                                 row_wlo=None):
     """Paged clustered-KV attention over packed ragged rows.
 
     x (N, 1, d): one embedding per real (slot, position) pair this step —
@@ -494,18 +495,69 @@ def attn_decode_clustered_packed(p, x, cfg: ModelConfig, *, cache,
 
     qpos1 = jnp.where(valid, row_pos + 1, 0)
     row_cov = jnp.take(cache["cov"], row_slot, axis=0)
+    if row_wlo is None:
+        # no per-row retention window: the cov frontier is the only
+        # lower bound (zeros keep the kernel mask bit-identical)
+        row_wlo = jnp.zeros_like(qpos1)
     hq = cfg.n_heads
     from repro.kernels import ops as kops
     out = kops.paged_clustered_decode(
         q[:, 0], cache["k_cents"], cache["v_cents"], cache["counts"],
         k_pool, v_pool, row_slot, row_bt, qpos1, row_tw, row_cov,
-        scale=_scale(cfg), softcap=cfg.attn_logit_softcap)
+        row_wlo=row_wlo, scale=_scale(cfg), softcap=cfg.attn_logit_softcap)
     # same head-gather-before-wo rule as the dense clustered path
     out_flat = annotate(out.reshape(n, 1, hq * cfg.head_dim),
                         "batch", "seq", None)
     y = out_flat.astype(x.dtype) @ p["wo"].astype(cdtype(cfg))
     new_cache = dict(cache, k_tail=k_pool, v_tail=v_pool)
     return y, new_cache
+
+
+def attn_decode_window_packed(p, x, cfg: ModelConfig, *, cache, row_slot,
+                              row_pos, row_cidx, width: int,
+                              kv_repeat: int = 1):
+    """Sliding-window ('L') attention over packed ragged rows.
+
+    The local-layer twin of ``attn_decode_clustered_packed``: the paged
+    engine packs one row per real (slot, position) pair, but local rings
+    stay dense per slot — ``cache`` is the ordinary {'k','v'} (B, W, Hkv,
+    Dh) ring, never pool-backed (WindowRetention's retirement is virtual:
+    a position dies by falling out of the window, storage is reclaimed by
+    the ring overwrite itself).
+
+    ``row_cidx`` (N,) is each row's index within its admission chunk
+    (decode rows 0) and ``width`` the static max chunk length this launch:
+    rows commit in ``row_cidx`` order — scatter the K/V of every row at
+    chunk index jj into its slot's ring, gather, score at watermark
+    row_pos+1 — which reproduces the blocking engine's one-token-at-a-time
+    window schedule exactly (two rows of one slot never share a cidx, so
+    each scatter round is conflict-free)."""
+    n = x.shape[0]
+    window = cfg.sliding_window
+    positions = row_pos[:, None]                          # (N, 1)
+    q, k, v = _qkv(p, x, cfg, positions, "L", kv_repeat)
+    k, v = k[:, 0], v[:, 0]                               # (N, Hkv, Dh)
+    sc = cache["k"].shape[1]
+    valid = row_pos >= 0
+    kc, vc = cache["k"], cache["v"]
+    out = jnp.zeros((n, cfg.n_heads, cfg.head_dim), jnp.float32)
+    for jj in range(width):
+        sel = valid & (row_cidx == jj)
+        slot_w = jnp.where(sel, jnp.mod(row_pos, sc), sc)
+        kc = kc.at[row_slot, slot_w].set(k.astype(kc.dtype), mode="drop")
+        vc = vc.at[row_slot, slot_w].set(v.astype(vc.dtype), mode="drop")
+        kcg = jnp.take(kc, row_slot, axis=0)              # (N, W, Hkv, Dh)
+        vcg = jnp.take(vc, row_slot, axis=0)
+        out_jj = decode_attention(q[:, 0], kcg, vcg, t=row_pos + 1,
+                                  scale=_scale(cfg), window=window,
+                                  softcap=cfg.attn_logit_softcap,
+                                  ring=True)
+        out = jnp.where(sel[:, None, None], out_jj.astype(jnp.float32),
+                        out)
+    # same head-gather-before-wo rule as the clustered packed path
+    out_flat = annotate(out.reshape(n, 1, -1), "batch", "seq", None)
+    y = out_flat.astype(x.dtype) @ p["wo"].astype(cdtype(cfg))
+    return y, dict(cache, k=kc, v=vc)
 
 
 def attn_decode(p, x, cfg: ModelConfig, *, layer_kind: str, cache, t,
@@ -527,16 +579,31 @@ def attn_decode(p, x, cfg: ModelConfig, *, layer_kind: str, cache, t,
     positions = tb[:, None] + ri                          # (B, L)
     q, k, v = _qkv(p, x, cfg, positions, layer_kind, kv_repeat)
     window = cfg.sliding_window if layer_kind == "L" else None
-    if chunked and window is not None:
-        # writing a whole chunk into a W-sized ring overwrites positions
-        # t+i-W, which are still inside row 0's attention window — there
-        # is no coverage frontier here to absorb them first (unlike the
-        # clustered cache), so a fused multi-row window step is lossy
-        raise NotImplementedError(
-            "mixed-mode chunked decode does not support sliding-window "
-            "ring caches (multi-row ring writes destroy in-window "
-            "entries); serve windowed models with blocking prefill")
     sc = cache["k"].shape[1]
+    if chunked and window is not None:
+        # WindowRetention's staging rule: writing a whole chunk into a
+        # W-sized ring at once would overwrite positions t+i-W that are
+        # still inside earlier rows' attention windows — there is no
+        # coverage frontier here to absorb them first (unlike the
+        # clustered cache).  So rows commit sequentially: write row i at
+        # its ring slot, then score it at watermark t+i+1, exactly the
+        # schedule the blocking engine runs one decode step at a time.
+        # A row's overwrite victim (position t+i-W) is already outside
+        # the window of every later row, so nothing is lost.
+        new_cache = dict(cache)
+        outs = []
+        for i in range(l):
+            slot_i = jnp.where(i < cl, jnp.mod(tb + i, sc), sc)[:, None]
+            kc, vc = _cache_write(new_cache, k[:, i:i + 1], v[:, i:i + 1],
+                                  slot_i)
+            new_cache = dict(new_cache, k=kc, v=vc)
+            k_read, v_read = _cache_read(new_cache, cfg)
+            outs.append(decode_attention(
+                q[:, i], k_read, v_read, t=tb + i + 1, scale=_scale(cfg),
+                window=window, softcap=cfg.attn_logit_softcap, ring=True))
+        out = jnp.stack(outs, axis=1)
+        out_flat = annotate(out.reshape(b, l, -1), "batch", "seq", None)
+        return out_flat @ p["wo"].astype(cdtype(cfg)), new_cache
     slot = jnp.mod(positions, sc) if window \
         else jnp.minimum(positions, sc - 1)
     slot = jnp.where(ri < cl[:, None], slot, sc)          # drop masked rows

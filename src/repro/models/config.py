@@ -123,6 +123,54 @@ class ModelConfig:
     def pattern_for_layer(self, i: int) -> str:
         return self.layer_pattern[i % len(self.layer_pattern)]
 
+    def serving_gate_report(self) -> Optional[str]:
+        """Why this config cannot serve chunked/paged — or None if it can.
+
+        The continuous engine's retention-policy layer covers per-layer
+        GQA attention with a retention rule: 'G' layers retire behind
+        the clustered coverage frontier (FrontierRetention) or a block
+        quota (QuotaRetention), and 'L' layers retire behind their own
+        sliding window (WindowRetention).  Anything else — recurrent /
+        SSM sub-layers, MLA latent caches, encoder–decoder cross
+        attention, modality frontends — has no retention policy yet.
+        The report names each offending layer and its attention kind so
+        the validation error says *what* to fix, not just 'unsupported'.
+        """
+        problems = []
+        if self.is_encdec:
+            problems.append("encoder-decoder cross-attention "
+                            f"(enc_layers={self.enc_layers}) has no "
+                            "retention policy")
+        if self.attn_kind == "mla":
+            problems.append("attn_kind 'mla' caches latent KV, which no "
+                            "retention policy covers")
+        if self.n_frontend_tokens:
+            problems.append(f"modality frontend ({self.n_frontend_tokens} "
+                            "prepended tokens) breaks position-0 admission")
+        kind_names = {"G": "global attention", "L": "local attention",
+                      "R": "RG-LRU recurrence", "M": "Mamba2 SSD"}
+        bad = {}
+        for i in range(self.n_layers):
+            kind = self.pattern_for_layer(i)
+            if kind == "G":
+                continue
+            if kind == "L" and self.sliding_window:
+                continue
+            bad.setdefault(kind, []).append(i)
+        for kind, layers in sorted(bad.items()):
+            what = kind_names.get(kind, f"'{kind}'")
+            why = (" without sliding_window" if kind == "L"
+                   else " (stateful, not a KV ring)")
+            problems.append(
+                f"layer{'s' if len(layers) > 1 else ''} "
+                f"{', '.join(map(str, layers))}: {what}{why}")
+        if not problems:
+            return None
+        return (f"model '{self.name}' needs retention policies the engine "
+                "lacks: " + "; ".join(problems) +
+                " — only global-attention GQA layers ('G') and "
+                "sliding-window local layers ('L') serve chunked/paged")
+
     def validate(self) -> "ModelConfig":
         assert self.n_heads % self.n_kv_heads == 0 or self.attn_kind == "mla"
         if self.moe is not None:

@@ -730,8 +730,25 @@ def _sublayer_decode_packed(p, h, cfg: ModelConfig, cache, *, row_slot,
     return h, cache
 
 
+def _sublayer_decode_window_packed(p, h, cfg: ModelConfig, cache, *,
+                                   row_slot, row_pos, row_cidx, width,
+                                   kv_repeat):
+    """One 'L' sublayer over packed rows: WindowRetention's dense ring,
+    written in row_cidx order (attention.attn_decode_window_packed)."""
+    x = apply_norm(p["norm1"], h, cfg)
+    y, cache = attn.attn_decode_window_packed(
+        p["attn"], x, cfg, cache=cache, row_slot=row_slot, row_pos=row_pos,
+        row_cidx=row_cidx, width=width, kv_repeat=kv_repeat)
+    if cfg.post_norms:
+        y = apply_norm(p["post_attn_norm"], y, cfg)
+    h = h + y
+    h, _ = _ffn(p, h, cfg)
+    return h, cache
+
+
 def decode_step_packed(params, cfg: ModelConfig, cache, tokens, row_slot,
-                       row_pos, row_tw, block_tables, *, block_size: int,
+                       row_pos, row_tw, row_cidx, block_tables, *,
+                       block_size: int, width: int = 1,
                        kv_repeat: int = 1):
     """Packed ragged engine step for the paged clustered-KV path.
 
@@ -739,14 +756,18 @@ def decode_step_packed(params, cfg: ModelConfig, cache, tokens, row_slot,
     paying ``width`` rows of trunk compute — each *real* (slot, position)
     pair is one row: tokens (N,), row_slot (N,) physical slot, row_pos
     (N,) absolute position (−1 ⇒ padding row), row_tw (N,) the slot's
-    ring watermark t + chunk_len this step, block_tables (B, T) global
-    physical tail-block ids.  Returns (logits (N, V), cache'): every
-    row's next-token distribution — the engine reads each slot's last
-    valid row (decode slots: their one row; an admitting slot's final
-    chunk row carries its first generated token).  Decoder-only
-    all-global-attention models (the paged engine's gate); MLP / norms /
-    embeddings are position-independent, so treating rows as batch is
-    exact, and per-row outputs are bit-identical to the dense launch."""
+    ring watermark t + chunk_len this step, row_cidx (N,) the row's index
+    within its admission chunk (decode rows 0; ``width`` = static max
+    chunk length, sequencing sliding-window ring commits), block_tables
+    (B, T) global physical tail-block ids.  Returns (logits (N, V),
+    cache'): every row's next-token distribution — the engine reads each
+    slot's last valid row (decode slots: their one row; an admitting
+    slot's final chunk row carries its first generated token).
+    Decoder-only models whose layers all carry a retention policy ('G'
+    clustered/quota + 'L' sliding-window — the paged engine's gate); MLP
+    / norms / embeddings are position-independent, so treating rows as
+    batch is exact, and per-row outputs are bit-identical to the dense
+    launch."""
     tokens = jnp.where(row_pos >= 0, tokens, 0)[:, None]   # (N, 1)
     h = embed_tokens(params["embed"], tokens, cfg)
     if cfg.pos_kind == "abs_sinusoidal":
@@ -755,22 +776,27 @@ def decode_step_packed(params, cfg: ModelConfig, cache, tokens, row_slot,
         h = h + pe.astype(h.dtype)
     h = annotate(h, "batch", "seq", "d_model")
 
-    step = lambda p, hh, c: _sublayer_decode_packed(  # noqa: E731
-        p, hh, cfg, c, row_slot=row_slot, row_pos=row_pos, row_tw=row_tw,
-        block_tables=block_tables, block_size=block_size,
-        kv_repeat=kv_repeat)
+    def step(p, hh, c, kind):
+        if kind == "L":
+            return _sublayer_decode_window_packed(
+                p, hh, cfg, c, row_slot=row_slot, row_pos=row_pos,
+                row_cidx=row_cidx, width=width, kv_repeat=kv_repeat)
+        return _sublayer_decode_packed(
+            p, hh, cfg, c, row_slot=row_slot, row_pos=row_pos,
+            row_tw=row_tw, block_tables=block_tables,
+            block_size=block_size, kv_repeat=kv_repeat)
 
     new_cache = {"prefix": [], "tail": []}
     for lp, c in zip(params["prefix"], cache["prefix"]):
-        h, c2 = step(lp, h, c)
+        h, c2 = step(lp, h, c, "G")
         new_cache["prefix"].append(c2)
 
     if "scan" in params:
         def group_body(hh, xs):
             lp, cs = xs
             cs2 = dict(cs)
-            for j, _kind in enumerate(cfg.layer_pattern):
-                hh, cnew = step(lp[f"sub{j}"], hh, cs[f"sub{j}"])
+            for j, kind in enumerate(cfg.layer_pattern):
+                hh, cnew = step(lp[f"sub{j}"], hh, cs[f"sub{j}"], kind)
                 cs2[f"sub{j}"] = cnew
             return hh, cs2
 
@@ -778,8 +804,9 @@ def decode_step_packed(params, cfg: ModelConfig, cache, tokens, row_slot,
                                       (params["scan"], cache["scan"]))
         new_cache["scan"] = scan_caches
 
-    for i, lp in enumerate(params["tail"]):
-        h, c2 = step(lp, h, cache["tail"][i])
+    _, _, tail_kinds = layout(cfg)
+    for i, (lp, kind) in enumerate(zip(params["tail"], tail_kinds)):
+        h, c2 = step(lp, h, cache["tail"][i], kind)
         new_cache["tail"].append(c2)
 
     h = apply_norm(params["final_norm"], h, cfg)

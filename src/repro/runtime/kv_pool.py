@@ -34,8 +34,23 @@ Ref counts are kept per block so the prefix-sharing admission path
 ``retain``/``release`` let the prefix cache hold blocks alive with no
 table mapping at all.
 
-**Copy-on-write rule** (the sharing twin of the ``free_covered`` safety
-argument below): a ring write may only land in a block the writing slot
+**Retire-safety argument, in policy terms**: the pool never decides
+*what* is dead — a :class:`repro.core.retention.RetentionPolicy` does.
+``free_retired(slot, t, policy)`` frees a block exactly when every
+position it claims is retired under the policy: claimed position ``p``
+is dead iff ``p < policy.retire_lo(slot, t)`` (frontier mode: absorbed
+into centroids; window mode: outside the model's own attention window)
+or ``p >= t`` and the policy does not ``keep_unwritten`` (the offset was
+never written — quota mode keeps these because admission reserved them).
+This is safe for *any* policy with monotone ``retire_lo`` because a ring
+offset's claimed position only changes when the offset is written, and
+every write re-allocates through ``ensure`` first — so a freed block's
+payload can never be read again: the masks (cov / window / qpos) that
+gate the decode kernels exclude exactly the retired positions the sweep
+freed.  ``free_covered`` survives as the frontier-policy wrapper.
+
+**Copy-on-write rule** (the sharing twin of the retire-safety
+argument): a ring write may only land in a block the writing slot
 owns *exclusively* (``ref == 1``).  ``ensure`` — which every engine-side
 ring write goes through first — enforces it: when the write's target
 block has ``ref > 1``, a fresh block is allocated from the slot's shard,
@@ -107,6 +122,23 @@ def write_blocks(start: int, count: int, r: int, block_size: int) -> List[int]:
     return sorted(set((offs // block_size).tolist()))
 
 
+class _InlineFrontier:
+    """Minimal frontier-policy view for ``free_covered`` (duck-typed so
+    the pool never imports core.retention)."""
+
+    keep_unwritten = False
+
+    def __init__(self, cov: int, exclude: Sequence[int] = ()):
+        self._cov = int(cov)
+        self._excl = frozenset(int(b) for b in exclude)
+
+    def retire_lo(self, slot: int, t: int) -> int:
+        return self._cov
+
+    def protected_blocks(self, slot: int):
+        return self._excl
+
+
 class BlockPool:
     """Free-list block allocator with per-slot block tables.
 
@@ -118,7 +150,8 @@ class BlockPool:
     """
 
     def __init__(self, n_slots: int, tail: int, cfg: PagedKVConfig,
-                 n_shards: int = 1, slots_per_shard: Optional[int] = None):
+                 n_shards: int = 1, slots_per_shard: Optional[int] = None,
+                 full_tail_resident: bool = True):
         if tail % cfg.block_size != 0:
             raise ValueError(
                 f"block_size {cfg.block_size} must divide the clustered "
@@ -133,7 +166,12 @@ class BlockPool:
                                 or max(n_slots // self.n_shards, 1))
         self.pool_blocks = (cfg.pool_blocks or
                             self.slots_per_shard * self.blocks_per_slot)
-        if self.pool_blocks < self.blocks_per_slot:
+        # under FrontierRetention a slot at depth >= tail keeps its whole
+        # ring mapped, so a pool that can't hold one ring is dead on
+        # arrival; under QuotaRetention residency is only the admitted
+        # budget (<= blocks_per_slot), so a smaller pool still serves and
+        # an unservable request surfaces via the zero-progress backstop
+        if full_tail_resident and self.pool_blocks < self.blocks_per_slot:
             raise ValueError(
                 f"pool_blocks {self.pool_blocks} cannot hold even one "
                 f"slot's tail ({self.blocks_per_slot} blocks)")
@@ -299,28 +337,41 @@ class BlockPool:
         for bi in range(self.blocks_per_slot):
             self.free_block(slot, bi)
 
-    def free_covered(self, slot: int, t: int, cov: int,
-                     exclude: Sequence[int] = ()) -> int:
-        """Return blocks whose every claimed position is dead (< ``cov``
-        or not yet written) to the pool — the compaction give-back.  Safe
-        because a claim only changes when its offset is written, and every
-        write re-allocates through ``ensure`` first.
+    def free_retired(self, slot: int, t: int, policy) -> int:
+        """Return blocks whose every claimed position is retired under
+        ``policy`` (see the module docstring's retire-safety argument).
 
-        ``exclude``: ring blocks to keep even if dead — the pool-pressure
-        sweep passes each slot's *upcoming* write blocks, which may be
-        allocated-but-unwritten mid-step (their stale claims look dead);
-        freeing one would just force ``ensure`` to re-allocate it and the
-        reclaim loop to spin."""
+        A claimed position ``p`` is dead iff ``p < policy.retire_lo(slot,
+        t)``, or ``p >= t`` (allocated-but-unwritten) when the policy
+        does not ``keep_unwritten``.  Ring blocks the policy has
+        write-protected (``policy.protect_write`` — an imminent launch
+        will scatter into them) are skipped even if dead: freeing one
+        would just force ``ensure`` to re-allocate it and the reclaim
+        loop to spin."""
         freed = 0
+        lo = int(policy.retire_lo(slot, t))
+        keep_unwritten = bool(policy.keep_unwritten)
+        protected = policy.protected_blocks(slot)
         claims = ring_claims(t, self.tail)
         for bi in range(self.blocks_per_slot):
-            if self.table[slot, bi] < 0 or bi in exclude:
+            if self.table[slot, bi] < 0 or bi in protected:
                 continue
             blk = claims[bi * self.block_size:(bi + 1) * self.block_size]
-            if ((blk < cov) | (blk >= t)).all():
+            dead = blk < lo
+            if not keep_unwritten:
+                dead = dead | (blk >= t)
+            if dead.all():
                 self.free_block(slot, bi)
                 freed += 1
         return freed
+
+    def free_covered(self, slot: int, t: int, cov: int,
+                     exclude: Sequence[int] = ()) -> int:
+        """Frontier-policy wrapper around ``free_retired``: free blocks
+        whose every claimed position is ``< cov`` (absorbed into
+        centroids) or not yet written — the compaction give-back, with
+        ``exclude`` standing in for write protection."""
+        return self.free_retired(slot, t, _InlineFrontier(cov, exclude))
 
     # ------------------------------------------------------------------
     # device views

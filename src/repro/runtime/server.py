@@ -73,6 +73,7 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.core import kv_compress
+from repro.core import retention
 from repro.core.request_cluster import BatchPlan, Request, plan_batches, plan_fifo
 from repro.models import attention as attn
 from repro.models import transformer as tfm
@@ -203,54 +204,55 @@ class Server:
                     "centroids before eviction)")
         self._paged = scfg.paged
         if self._paged is not None:
-            if scfg.kv_compress is None:
-                raise ValueError(
-                    "paged serving requires kv_compress: the block pool "
-                    "replaces the dense tail ring of the CLUSTERED cache "
-                    "(exact-KV serving has no coverage frontier to return "
-                    "blocks against)")
             if scfg.engine != "continuous":
                 raise ValueError("paged serving requires the continuous "
                                  "engine")
-            if scfg.kv_compress.keep_recent % self._paged.block_size:
+            if scfg.kv_compress is not None:
+                if scfg.kv_compress.keep_recent % self._paged.block_size:
+                    raise ValueError(
+                        f"block_size {self._paged.block_size} must divide "
+                        f"keep_recent {scfg.kv_compress.keep_recent} (ring "
+                        "offsets map to whole blocks)")
+            elif scfg.max_seq % self._paged.block_size:
                 raise ValueError(
                     f"block_size {self._paged.block_size} must divide "
-                    f"keep_recent {scfg.kv_compress.keep_recent} (ring "
-                    "offsets map to whole blocks)")
-            if (cfg.is_encdec or cfg.attn_kind == "mla"
-                    or set(cfg.layer_pattern) - set("G")
-                    or cfg.n_frontend_tokens):
-                raise ValueError(
-                    "paged serving drives decoder-only global-attention "
-                    "models (all-'G' layer pattern, GQA): the packed "
-                    "ragged launch has no per-row recurrent/MLA/window "
-                    "state path")
+                    f"max_seq {scfg.max_seq}: paged serving without "
+                    "kv_compress is exact-KV under QuotaRetention — the "
+                    "full sequence is backed by whole blocks reserved as "
+                    "a per-slot budget at admission")
+            report = cfg.serving_gate_report()
+            if report is not None:
+                raise ValueError("paged serving: " + report)
+        # paged without kv_compress = exact-KV serving under a block
+        # quota (core/retention.QuotaRetention): the cache keeps the
+        # clustered LAYOUT (one permanently-dead centroid, counts == 0 ⇒
+        # masked) with a full-depth tail ring, cov pinned at 0 so every
+        # position stays exact, and blocks retire only at request exit
+        self._kv_layout = scfg.kv_compress
+        if self._paged is not None and scfg.kv_compress is None:
+            self._kv_layout = kv_compress.KVCompressConfig(
+                n_clusters=1, keep_recent=scfg.max_seq, refresh_every=0)
         self._pshare = scfg.prefix_share
         if self._pshare is not None:
-            if self._paged is None or not scfg.prefill_chunk:
+            if (self._paged is None or not scfg.prefill_chunk
+                    or scfg.kv_compress is None
+                    or set(cfg.layer_pattern) - set("G")):
                 raise ValueError(
-                    "prefix_share requires the paged engine with chunked "
-                    "prefill (paged= + prefill_chunk=): block-granular "
-                    "sharing needs the block pool's ref counts, and "
-                    "prefix-pure registration points only exist on the "
-                    "chunked admission schedule")
+                    "prefix_share requires the paged clustered engine "
+                    "with chunked prefill and an all-'G' layer pattern "
+                    "(kv_compress= + paged= + prefill_chunk=): "
+                    "block-granular sharing needs the block pool's ref "
+                    "counts, snapshots restore only FrontierRetention "
+                    "(clustered) slot state, and prefix-pure registration "
+                    "points only exist on the chunked admission schedule")
         self._chunk = scfg.prefill_chunk
         if self._chunk:
             if scfg.engine != "continuous":
                 raise ValueError("chunked prefill requires the continuous "
                                  "engine")
-            if (cfg.is_encdec or cfg.attn_kind == "mla"
-                    or set(cfg.layer_pattern) - set("G")
-                    or cfg.n_frontend_tokens):
-                raise ValueError(
-                    "chunked prefill serves decoder-only global-attention "
-                    "models (all-'G' layer pattern, GQA): recurrent/MLA/"
-                    "enc-dec state cannot absorb a chunk in one mixed "
-                    "step, and a sliding-window ring would lose in-window "
-                    "entries to the chunk's multi-row write (the "
-                    "clustered ring is safe only because absorb_chunk "
-                    "moves the coverage frontier past the overwritten "
-                    "positions first)")
+            report = cfg.serving_gate_report()
+            if report is not None:
+                raise ValueError("chunked prefill: " + report)
             if (scfg.kv_compress is not None
                     and self._chunk > scfg.kv_compress.keep_recent):
                 raise ValueError(
@@ -330,11 +332,11 @@ class Server:
         if self._paged is not None:
             blk = self._paged.block_size
 
-            def _packed_fn(c, tk, rs, rp, rtw, bt):
+            def _packed_fn(c, tk, rs, rp, rtw, rcidx, bt, width):
                 with _ctx():
                     logits, c2 = tfm.decode_step_packed(
-                        self.params, cfg, c, tk, rs, rp, rtw, bt,
-                        block_size=blk)
+                        self.params, cfg, c, tk, rs, rp, rtw, rcidx, bt,
+                        block_size=blk, width=width)
                     return logits, self._constrain(c2)
 
             def _write_slot_paged_fn(dst, src, j, bt_row):
@@ -366,7 +368,11 @@ class Server:
                 with _ctx():
                     return self._constrain(self._cow_impl(c, src, dst))
 
-            self._decode_packed = jax.jit(_packed_fn, donate_argnums=(0,))
+            # ``width`` (max chunk index + 1, sequencing sliding-window
+            # ring commits) is static: exactly two traces — the mixed
+            # shape (width = prefill_chunk) and pure decode (width = 1)
+            self._decode_packed = jax.jit(_packed_fn, donate_argnums=(0,),
+                                          static_argnums=(7,))
             self._write_slot_paged = jax.jit(_write_slot_paged_fn,
                                              donate_argnums=(0,))
             self._absorb_paged = jax.jit(_absorb_paged_fn,
@@ -415,6 +421,11 @@ class Server:
                 "continuous engine serves decoder-only models")
         t0_serve = time.perf_counter()
         ccfg = scfg.kv_compress
+        # the cache LAYOUT (clustered leaves + tail ring geometry) is
+        # distinct from the retention policy served on top of it: ccfg ⇒
+        # FrontierRetention, paged-sans-ccfg ⇒ QuotaRetention over the
+        # same leaf shapes with a full-depth ring
+        layout = self._kv_layout
         chunk = self._chunk
         n = scfg.batch_size
         plan = self._plan(requests)
@@ -446,17 +457,18 @@ class Server:
         pool = None
         pcache = None
         if paged is not None:
-            pool = kv_pool.BlockPool(n, ccfg.keep_recent, paged,
+            pool = kv_pool.BlockPool(n, layout.keep_recent, paged,
                                      n_shards=max(shards, 1),
-                                     slots_per_shard=per_shard)
+                                     slots_per_shard=per_shard,
+                                     full_tail_resident=ccfg is not None)
             if self._pshare is not None:
                 pcache = prefix_mod.PrefixCache(self._pshare,
                                                 max(shards, 1), pool)
         cache = tfm.init_cache(
             cfg, n, scfg.max_seq,
-            kv_mode="clustered" if ccfg else "exact",
-            kv_clusters=ccfg.n_clusters if ccfg else 512,
-            kv_tail=ccfg.keep_recent if ccfg else 256,
+            kv_mode="clustered" if layout else "exact",
+            kv_clusters=layout.n_clusters if layout else 512,
+            kv_tail=layout.keep_recent if layout else 256,
             kv_pool_blocks=pool.n_blocks if pool else 0,
             kv_block_size=paged.block_size if paged else 0)
         if self._rules is not None:
@@ -470,12 +482,26 @@ class Server:
         active = np.zeros(n, bool)        # decoding
         admitting = np.zeros(n, bool)     # chunked prefill in flight
         fed = np.zeros(n, np.int32)       # prompt tokens streamed so far
-        cov_h = np.zeros(n, np.int32)     # host mirror of every slot's
-                                          # coverage frontier (drives the
-                                          # paged block give-back + live-
-                                          # token stats; kept in lockstep
-                                          # with the device cov by
-                                          # replaying the same formulas)
+        # retention policies — WHAT each layer's cache retains, decoupled
+        # from where the bytes live (core/retention.py):
+        #   fr     'G' layers, clustered: retire behind the coverage
+        #          frontier (owns the host cov mirror, kept in lockstep
+        #          with the device cov by replaying the same formulas)
+        #   quota  'G' layers, exact paged: retire nothing mid-flight;
+        #          a per-slot block budget reserved at admission
+        #   wr     'L' layers: retire behind the sliding window (virtual
+        #          — the dense ring overwrite reclaims storage — but it
+        #          drives the kv_retired_window accounting)
+        fr = (retention.FrontierRetention(n, ccfg)
+              if ccfg is not None else None)
+        quota = (retention.QuotaRetention(paged.block_size,
+                                          pool.blocks_per_slot)
+                 if pool is not None and ccfg is None else None)
+        wr = (retention.WindowRetention(cfg.sliding_window, n)
+              if "L" in cfg.layer_pattern and cfg.sliding_window else None)
+        sweep_policy = fr if fr is not None else quota
+        cov_of = fr.frontier if fr is not None else (lambda j: 0)
+        kv_retired = {"frontier": 0, "window": 0, "quota": 0}
         slot_uid = [-1] * n
         prompt_np: Dict[int, np.ndarray] = {}
         toks: Dict[int, List[int]] = {}
@@ -493,7 +519,7 @@ class Server:
         # refresh after at most ``refresh`` of its own tokens)
         since_tok = np.zeros(n, np.int32)
         dec_s = 0.0
-        R = ccfg.keep_recent if ccfg else 0
+        R = layout.keep_recent if layout else 0
         shard_busy_steps = np.zeros(max(shards, 1), np.int64)
         shard_steps = 0
         # packed-launch accounting: real (slot, position) pairs fed vs
@@ -509,7 +535,7 @@ class Server:
         # prefix sharing: peak count of extra logical block mappings —
         # blocks-worth of tail KV that sharing avoided materializing
         kv_shared_peak = 0
-        tail_bpt = self._tail_bytes_per_token(cache) if ccfg else 0
+        tail_bpt = self._tail_bytes_per_token(cache) if layout else 0
 
         def resize_to(nb):
             nonlocal cache, bucket
@@ -540,13 +566,16 @@ class Server:
             return occ
 
         def sweep_covered(s):
-            """Give back every block shard ``s``'s host frontier already
-            covers (idempotent: absorb/compaction normally do this the
-            moment ``cov`` advances, so a sweep only recovers blocks
-            under pool pressure).  Each slot's UPCOMING write blocks are
-            excluded — mid-step they may be allocated but not yet
-            written (stale claims look dead), and freeing one would only
-            make ``ensure`` re-allocate it and the reclaim loop spin."""
+            """Give back every block shard ``s``'s retention policy has
+            already retired (idempotent: under FrontierRetention,
+            absorb/compaction normally do this the moment ``cov``
+            advances, so a sweep only recovers blocks under pool
+            pressure; under QuotaRetention nothing retires mid-flight and
+            the sweep is a no-op by construction).  Each slot's UPCOMING
+            write blocks are protected — mid-step they may be allocated
+            but not yet written (stale claims look dead), and freeing one
+            would only make ``ensure`` re-allocate it and the reclaim
+            loop spin."""
             freed = 0
             for j in range(n):
                 if shard_of(j) != s:
@@ -554,15 +583,17 @@ class Server:
                 if admitting[j]:
                     plen = len(prompt_np[slot_uid[j]])
                     cl = int(min(chunk, plen - fed[j])) if chunk else 0
-                    excl = kv_pool.write_blocks(int(fed[j]), max(cl, 1), R,
-                                                paged.block_size)
-                    freed += pool.free_covered(j, int(fed[j]),
-                                               int(cov_h[j]), excl)
+                    sweep_policy.protect_write(j, kv_pool.write_blocks(
+                        int(fed[j]), max(cl, 1), R, paged.block_size))
+                    freed += pool.free_retired(j, int(fed[j]),
+                                               sweep_policy)
+                    sweep_policy.clear_protection(j)
                 elif active[j]:
-                    excl = kv_pool.write_blocks(int(pos[j]), 1, R,
-                                                paged.block_size)
-                    freed += pool.free_covered(j, int(pos[j]),
-                                               int(cov_h[j]), excl)
+                    sweep_policy.protect_write(j, kv_pool.write_blocks(
+                        int(pos[j]), 1, R, paged.block_size))
+                    freed += pool.free_retired(j, int(pos[j]),
+                                               sweep_policy)
+                    sweep_policy.clear_protection(j)
             return freed
 
         def reclaim_all():
@@ -635,17 +666,30 @@ class Server:
                 d = dig_by_uid[uid] = pcache.prefix_digests(p, chunk)
             return d
 
-        def start_admission(j, uid):
+        def start_admission(j, uid) -> bool:
             nonlocal cache
             p = np.asarray(prompts[uid], np.int32)[-scfg.max_seq:]
             prompt_np[uid] = p
+            if pool is not None:
+                pool.free_slot(j)   # recycle the previous occupant's blocks
+            if quota is not None:
+                # QuotaRetention admission contract: reserve the whole
+                # block budget up front — admitted ⇒ completable (nothing
+                # retires mid-flight under an exact-KV policy, so a
+                # mid-decode shortage could only deadlock) — and defer
+                # the request back to the queue on shortage
+                if not try_ensure(j, range(quota.admit_blocks(
+                        len(p), by_uid[uid].max_new_tokens)), []):
+                    pool.free_slot(j)
+                    return False
             ensure_row(j)
             admitting[j] = True
             fed[j] = 0
-            cov_h[j] = 0
+            if fr is not None:
+                fr.set_frontier(j, 0)
+            if wr is not None:
+                wr.on_slot_free(j)
             slot_uid[j] = uid
-            if pool is not None:
-                pool.free_slot(j)   # recycle the previous occupant's blocks
             hit = (pcache.lookup(shard_of(j), p, chunk,
                                  digests=prefix_digests(uid))
                    if pcache is not None else None)
@@ -660,35 +704,41 @@ class Server:
                 cache = self._restore_slot_state(cache, hit.snap,
                                                  jnp.int32(phys(j)))
                 fed[j] = hit.fed
-                cov_h[j] = hit.cov
-            elif ccfg is not None:
+                fr.set_frontier(j, hit.cov)
+            elif layout is not None:
                 # the slot's previous occupant left stale centroids; its
                 # ring entries are hidden by the position mask, but stale
                 # counts would unmask stale centroids (on a prefix hit
                 # the restore overwrites all of this state instead)
                 cache = self._reset_slot(cache, jnp.int32(phys(j)))
+            return True
 
         def admit_blocking(j, uid) -> bool:
             nonlocal cache, pad_toks, useful_toks
             r = by_uid[uid]
             p = np.asarray(prompts[uid], np.int32)[-scfg.max_seq:]
             plen = len(p)
-            cov0 = (int(np.clip(plen - R + ccfg.refresh, 0, plen))
-                    if ccfg is not None else 0)
+            cov0 = fr.target(plen) if fr is not None else 0
             if pool is not None and r.max_new_tokens > 1:
                 # allocation on admission — BEFORE the prefill compute,
                 # so an exhausted pool defers the request back to the
-                # queue (retried after the next compaction give-back)
-                # instead of wasting a prefill or killing the batch.
-                # Only the blocks holding live (uncovered) prompt
-                # positions are claimed; centroid-covered offsets stay
-                # unmapped and the scatter drops them
+                # queue (retried after the next give-back) instead of
+                # wasting a prefill or killing the batch.  Under
+                # FrontierRetention only the blocks holding live
+                # (uncovered) prompt positions are claimed —
+                # centroid-covered offsets stay unmapped and the scatter
+                # drops them; under QuotaRetention the request's whole
+                # block budget is reserved (admitted ⇒ completable:
+                # nothing retires mid-flight)
                 pool.free_slot(j)
                 # a freshly freed slot has no shared mappings, so no COW
                 # pairs can arise here (blocking admission and prefix
                 # sharing are mutually exclusive by validation)
-                if not try_ensure(j, kv_pool.live_blocks(
-                        plen, cov0, R, paged.block_size), []):
+                need = (range(quota.admit_blocks(plen, r.max_new_tokens))
+                        if quota is not None else
+                        kv_pool.live_blocks(plen, cov0, R,
+                                            paged.block_size))
+                if not try_ensure(j, need, []):
                     pool.free_slot(j)
                     return False
             bkt = min(scfg.max_seq,
@@ -709,8 +759,8 @@ class Server:
                 if pool is not None:
                     pool.free_slot(j)   # done at prefill; slot stays free
                 return True
-            if ccfg is not None:
-                c1 = self._clusterize(c1, cache, plen, ccfg)
+            if layout is not None:
+                c1 = self._clusterize(c1, cache, plen, layout)
             if self._rules is not None:
                 # admission placement: kv heads shard over the model axis
                 # (admission_spec) instead of the old replicate-everything
@@ -719,7 +769,12 @@ class Server:
                 # path removes the B=1 cache entirely
                 c1 = place_admission(c1, self._rules)
             ensure_row(j)
-            cov_h[j] = cov0
+            if fr is not None:
+                fr.set_frontier(j, cov0)
+                kv_retired["frontier"] += cov0
+            if wr is not None:
+                wr.on_slot_free(j)
+                kv_retired["window"] += wr.advance(j, plen)
             if pool is not None:
                 bt_row = jnp.asarray(pool.row_for_write(j))
                 cache = self._write_slot_paged(cache, c1, jnp.int32(phys(j)),
@@ -764,8 +819,10 @@ class Server:
                     break
                 j = min(cands)[3]
                 if chunk:
-                    qi += 1
-                    start_admission(j, uid)
+                    if start_admission(j, uid):
+                        qi += 1
+                    else:
+                        break   # pool-deferred: retry after a give-back
                 elif admit_blocking(j, uid):
                     qi += 1
                 else:
@@ -814,20 +871,23 @@ class Server:
                     plen = len(prompt_np[slot_uid[j]])
                     cl = int(min(chunk, plen - fed[j]))
                     step_chunks[int(j)] = cl
-                    if ccfg is not None and fed[j] + cl - cov_h[j] > R:
+                    if (fr is not None
+                            and fed[j] + cl - fr.frontier(j) > R):
                         target = int(np.clip(
                             fed[j] + cl - R + ccfg.refresh, 0, fed[j]))
+                        kv_retired["frontier"] += target - fr.frontier(j)
                         if pool is not None:
                             cache = self._absorb_paged(
                                 cache, jnp.int32(phys(j)),
                                 jnp.int32(fed[j]), jnp.int32(target),
                                 jnp.asarray(pool.row_for_read(j)))
-                            pool.free_covered(int(j), int(fed[j]), target)
+                            fr.set_frontier(int(j), target)
+                            pool.free_retired(int(j), int(fed[j]), fr)
                         else:
                             cache = self._absorb(cache, jnp.int32(phys(j)),
                                                  jnp.int32(fed[j]),
                                                  jnp.int32(target))
-                        cov_h[j] = target
+                            fr.set_frontier(int(j), target)
                         n_absorbs += 1
 
             # ---- build the launch -----------------------------------------
@@ -866,6 +926,7 @@ class Server:
                 if cow_pairs:
                     apply_cow(cow_pairs)
                 mixed = bool(step_chunks)
+                width = chunk if mixed else 1
                 real_rows = (int(active.sum()) - len(stalled_decode)
                              + sum(step_chunks.values()))
                 if real_rows == 0:
@@ -892,10 +953,11 @@ class Server:
                         for i in range(cl):
                             rows_by_shard[s].append(
                                 (j, int(p[fed[j] + i]), int(fed[j]) + i,
-                                 int(fed[j]) + cl))
+                                 int(fed[j]) + cl, i))
                     elif active[j] and j not in stalled_decode:
                         rows_by_shard[s].append(
-                            (j, int(cur[j]), int(pos[j]), int(pos[j]) + 1))
+                            (j, int(cur[j]), int(pos[j]), int(pos[j]) + 1,
+                             0))
                 row_bucket = _pow2ceil(
                     max(max(len(rs) for rs in rows_by_shard), 1))
                 np_rows = max(shards, 1) * row_bucket
@@ -903,6 +965,10 @@ class Server:
                 rslot = np.zeros(np_rows, np.int32)
                 rpos = np.full(np_rows, -1, np.int32)
                 rtw = np.zeros(np_rows, np.int32)
+                # each row's index within its admission chunk (decode and
+                # padding rows 0) — sequences sliding-window ring commits
+                # in the 'L' sublayer's width-step loop
+                rcidx = np.zeros(np_rows, np.int32)
                 last_row: Dict[int, int] = {}
                 for s, rs in enumerate(rows_by_shard):
                     base = s * row_bucket
@@ -911,17 +977,19 @@ class Server:
                     # gathers stay shard-local; their qpos1 of 0 masks
                     # everything
                     rslot[base:base + row_bucket] = s * bucket
-                    for i, (j, tk, p_, tw_) in enumerate(rs):
+                    for i, (j, tk, p_, tw_, ci) in enumerate(rs):
                         tokp[base + i] = tk
                         rslot[base + i] = phys(j)
                         rpos[base + i] = p_
                         rtw[base + i] = tw_
+                        rcidx[base + i] = ci
                         last_row[j] = base + i
                 bt_dev = bt_device()
                 t0 = time.perf_counter()
                 logits, cache = self._decode_packed(
                     cache, jnp.asarray(tokp), jnp.asarray(rslot),
-                    jnp.asarray(rpos), jnp.asarray(rtw), bt_dev)
+                    jnp.asarray(rpos), jnp.asarray(rtw),
+                    jnp.asarray(rcidx), bt_dev, width)
                 nxt = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
                 nxt_of = lambda jj: nxt[last_row[jj]]      # noqa: E731
                 # launch_rows_frac / launch_bucket_mean stay SLOT
@@ -975,14 +1043,14 @@ class Server:
                 for j in range(n):
                     if active[j] or admitting[j]:
                         shard_busy_steps[shard_of(j)] += 1
-            if ccfg is not None:
+            if layout is not None:
                 live = 0
                 for j in range(n):
                     if admitting[j]:
                         live += min(int(fed[j]) + step_chunks.get(int(j), 0)
-                                    - int(cov_h[j]), R)
+                                    - cov_of(j), R)
                     elif active[j]:
-                        live += min(int(pos[j]) + 1 - int(cov_h[j]), R)
+                        live += min(int(pos[j]) + 1 - cov_of(j), R)
                 # physical blocks only: a block mapped by several slots
                 # (prefix sharing) counts once — the duplicate-mapping
                 # surplus is tracked separately as the sharing saving
@@ -1006,6 +1074,8 @@ class Server:
                         continue        # pool-stalled this step
                     cl = step_chunks[j]
                     fed[j] += cl
+                    if wr is not None:
+                        kv_retired["window"] += wr.advance(j, int(fed[j]))
                     plen = len(prompt_np[uid])
                     useful_toks += cl
                     if fed[j] < plen:
@@ -1020,7 +1090,7 @@ class Server:
                             blocks = {
                                 bi: int(pool.table[j, bi])
                                 for bi in kv_pool.live_blocks(
-                                    int(fed[j]), int(cov_h[j]), R,
+                                    int(fed[j]), cov_of(j), R,
                                     paged.block_size)
                                 if pool.table[j, bi] >= 0}
                             snap = self._snap_slot(cache, jnp.int32(pj))
@@ -1028,26 +1098,28 @@ class Server:
                                 snap = place_prefix_snapshot(
                                     snap, self._rules)
                             pcache.register(shard_of(j), prompt_np[uid],
-                                            int(fed[j]), int(cov_h[j]),
+                                            int(fed[j]), cov_of(j),
                                             blocks, snap)
                         continue
                     # final chunk landed: its last row's logits are the
                     # request's first generated token
-                    if ccfg is not None:
-                        target_end = int(np.clip(plen - R + ccfg.refresh,
-                                                 0, plen))
-                        if cov_h[j] < target_end:
+                    if fr is not None:
+                        target_end = fr.target(plen)
+                        if fr.frontier(j) < target_end:
+                            kv_retired["frontier"] += (target_end
+                                                       - fr.frontier(j))
                             if pool is not None:
                                 cache = self._absorb_paged(
                                     cache, jnp.int32(pj), jnp.int32(plen),
                                     jnp.int32(target_end),
                                     jnp.asarray(pool.row_for_read(j)))
-                                pool.free_covered(j, plen, target_end)
+                                fr.set_frontier(j, target_end)
+                                pool.free_retired(j, plen, fr)
                             else:
                                 cache = self._absorb(cache, jnp.int32(pj),
                                                      jnp.int32(plen),
                                                      jnp.int32(target_end))
-                            cov_h[j] = target_end
+                                fr.set_frontier(j, target_end)
                             n_absorbs += 1
                     first = int(nxt_of(j))
                     toks[uid] = [first]
@@ -1057,6 +1129,10 @@ class Server:
                     if by_uid[uid].max_new_tokens <= 1:
                         slot_uid[j] = -1
                         if pool is not None:
+                            if quota is not None:
+                                kv_retired["quota"] += (
+                                    int((pool.table[j] >= 0).sum())
+                                    * paged.block_size)
                             pool.free_slot(j)   # recycling on early exit
                     else:
                         active[j] = True
@@ -1067,11 +1143,19 @@ class Server:
                     toks[uid].append(int(nxt_of(j)))
                     token_t[uid].append(now)
                     pos[j] += 1
+                    if wr is not None:
+                        kv_retired["window"] += wr.advance(j, int(pos[j]))
                     cur[j] = nxt_of(j)
                     if len(toks[uid]) >= by_uid[uid].max_new_tokens:
                         active[j] = False
                         since_tok[j] = 0
                         if pool is not None:
+                            if quota is not None:
+                                # an exact-KV slot retires its whole
+                                # footprint in one go at request exit
+                                kv_retired["quota"] += (
+                                    int((pool.table[j] >= 0).sum())
+                                    * paged.block_size)
                             pool.free_slot(j)   # recycling on early exit
 
             # ---- compaction: per-slot cadence -----------------------------
@@ -1102,15 +1186,14 @@ class Server:
                         # back on their mesh layout before the next step
                         cache = shard_cache(cache, self._rules)
                 # host frontier mirror (recompact_clustered's formula) —
-                # compaction is when the paged engine returns covered
+                # compaction is when the paged engine returns retired
                 # blocks to the pool
                 for j in due:
-                    newc = max(int(cov_h[j]),
-                               int(np.clip(pos[j] - R + ccfg.refresh,
-                                           0, pos[j])))
-                    cov_h[j] = newc
+                    newc = max(fr.frontier(j), fr.target(int(pos[j])))
+                    kv_retired["frontier"] += newc - fr.frontier(j)
+                    fr.set_frontier(j, newc)
                     if pool is not None:
-                        pool.free_covered(j, int(pos[j]), newc)
+                        pool.free_retired(j, int(pos[j]), fr)
                     since_tok[j] = 0
                 n_compacts += 1
 
@@ -1153,8 +1236,18 @@ class Server:
             "prefill_chunks": float(n_chunks),
             "kv_absorbs": float(n_absorbs),
             "kv_compactions": float(n_compacts),
+            # positions each retention policy retired this serve —
+            # FrontierRetention counts coverage-frontier advancement
+            # (absorbs + compactions + admission clusterize, dense and
+            # paged alike), WindowRetention positions that aged out of
+            # 'L' layers' sliding windows, QuotaRetention block-backed
+            # positions released at request exit.  Always present so
+            # benchmark schemas stay stable across engine modes
+            "kv_retired_frontier": float(kv_retired["frontier"]),
+            "kv_retired_window": float(kv_retired["window"]),
+            "kv_retired_quota": float(kv_retired["quota"]),
         }
-        if ccfg is not None:
+        if layout is not None:
             # KV-allocation picture, comparable across paged and dense:
             # dense "allocates" every launched slot's full tail ring
             self.last_stats.update({
@@ -1533,6 +1626,15 @@ class Server:
             # compaction, which may be up to ``refresh`` steps away —
             # longer prompts must build centroids at admission
             if plen <= R - ccfg.refresh:
+                if k.shape[1] < R:
+                    # quota layouts size the ring at max_seq; a prefill
+                    # cache shorter than that (bucketed prompt) zero-pads
+                    # up — the extra offsets sit outside [0, plen) and
+                    # stay masked until decode writes them
+                    pad = [(0, 0)] * k.ndim
+                    pad[1] = (0, R - k.shape[1])
+                    k = jnp.pad(k, pad)
+                    v = jnp.pad(v, pad)
                 dt = k.dtype
                 h, dh = k.shape[2], k.shape[3]
                 out = {

@@ -267,6 +267,16 @@ def cache_spec(path: str, shape: Sequence[int], rules: Rules) -> P:
     shard's block-id range, so the pool shards over ``data`` exactly like
     the slots it backs (same for the scan-stacked ``(L, n_blocks, …)``
     form via the layer-dim shift).
+
+    Retention-policy state (core/retention.py) needs no rules of its
+    own: the device ``cov`` leaf FrontierRetention mirrors is batch-only
+    (slot per data shard, like every per-slot scalar here), sliding-
+    window 'L' rings are ordinary dense ``k``/``v`` ring leaves (window-
+    sized, never pool-backed) that shard via ``_CACHE_HEAD_AXIS``, the
+    per-row ``wlo`` window floors ship with the launch over ``data``
+    like ``cov`` (kernels' shard_map specs), and WindowRetention /
+    QuotaRetention bookkeeping is host-side numpy that never touches the
+    mesh.
     """
     parts = path.split("/")
     name = parts[-1]

@@ -216,6 +216,50 @@ def test_paged_kernel_bit_identical_to_dense():
                                       err_msg=f"row ({b},{i})")
 
 
+def test_paged_kernel_window_floor_masks_like_cov():
+    """The per-row retention window floor ``wlo`` (WindowRetention's
+    ``t - window``) must gate ring scoring exactly like the coverage
+    frontier — the kernel ANDs ``pos >= cov`` with ``pos >= wlo``, so a
+    launch with (cov, wlo) is bit-identical to one with
+    (max(cov, wlo), 0), and omitting ``wlo`` reproduces the pre-policy
+    frontier-only masking bit-exactly."""
+    from repro.kernels.paged_clustered_decode import (
+        paged_clustered_decode_pallas)
+    rng = np.random.default_rng(11)
+    B, C, R, hq, hkv, dh = 3, 4, 16, 4, 2, 16
+    bs = 4
+    T = R // bs
+    k_cents = jnp.asarray(rng.normal(size=(B, C, hkv, dh)), jnp.float32)
+    v_cents = jnp.asarray(rng.normal(size=(B, C, hkv, dh)), jnp.float32)
+    counts = jnp.asarray(rng.uniform(0, 3, size=(B, C, hkv)), jnp.float32)
+    k_tail = jnp.asarray(rng.normal(size=(B, R, hkv, dh)), jnp.float32)
+    v_tail = jnp.asarray(rng.normal(size=(B, R, hkv, dh)), jnp.float32)
+    k_pool = k_tail.reshape(B * T, bs, hkv, dh)
+    v_pool = v_tail.reshape(B * T, bs, hkv, dh)
+    bt = jnp.arange(B * T, dtype=jnp.int32).reshape(B, T)
+    # decode rows pre/post ring wrap; window floors above AND below cov
+    t = jnp.asarray([9, 30, 21], jnp.int32)
+    cov = jnp.asarray([2, 18, 0], jnp.int32)
+    wlo = jnp.asarray([5, 22, 8], jnp.int32)
+    row_slot = jnp.arange(B, dtype=jnp.int32)
+    q = jnp.asarray(rng.normal(size=(B, hq, dh)), jnp.float32)
+    run = lambda c, w: paged_clustered_decode_pallas(  # noqa: E731
+        q, k_cents, v_cents, counts, k_pool, v_pool, row_slot, bt,
+        t + 1, t + 1, c, w, scale=dh**-0.5)
+    got = run(cov, wlo)
+    want = run(jnp.maximum(cov, wlo), jnp.zeros_like(wlo))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # the floor really engaged: every row masks more than frontier-only
+    base = run(cov, jnp.zeros_like(wlo))
+    assert (np.abs(np.asarray(got) - np.asarray(base)).max(axis=(1, 2))
+            > 0).all(), "wlo floors masked nothing"
+    # None defaults to zeros — bit-identical to the pre-policy behavior
+    none = paged_clustered_decode_pallas(
+        q, k_cents, v_cents, counts, k_pool, v_pool, row_slot, bt,
+        t + 1, t + 1, cov, scale=dh**-0.5)
+    np.testing.assert_array_equal(np.asarray(none), np.asarray(base))
+
+
 def test_int8_kv_decode_close_to_bf16():
     """int8 KV cache with per-head scales ≈ exact decode (scales set from
     observed key/value ranges)."""

@@ -523,6 +523,124 @@ class TestBlockPoolProperties:
             assert ((t + i) % R) // bsz in wb
 
 
+class TestRetentionPolicyProperties:
+    """Invariants of the retention-policy layer (core/retention.py):
+    sweeps driven by a policy may only free storage the policy marks
+    dead, WindowRetention never retires an in-window or unwritten
+    position, QuotaRetention conserves the pool (nothing freed before
+    slot exit, everything freed after), and FrontierRetention reproduces
+    the legacy ``free_covered`` sweep exactly."""
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.sampled_from([8, 16]), st.sampled_from([2, 4]),
+           st.lists(st.integers(1, 12), min_size=1, max_size=12),
+           st.integers(0, 10_000))
+    def test_window_sweep_never_frees_live_positions(self, window, bsz,
+                                                     steps, seed):
+        """Stream a slot forward through random advances, backing every
+        ring write with pool blocks and sweeping under WindowRetention
+        after each: any claim in [t - window, t) must keep its block
+        mapped, and the advance() deltas must sum to the retired total."""
+        from repro.core import retention
+        from repro.runtime import kv_pool
+        R = window                      # ring sized to the window ('L')
+        pool = kv_pool.BlockPool(1, R, kv_pool.PagedKVConfig(block_size=bsz),
+                                 full_tail_resident=False)
+        wr = retention.WindowRetention(window, 1)
+        t = 0
+        retired = 0
+        for adv in steps:
+            for b in kv_pool.write_blocks(t, adv, R, bsz):
+                pool.alloc(0, b)
+            t += adv
+            retired += wr.advance(0, t)
+            pool.free_retired(0, t, wr)
+            pool.check_invariants()
+            claims = kv_pool.ring_claims(t, R)
+            for bi in range(R // bsz):
+                blk = claims[bi * bsz:(bi + 1) * bsz]
+                in_window = ((blk >= max(0, t - window)) & (blk < t)).any()
+                if in_window:
+                    assert pool.table[0, bi] >= 0, \
+                        "sweep freed a block holding an in-window position"
+        assert retired == max(0, t - window)
+        assert wr.retire_lo(0, t) == max(0, t - window)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 200), st.integers(0, 64), st.sampled_from([2, 4]),
+           st.integers(1, 40))
+    def test_quota_conserves_pool_until_slot_exit(self, plen, max_new, bsz,
+                                                  steps):
+        """admit_blocks covers the request's full written depth (clamped
+        to the slot budget), mid-stream sweeps under QuotaRetention free
+        NOTHING (keep_unwritten reservations), and slot exit returns
+        every block: frees == allocs."""
+        from repro.core import retention
+        from repro.runtime import kv_pool
+        R = 64
+        pool = kv_pool.BlockPool(1, R, kv_pool.PagedKVConfig(block_size=bsz))
+        quota = retention.QuotaRetention(bsz, pool.blocks_per_slot)
+        need = quota.admit_blocks(plen, max_new)
+        depth = plen + max(1, max_new) - 1
+        assert 1 <= need <= pool.blocks_per_slot
+        assert need * bsz >= min(depth, R)       # budget covers the claim
+        assert (need - 1) * bsz < max(depth, 1)  # and is not padded
+        for b in range(need):
+            pool.alloc(0, b)
+        before = pool.allocated()
+        for t in range(0, min(depth, R), max(1, min(depth, R) // steps)):
+            assert pool.free_retired(0, t, quota) == 0
+            assert quota.retire_lo(0, t) == 0
+        assert pool.allocated() == before        # nothing retired mid-flight
+        pool.free_slot(0)
+        pool.check_invariants()
+        assert pool.allocated() == 0
+        assert pool.n_frees == pool.n_allocs
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 2), st.sampled_from([4, 8]),
+           st.lists(st.tuples(st.integers(0, 3), st.integers(1, 15),
+                              st.integers(0, 16), st.booleans()),
+                    min_size=1, max_size=40),
+           st.integers(0, 10_000))
+    def test_frontier_policy_matches_legacy_free_covered(self, shards, bsz,
+                                                         ops, seed):
+        """FrontierRetention sweeps must free the exact block sets the
+        pre-policy ``free_covered(cov, exclude=)`` freed — run the same
+        random stream through two pools, one per API, and compare freed
+        counts and block tables after every op."""
+        from repro.core import retention
+        from repro.runtime import kv_pool
+        rng = np.random.default_rng(seed)
+        R = 16
+        n_slots = 4 * shards
+        mk = lambda: kv_pool.BlockPool(  # noqa: E731
+            n_slots, R, kv_pool.PagedKVConfig(block_size=bsz),
+            n_shards=shards, slots_per_shard=4)
+        pool_a, pool_b = mk(), mk()
+        ccfg = kv_compress.KVCompressConfig(n_clusters=4, iters=1,
+                                            keep_recent=R, refresh_every=4)
+        fr = retention.FrontierRetention(n_slots, ccfg)
+        t_of = np.zeros(n_slots, np.int64)
+        for slot_raw, adv, back, protect in ops:
+            slot = (slot_raw * shards) % n_slots
+            for b in kv_pool.write_blocks(int(t_of[slot]), adv, R, bsz):
+                pool_a.alloc(slot, b)
+                pool_b.alloc(slot, b)
+            t_of[slot] += adv
+            t = int(t_of[slot])
+            cov = max(0, t - back)
+            excl = (kv_pool.write_blocks(t, 1, R, bsz) if protect else [])
+            fr.set_frontier(slot, cov)
+            fr.protect_write(slot, excl)
+            freed_a = pool_a.free_retired(slot, t, fr)
+            fr.clear_protection(slot)
+            freed_b = pool_b.free_covered(slot, t, cov, exclude=excl)
+            assert freed_a == freed_b
+            np.testing.assert_array_equal(pool_a.table, pool_b.table)
+            pool_a.check_invariants()
+
+
 class TestGradCompressProperties:
     @settings(max_examples=10, deadline=None)
     @given(st.integers(0, 1000))

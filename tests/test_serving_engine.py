@@ -194,12 +194,23 @@ class TestChunkedPrefill:
         assert np.mean(agree) > 0.7, agree
 
     def test_rejects_unsupported_models(self, pieces):
+        """The gate is per-layer now: sliding-window 'L' layers serve
+        chunked (WindowRetention), so rejection happens only for layers
+        with no retention policy — and the diagnostic names each
+        offending layer index and its attention kind."""
         params = pieces[0]
         import dataclasses as dc
-        gl = dc.replace(TINY, layer_pattern="GL", sliding_window=8)
+        # 'L' without sliding_window has no window to retire behind
+        gl = dc.replace(TINY, layer_pattern="GL")
+        with pytest.raises(ValueError, match="without sliding_window"):
+            Server(gl, ServerConfig(prefill_chunk=8), params)
+        # recurrent sub-layers carry state, not a KV ring: the report
+        # must name the layer and the kind, and still state the rule
+        gr = dc.replace(TINY, layer_pattern="GR", lru_width=32)
+        with pytest.raises(ValueError, match=r"layer 1: RG-LRU recurrence"):
+            Server(gr, ServerConfig(prefill_chunk=8), params)
         with pytest.raises(ValueError, match="global-attention"):
-            Server(gl, ServerConfig(prefill_chunk=8),
-                   tfm.init_params(jax.random.PRNGKey(2), gl))
+            Server(gr, ServerConfig(prefill_chunk=8), params)
         ccfg = kv_compress.KVCompressConfig(keep_recent=8, refresh_every=4)
         with pytest.raises(ValueError, match="keep_recent"):
             Server(TINY, ServerConfig(prefill_chunk=16, kv_compress=ccfg),
@@ -369,17 +380,127 @@ class TestPagedEngine:
 
     def test_validation(self, pieces):
         params = pieces[0]
-        with pytest.raises(ValueError, match="kv_compress"):
-            Server(TINY, ServerConfig(paged=self.PG), params)
+        # paged WITHOUT kv_compress is legal now (QuotaRetention exact
+        # KV) but whole blocks must tile the full sequence depth
+        with pytest.raises(ValueError, match="max_seq"):
+            Server(TINY, ServerConfig(
+                max_seq=30, paged=PagedKVConfig(block_size=4)), params)
         with pytest.raises(ValueError, match="block_size"):
             Server(TINY, ServerConfig(
                 kv_compress=self.CCFG,
                 paged=PagedKVConfig(block_size=5)), params)
+        # per-layer gate: MLA latent caches have no retention policy
         import dataclasses as dc
-        gl = dc.replace(TINY, layer_pattern="GL", sliding_window=8)
+        mla = dc.replace(TINY, attn_kind="mla")
         with pytest.raises(ValueError, match="global-attention"):
-            Server(gl, ServerConfig(kv_compress=self.CCFG, paged=self.PG),
-                   tfm.init_params(jax.random.PRNGKey(3), gl))
+            Server(mla, ServerConfig(kv_compress=self.CCFG, paged=self.PG),
+                   params)
+
+
+GLWIN = ModelConfig(name="tiny-gl", family="dense", n_layers=2, d_model=32,
+                    n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64, vocab=64,
+                    pad_vocab_multiple=16, dtype="float32",
+                    layer_pattern="GL", sliding_window=16)
+
+
+class TestWindowedServing:
+    """Sliding-window models under the retention-policy layer: 'L' layers
+    retire behind WindowRetention while 'G' layers stay clustered behind
+    FrontierRetention — chunked admission (dense AND paged) must emit
+    greedy tokens BIT-IDENTICAL to blocking dense admission, because the
+    staged per-layer ring writes never evict an in-window entry."""
+
+    # prompts fit the tail ring (loss-free admission in both modes) but
+    # exceed the 16-token window, and budgets push positions past
+    # keep_recent so compactions advance the 'G' frontier mid-decode
+    CCFG = kv_compress.KVCompressConfig(n_clusters=4, iters=2,
+                                        keep_recent=32, refresh_every=4)
+
+    @staticmethod
+    def _stream(seed=13):
+        rng = np.random.default_rng(seed)
+        reqs = [Request(i, int(l), g) for i, (l, g) in
+                enumerate([(26, 10), (12, 6), (20, 8), (8, 5)])]
+        prompts = {r.uid: rng.integers(0, 64, size=(r.prompt_len,)).astype(
+            np.int32) for r in reqs}
+        return reqs, prompts
+
+    @pytest.fixture(scope="class")
+    def win_pieces(self):
+        params = tfm.init_params(jax.random.PRNGKey(7), GLWIN)
+        reqs, prompts = self._stream()
+        ref = Server(GLWIN, ServerConfig(batch_size=2, max_seq=64,
+                                         kv_compress=self.CCFG), params)
+        ref_out = {o.uid: o.tokens for o in ref.serve(reqs, prompts)}
+        assert ref.last_stats["kv_retired_window"] > 0
+        return params, reqs, prompts, ref_out
+
+    def test_chunked_dense_token_identical_to_blocking(self, win_pieces):
+        params, reqs, prompts, ref_out = win_pieces
+        srv = Server(GLWIN, ServerConfig(batch_size=2, max_seq=64,
+                                         kv_compress=self.CCFG,
+                                         prefill_chunk=8), params)
+        outs = srv.serve(reqs, prompts)
+        assert sorted(o.uid for o in outs) == sorted(r.uid for r in reqs)
+        for o in outs:
+            assert o.tokens == ref_out[o.uid], o.uid
+        st = srv.last_stats
+        # both policies really retired entries: windows slid past 16
+        # positions and compactions advanced the clustered frontier
+        assert st["kv_retired_window"] > 0
+        assert st["kv_retired_frontier"] > 0
+        assert st["prefill_chunks"] > 0
+
+    def test_chunked_paged_token_identical_to_blocking(self, win_pieces):
+        params, reqs, prompts, ref_out = win_pieces
+        srv = Server(GLWIN, ServerConfig(
+            batch_size=2, max_seq=64, kv_compress=self.CCFG,
+            prefill_chunk=8, paged=PagedKVConfig(block_size=4)), params)
+        outs = srv.serve(reqs, prompts)
+        for o in outs:
+            assert o.tokens == ref_out[o.uid], o.uid
+        st = srv.last_stats
+        assert st["kv_retired_window"] > 0
+        assert st["kv_retired_frontier"] > 0
+        assert st["pool_blocks_end"] == 0.0
+
+
+class TestQuotaRetention:
+    """Paged serving WITHOUT kv_compress: exact KV under QuotaRetention.
+    Admission reserves the request's whole block budget up front
+    (admitted => completable), nothing retires mid-flight, and blocks
+    return only at request exit — so an oversubscribed pool defers
+    admissions instead of raising PoolExhausted, at greedy tokens
+    identical to the dense exact engine."""
+
+    def test_exact_paged_oversubscribed_burst(self, pieces):
+        params, reqs, prompts, ref_out = pieces
+        # 8 blocks < the 13-block peak two full requests would need
+        # concurrently: the second admission must defer until the first
+        # exits, yet every request still completes with exact tokens
+        srv = Server(TINY, ServerConfig(
+            batch_size=2, max_seq=64,
+            paged=PagedKVConfig(block_size=4, pool_blocks=8)), params)
+        outs = srv.serve(reqs, prompts)
+        assert sorted(o.uid for o in outs) == sorted(r.uid for r in reqs)
+        for o in outs:
+            assert o.tokens == ref_out[o.uid], o.uid
+        st = srv.last_stats
+        assert st["kv_retired_quota"] > 0
+        assert st["kv_retired_frontier"] == 0.0   # nothing clustered
+        assert st["pool_blocks_end"] == 0.0
+        assert st["pool_occupancy_peak"] <= 1.0
+
+    def test_chunked_quota_admission(self, pieces):
+        params, reqs, prompts, ref_out = pieces
+        srv = Server(TINY, ServerConfig(
+            batch_size=2, max_seq=64, prefill_chunk=8,
+            paged=PagedKVConfig(block_size=4, pool_blocks=8)), params)
+        outs = srv.serve(reqs, prompts)
+        for o in outs:
+            assert o.tokens == ref_out[o.uid], o.uid
+        assert srv.last_stats["kv_retired_quota"] > 0
+        assert srv.last_stats["pool_blocks_end"] == 0.0
 
 
 class TestPrefixSharing:

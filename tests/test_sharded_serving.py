@@ -210,6 +210,46 @@ def test_sharded_prefix_sharing_parity():
 
 
 @pytest.mark.slow
+def test_sharded_windowed_paged_parity():
+    """Sliding-window ('GL') serving on a 2x4 mesh: 'L' layers retire
+    behind WindowRetention (dense window rings, per-row wlo mask), 'G'
+    layers stay clustered behind FrontierRetention — chunked + paged
+    mesh tokens must be bit-identical to blocking dense single-device
+    admission (the tentpole exit criterion)."""
+    run_sub(_COMMON + """
+    from repro.runtime.kv_pool import PagedKVConfig
+    import dataclasses as dc
+    glcfg = dc.replace(CFG, name="tiny-gl4", layer_pattern="GL",
+                       sliding_window=16)
+    pgl = tfm.init_params(jax.random.PRNGKey(2), glcfg)
+    # prompts fit the tail ring (loss-free clustered admission) but
+    # exceed the 16-token window; budgets push past keep_recent so
+    # compactions advance the 'G' frontier mid-decode
+    wreqs = [Request(i, int(l), g) for i, (l, g) in enumerate(
+        [(26, 10), (12, 6), (20, 8), (8, 5), (24, 7), (15, 6)])]
+    wprompts = {r.uid: rng.integers(0, 64, size=(r.prompt_len,)).astype(
+        np.int32) for r in wreqs}
+    ccfg = kv_compress.KVCompressConfig(n_clusters=4, iters=2,
+                                        keep_recent=32, refresh_every=4)
+    ref = Server(glcfg, ServerConfig(batch_size=4, max_seq=64,
+                                     kv_compress=ccfg), pgl)
+    ref_out = {o.uid: o.tokens for o in ref.serve(wreqs, wprompts)}
+    srv = Server(glcfg, ServerConfig(batch_size=4, max_seq=64,
+                                     kv_compress=ccfg, prefill_chunk=8,
+                                     paged=PagedKVConfig(block_size=4),
+                                     mesh=mesh), pgl)
+    outs = srv.serve(wreqs, wprompts)
+    assert sorted(o.uid for o in outs) == sorted(r.uid for r in wreqs)
+    for o in outs:
+        assert o.tokens == ref_out[o.uid], (o.uid, o.tokens, ref_out[o.uid])
+    st = srv.last_stats
+    assert st["kv_retired_window"] > 0 and st["kv_retired_frontier"] > 0
+    assert st["pool_blocks_end"] == 0.0
+    print("sharded windowed paged parity OK")
+    """)
+
+
+@pytest.mark.slow
 def test_indivisible_heads_fall_back_to_replication():
     """A model whose kv-head count doesn't divide the model axis must
     still serve correctly (heads replicate, slots stay data-sharded)."""
@@ -257,6 +297,11 @@ def test_cache_partition_specs_single_device():
     assert cache_spec("scan/sub0/v_tail", (2, 8, 4, 2, 16), rules) == \
         P(None, ("data",), None, ("model",), None)
     assert block_table_spec((4, 4), rules) == P(("data",), None)
+    # sliding-window 'L' rings are dense window-sized rings (never
+    # pool-backed — WindowRetention retires virtually, the ring
+    # overwrite reclaims storage) and place exactly like exact-KV rings
+    assert cache_spec("tail/1/k", (4, 16, 2, 16), rules) == \
+        P(("data",), None, ("model",), None)
     # MLA latents / SSM state: slot sharding only
     assert cache_spec("tail/0/ckv", (4, 64, 8), rules) == \
         P(("data",), None, None)
