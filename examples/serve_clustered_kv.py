@@ -191,6 +191,55 @@ def main():
           f"{stu['kv_bytes_peak_per_shard'] / 1024:.0f} KiB/shard — "
           f"faster admission keeps more requests in flight)")
 
+    # --- persistent template store (ServerConfig.template_store) ---
+    # The prefix cache above dies with its serve() call: a second burst
+    # of the same template re-pays the whole template prefill.  The
+    # template store (runtime/template_store.py) hoists the cache to the
+    # Server — entries and the pool blocks they pin survive the
+    # inter-stream drain, so a LATER serve of the same templated traffic
+    # starts warm: every admission adopts the boundary registered by the
+    # previous serve from its first engine step.  The store also
+    # clusters the live traffic online (Mettu–Plaxton-style medoid
+    # promotion over prefix digests) and steers same-cluster requests
+    # onto the shards already holding their blocks.  Two things to know:
+    # the pool needs headroom above full slot provisioning (pinned
+    # entries live in the surplus — a zero-surplus pool pressure-evicts
+    # every entry before the drain), and tokens stay bit-identical
+    # because a snapshot is only adopted under the exact config epoch +
+    # verified token match that produced it.
+    from repro.runtime.template_store import TemplateStoreConfig
+    tpl_reqs2, tpl_prompts2 = [], {}
+    for i in range(12):
+        sfx = rng.integers(0, 512, size=(int(rng.integers(4, 12)),))
+        tpl_prompts2[i] = np.concatenate([tpl, sfx]).astype(np.int32)
+        tpl_reqs2.append(Request(i, len(tpl_prompts2[i]), 8))
+    srv_t = Server(SMALL, ServerConfig(
+        batch_size=4, max_seq=256, kv_compress=ccfg, prefill_chunk=16,
+        paged=PagedKVConfig(block_size=8, pool_blocks=24),
+        template_store=TemplateStoreConfig(max_entries=2)), params)
+    srv_t.serve(tpl_reqs, tpl_prompts)        # serve #1 fills the store
+    st1 = dict(srv_t.last_stats)
+    outs_t = srv_t.serve(tpl_reqs2, tpl_prompts2)   # serve #2: warm
+    st2 = srv_t.last_stats
+    srv_ref = Server(SMALL, ServerConfig(
+        batch_size=4, max_seq=256, kv_compress=ccfg, prefill_chunk=16,
+        paged=PagedKVConfig(block_size=8, pool_blocks=24)), params)
+    outs_ref = srv_ref.serve(tpl_reqs2, tpl_prompts2)  # cold reference
+    ref_uid = {o.uid: o.tokens for o in outs_ref}
+    same_t = all(o.tokens == ref_uid[o.uid] for o in outs_t)
+    print(f"[server] template store (persistent across serves): warm "
+          f"serve TTFT p95 {st2['ttft_p95_ms']:.0f} ms vs "
+          f"{st1['ttft_p95_ms']:.0f} ms for the store-filling serve, "
+          f"{st2['prefix_hits']:.0f} warm hits reused "
+          f"{st2['prefix_tokens_reused']:.0f} prompt tokens, tokens "
+          f"{'identical' if same_t else 'DIVERGED'} vs a cold store")
+    print(f"[server] store state: {st2['template_entries']:.0f} entries "
+          f"pinning {st2['template_pinned_blocks']:.0f} blocks between "
+          f"serves ({st2['template_bytes_pinned'] / 1024:.0f} KiB), "
+          f"{st2['template_clusters']:.0f} traffic clusters, cohesion "
+          f"{st2['template_cohesion_mean']:.2f}")
+    srv_t.invalidate_templates()              # drains the pool to zero
+
     # --- sliding-window serving (RetentionPolicy opens the model zoo) ---
     # Everything above serves an all-global-attention model, where "which
     # ring positions may be dropped?" is answered by the clustered

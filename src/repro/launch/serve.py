@@ -48,6 +48,7 @@ from repro.models import transformer as tfm  # noqa: E402
 from repro.runtime.kv_pool import PagedKVConfig  # noqa: E402
 from repro.runtime.prefix_cache import PrefixShareConfig  # noqa: E402
 from repro.runtime.server import Server, ServerConfig  # noqa: E402
+from repro.runtime.template_store import TemplateStoreConfig  # noqa: E402
 
 
 def main():
@@ -84,6 +85,16 @@ def main():
                          "blocks (copy-on-write) and reuse absorbed "
                          "prompt centroids instead of re-prefilling; "
                          "requires --paged and --prefill-chunk")
+    ap.add_argument("--persist-templates", action="store_true",
+                    help="persistent cross-serve template store "
+                         "(subsumes --prefix-share): registered prefix "
+                         "boundaries and their pinned pool blocks "
+                         "survive between serve() calls, and request "
+                         "traffic is clustered online onto template "
+                         "medoids; the demo serves the queue twice to "
+                         "show the warm second serve (size the pool "
+                         "with --pool-blocks headroom or pressure "
+                         "evicts every entry before the drain)")
     ap.add_argument("--block-size", type=int, default=16,
                     help="paged: ring positions per pool block (must "
                          "divide --keep-recent)")
@@ -129,6 +140,21 @@ def main():
     reqs = [Request(i, int(l), args.max_new) for i, l in enumerate(lens)]
     prompts = {r.uid: rng.integers(0, cfg.vocab, size=(r.prompt_len,)).astype(
         np.int32) for r in reqs}
+    if args.persist_templates:
+        # a template store needs template traffic: all-distinct random
+        # prompts register boundaries that never recur, so they churn
+        # through the entry cap without ever earning a hit.  Give the
+        # long half of the queue a shared 64-token template — its
+        # boundary entries collect hits in the first serve, and the
+        # hits x tokens-reused eviction score then protects them from
+        # the one-off boundaries the short prompts keep registering.
+        tpl = rng.integers(0, cfg.vocab, size=(64,)).astype(np.int32)
+        tpl_n = sum(1 for r in reqs if r.prompt_len >= 64)
+        for r in reqs:
+            if r.prompt_len >= 64:
+                prompts[r.uid][:64] = tpl
+        print(f"[serve] template traffic: {tpl_n}/{len(reqs)} prompts "
+              f"share a 64-token template prefix")
 
     fifo = plan_fifo(reqs, args.batch_size)
     clus = plan_batches(reqs, args.batch_size)
@@ -152,12 +178,34 @@ def main():
         print(f"[serve] clustered KV: C={ccfg.n_clusters} "
               f"R={ccfg.keep_recent} refresh={ccfg.refresh_every}")
     if args.paged:
+        pool_blocks = args.pool_blocks
+        if args.persist_templates and not pool_blocks:
+            # the store pins entry blocks BETWEEN serves, so "full
+            # provisioning" (the 0 default: exactly the live rings)
+            # leaves no room for them — pool pressure would reclaim
+            # every warm entry before the second serve could adopt it.
+            # Double the ring footprint so pins live in the surplus.
+            shards = mesh.shape["data"] if mesh is not None else 1
+            per_slot = (ccfg.keep_recent + args.block_size - 1) \
+                // args.block_size
+            pool_blocks = 2 * max(args.batch_size // shards, 1) * per_slot
         paged = PagedKVConfig(block_size=args.block_size,
-                              pool_blocks=args.pool_blocks)
+                              pool_blocks=pool_blocks)
         print(f"[serve] paged KV: {args.block_size}-position blocks, "
-              f"{args.pool_blocks or 'auto'} blocks/shard")
-    pshare = None
-    if args.prefix_share:
+              f"{pool_blocks or 'auto'} blocks/shard"
+              + (" (auto-doubled for template-store headroom)"
+                 if pool_blocks != args.pool_blocks else ""))
+    pshare = tstore = None
+    if args.persist_templates:
+        # cap entries near the pool headroom: every entry pins blocks,
+        # and a store allowed to pin more than the surplus above the
+        # live rings just churns under pool pressure (0 warm hits)
+        tstore = TemplateStoreConfig(max_entries=2 * args.batch_size)
+        print("[serve] template store: persistent cross-serve prefix "
+              "boundaries + online traffic clustering"
+              + (" (subsumes --prefix-share)" if args.prefix_share
+                 else ""))
+    elif args.prefix_share:
         pshare = PrefixShareConfig()
         print("[serve] prefix sharing: block-granular prompt-prefix "
               "admission (copy-on-write)")
@@ -165,7 +213,7 @@ def main():
         batch_size=args.batch_size, max_seq=args.max_seq,
         use_clustered_batching=not args.no_clustering, mesh=mesh,
         prefill_chunk=args.prefill_chunk, kv_compress=ccfg,
-        paged=paged, prefix_share=pshare), params)
+        paged=paged, prefix_share=pshare, template_store=tstore), params)
     t0 = time.perf_counter()
     outs = srv.serve(reqs, prompts)
     dt = time.perf_counter() - t0
@@ -199,7 +247,8 @@ def main():
         print("[serve] retention: " + ", ".join(
             f"{k.removeprefix('kv_retired_')} retired {v:.0f} positions"
             for k, v in retired.items()))
-    if args.prefix_share and "prefix_hits" in st:
+    if ((args.prefix_share or args.persist_templates)
+            and "prefix_hits" in st):
         print(f"[serve] prefix sharing: {st['prefix_hits']:.0f} hits, "
               f"{st['prefix_tokens_reused']:.0f} prompt tokens reused, "
               f"{st['kv_bytes_saved'] / 1024:.1f} KiB tail KV shared "
@@ -214,6 +263,32 @@ def main():
                   f"divide the data axis — slots replicated (no slot "
                   f"sharding); pick a batch size divisible by "
                   f"{mesh.shape['data']}")
+
+    if args.persist_templates:
+        # repeat-serve demo: the store survived the drain, so re-serving
+        # the same queue adopts every registered boundary from token 0
+        ttft_cold = st.get("ttft_p95_ms", 0.0)
+        t0 = time.perf_counter()
+        outs2 = srv.serve(reqs, prompts)
+        dt2 = time.perf_counter() - t0
+        st2 = srv.last_stats
+        same = ({o.uid: o.tokens for o in outs}
+                == {o.uid: o.tokens for o in outs2})
+        print(f"[serve] warm re-serve: "
+              f"{sum(len(o.tokens) for o in outs2)} tokens in {dt2:.1f}s, "
+              f"TTFT p95 {st2.get('ttft_p95_ms', 0.0):.0f} ms "
+              f"(cold {ttft_cold:.0f} ms), "
+              f"{st2.get('prefix_hits', 0.0):.0f} store hits, "
+              f"tokens identical: {same}")
+        print(f"[serve] template store: "
+              f"{st2.get('template_entries', 0.0):.0f} entries pinning "
+              f"{st2.get('template_pinned_blocks', 0.0):.0f} blocks "
+              f"({st2.get('template_bytes_pinned', 0.0) / 1024:.1f} KiB), "
+              f"{st2.get('template_clusters', 0.0):.0f} traffic clusters, "
+              f"cohesion {st2.get('template_cohesion_mean', 0.0):.2f}")
+        srv.invalidate_templates()
+        print("[serve] invalidate_templates(): store dropped, pool "
+              "drained to zero")
 
 
 if __name__ == "__main__":

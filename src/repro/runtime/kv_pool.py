@@ -223,6 +223,13 @@ class BlockPool:
         vals = self.table[self.table >= 0]
         return int(vals.size - np.unique(vals).size)
 
+    def reset_peaks(self) -> None:
+        """Start a fresh peak-tracking window from the current live
+        occupancy — a pool persisting across serves (template store)
+        reports per-serve peaks, not a lifetime high-water mark."""
+        self.peak_blocks = self._live
+        self.peak_blocks_shard = self._live_shard.copy()
+
     def _fresh(self, slot: int) -> int:
         """Pop a free block of the slot's shard.  Lowest free id first
         (deterministic)."""

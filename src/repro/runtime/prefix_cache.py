@@ -97,6 +97,11 @@ class PrefixEntry:
                               # rows (k_cents/v_cents/counts/cov), taken
                               # and restored by the engine
     stamp: int = 0            # LRU clock
+    hits: int = 0             # times this entry was adopted
+    cluster: int = -1         # template_store traffic cluster (-1 = none)
+    in_flight: int = 0        # adoptions between lookup and restore —
+                              # a nonzero count pins the entry against
+                              # eviction (see ``adoption_done``)
 
 
 def _digest(tokens: np.ndarray) -> bytes:
@@ -155,7 +160,13 @@ class PrefixCache:
     def lookup(self, shard: int, prompt: np.ndarray, chunk: int,
                digests: Optional[List[Tuple[int, bytes]]] = None,
                ) -> Optional[PrefixEntry]:
-        """Longest verified entry matching the prompt on ``shard``."""
+        """Longest verified entry matching the prompt on ``shard``.
+
+        The returned entry is marked **in flight**: until the caller
+        declares ``adoption_done(entry)`` it cannot be evicted, so a
+        pool-pressure reclaim landing between the match and the
+        block-adopt/snapshot-restore can never release the blocks the
+        admitting slot is about to resume from."""
         m = self._maps[shard]
         for fed, dig in (digests if digests is not None
                          else self.prefix_digests(prompt, chunk)):
@@ -163,17 +174,27 @@ class PrefixCache:
             if e is not None and np.array_equal(e.tokens, prompt[:fed]):
                 self._clock += 1
                 e.stamp = self._clock
+                e.hits += 1
+                e.in_flight += 1
                 self.hits += 1
                 self.tokens_reused += fed
                 return e
         return None
+
+    def adoption_done(self, entry: PrefixEntry) -> None:
+        """Release the in-flight pin taken by ``lookup`` — the adopting
+        slot holds its own block refs (``pool.adopt``) and has restored
+        the snapshot, so the entry is evictable again."""
+        if entry.in_flight <= 0:
+            raise ValueError("adoption_done without a matching lookup")
+        entry.in_flight -= 1
 
     # ------------------------------------------------------------------
     # registration / eviction
     # ------------------------------------------------------------------
 
     def register(self, shard: int, prompt: np.ndarray, fed: int, cov: int,
-                 blocks: Dict[int, int], snap) -> bool:
+                 blocks: Dict[int, int], snap, cluster: int = -1) -> bool:
         """Register the prefix state at ``fed`` tokens.  Retains every
         listed block.  Returns False (and retains nothing) when an
         identical entry already exists.
@@ -197,9 +218,10 @@ class PrefixCache:
         self._clock += 1
         m[key] = PrefixEntry(tokens=np.array(prompt[:fed], np.int32),
                              fed=fed, cov=cov, blocks=dict(blocks),
-                             snap=snap, stamp=self._clock)
+                             snap=snap, stamp=self._clock, cluster=cluster)
         while len(m) > self.cfg.max_entries:
-            self.evict_lru(shard)
+            if not self.evict_lru(shard):
+                break   # every other entry is mid-adoption: over-stay
         return True
 
     def _drop(self, shard: int, key) -> None:
@@ -209,11 +231,15 @@ class PrefixCache:
 
     def evict_lru(self, shard: int) -> bool:
         """Release the least recently used entry's blocks (pool-pressure
-        reclaim).  Returns False when the shard map is empty."""
+        reclaim).  Entries with an adoption in flight are pinned — the
+        admitting slot has matched but not yet adopted/restored, and
+        evicting under it would hand its blocks back to the free list
+        mid-resume.  Returns False when nothing is evictable."""
         m = self._maps[shard]
-        if not m:
+        cands = [k for k, e in m.items() if e.in_flight == 0]
+        if not cands:
             return False
-        key = min(m, key=lambda k: m[k].stamp)
+        key = min(cands, key=lambda k: m[k].stamp)
         self._drop(shard, key)
         return True
 
@@ -221,7 +247,14 @@ class PrefixCache:
         return len(self._maps[shard])
 
     def clear(self) -> None:
-        """Release every entry (end of serve: the pool must drain)."""
+        """Release every entry (end of serve: the pool must drain).
+        Raises if an adoption is still in flight — by the time a serve
+        drains, every ``lookup`` has seen its ``adoption_done``."""
         for shard in range(len(self._maps)):
             for key in list(self._maps[shard]):
+                if self._maps[shard][key].in_flight:
+                    raise RuntimeError(
+                        "clear with an adoption in flight — the engine "
+                        "must finish restoring before the cache drops "
+                        "the entry under it")
                 self._drop(shard, key)

@@ -80,6 +80,7 @@ from repro.models import transformer as tfm
 from repro.models.config import ModelConfig
 from repro.runtime import kv_pool
 from repro.runtime import prefix_cache as prefix_mod
+from repro.runtime import template_store as template_mod
 from repro.sharding import (Rules, constrain_cache, default_table,
                             place_admission, place_block_tables,
                             place_prefix_snapshot, shard_cache, use_rules)
@@ -136,6 +137,19 @@ class ServerConfig:
     # paged serving while shared-prefix bursts skip most prompt chunks
     # (TTFT) and share tail blocks (KV bytes).  Requires ``paged`` +
     # ``prefill_chunk``.
+    template_store: Optional[object] = None
+    # persistent cross-serve template store (runtime/template_store.py):
+    # a TemplateStoreConfig (the server owns a private store) or a
+    # TemplateStore instance (shareable across servers; epoch stamping
+    # invalidates it whenever the model/KV config/pool it was warmed
+    # against changes).  Subsumes ``prefix_share`` — same block-adopting
+    # admission fast path, but entries and their pinned pool blocks
+    # survive between serve() calls, eviction is hit-scored instead of
+    # LRU, and incoming traffic is clustered online for steering.  The
+    # end-of-serve pool invariant becomes
+    # ``allocated() == store.pinned_blocks()`` (reported as
+    # ``pool_blocks_end == 0`` after subtracting the pins); use
+    # ``Server.invalidate_templates()`` to drain the pins explicitly.
     mesh: Optional[Mesh] = None
     # (data, model) device mesh (launch/mesh.make_serving_mesh): decode
     # slots + their KV caches partition over "data", attention heads (and
@@ -233,13 +247,24 @@ class Server:
             self._kv_layout = kv_compress.KVCompressConfig(
                 n_clusters=1, keep_recent=scfg.max_seq, refresh_every=0)
         self._pshare = scfg.prefix_share
+        self._store: Optional[template_mod.TemplateStore] = None
+        if scfg.template_store is not None:
+            if self._pshare is not None:
+                raise ValueError(
+                    "template_store subsumes prefix_share (same adopting "
+                    "admission path, persistent entries) — set only one")
+            ts = scfg.template_store
+            self._store = (ts if isinstance(ts, template_mod.TemplateStore)
+                           else template_mod.TemplateStore(ts))
+            self._pshare = self._store.share
         if self._pshare is not None:
             if (self._paged is None or not scfg.prefill_chunk
                     or scfg.kv_compress is None
                     or set(cfg.layer_pattern) - set("G")):
                 raise ValueError(
-                    "prefix_share requires the paged clustered engine "
-                    "with chunked prefill and an all-'G' layer pattern "
+                    "prefix_share/template_store requires the paged "
+                    "clustered engine with chunked prefill and an "
+                    "all-'G' layer pattern "
                     "(kv_compress= + paged= + prefill_chunk=): "
                     "block-granular sharing needs the block pool's ref "
                     "counts, snapshots restore only FrontierRetention "
@@ -277,6 +302,19 @@ class Server:
                     mesh.shape[a] for a in axes)
         self.params = params
         self.last_stats: Dict[str, float] = {}
+        # cross-serve template persistence: the pool (host tables/refs)
+        # and the device engine cache that carry the store's pinned
+        # blocks between serve() calls.  The config epoch stamps every
+        # input a registered snapshot depends on — a store rebound under
+        # a different model/KV config/geometry (or a different params
+        # object: identity is the conservative proxy for "same weights")
+        # invalidates instead of adopting stale state.
+        self._tmpl_pool: Optional[kv_pool.BlockPool] = None
+        self._tmpl_cache = None
+        self._store_epoch = (repr(cfg), repr(scfg.kv_compress),
+                             repr(scfg.paged), scfg.prefill_chunk,
+                             scfg.max_seq, scfg.batch_size,
+                             self._n_data_shards, id(self.params))
         # bucket-padded prefill is only exact for global attention (causal
         # mask + masked decode); sliding-window rings and SSM/RG-LRU state
         # absorb pad tokens, so those models admit at exact prompt length
@@ -403,6 +441,21 @@ class Server:
             return self._serve_continuous(requests, prompts)
         return self._serve_static(requests, prompts)
 
+    def invalidate_templates(self) -> None:
+        """Explicitly drop every persistent template entry, releasing
+        the pool blocks the store pinned across serves — afterwards the
+        pool is fully drained (``allocated() == 0``; there are no other
+        block holders between serves).  The warmed device cache is
+        dropped too: with no pins its template payloads are unreachable
+        and the next serve starts cold."""
+        if self._store is not None:
+            self._store.invalidate()
+        if self._tmpl_pool is not None:
+            assert self._tmpl_pool.allocated() == 0, \
+                "template pins released but pool still holds blocks"
+        self._tmpl_pool = None
+        self._tmpl_cache = None
+
     def _plan(self, requests: Sequence[Request]) -> BatchPlan:
         scfg = self.scfg
         if scfg.use_clustered_batching:
@@ -456,26 +509,54 @@ class Server:
         paged = self._paged
         pool = None
         pcache = None
+        cache = None
+        store = self._store
         if paged is not None:
-            pool = kv_pool.BlockPool(n, layout.keep_recent, paged,
-                                     n_shards=max(shards, 1),
-                                     slots_per_shard=per_shard,
-                                     full_tail_resident=ccfg is not None)
-            if self._pshare is not None:
+            if store is not None and self._tmpl_pool is not None:
+                # warm cross-serve start: the previous serve's pool and
+                # device cache carry the store's pinned template blocks.
+                # Ownership is taken eagerly (the attrs are nulled) so a
+                # serve that dies mid-flight can never leave a
+                # half-donated cache behind — the next serve comes up
+                # cold and bind() invalidates the orphaned entries.
+                pool, cache = self._tmpl_pool, self._tmpl_cache
+                self._tmpl_pool = self._tmpl_cache = None
+                pool.reset_peaks()
+            else:
+                pool = kv_pool.BlockPool(n, layout.keep_recent, paged,
+                                         n_shards=max(shards, 1),
+                                         slots_per_shard=per_shard,
+                                         full_tail_resident=ccfg is not None)
+            if store is not None:
+                # epoch-checked attach: a store warmed under any other
+                # config/model/pool is invalidated here, never adopted
+                store.bind(self._store_epoch, max(shards, 1), pool)
+                pcache = store
+            elif self._pshare is not None:
                 pcache = prefix_mod.PrefixCache(self._pshare,
                                                 max(shards, 1), pool)
-        cache = tfm.init_cache(
-            cfg, n, scfg.max_seq,
-            kv_mode="clustered" if layout else "exact",
-            kv_clusters=layout.n_clusters if layout else 512,
-            kv_tail=layout.keep_recent if layout else 256,
-            kv_pool_blocks=pool.n_blocks if pool else 0,
-            kv_block_size=paged.block_size if paged else 0)
-        if self._rules is not None:
-            # slot state becomes mesh-sharded arrays: slots over the data
-            # axis, kv heads over model (divisibility-aware per leaf; the
-            # paged pool's block axis shards over data like slots)
-            cache = shard_cache(cache, self._rules)
+        if cache is None:
+            cache = tfm.init_cache(
+                cfg, n, scfg.max_seq,
+                kv_mode="clustered" if layout else "exact",
+                kv_clusters=layout.n_clusters if layout else 512,
+                kv_tail=layout.keep_recent if layout else 256,
+                kv_pool_blocks=pool.n_blocks if pool else 0,
+                kv_block_size=paged.block_size if paged else 0)
+            if self._rules is not None:
+                # slot state becomes mesh-sharded arrays: slots over the
+                # data axis, kv heads over model (divisibility-aware per
+                # leaf; the paged pool's block axis shards over data
+                # like slots)
+                cache = shard_cache(cache, self._rules)
+        # per-serve stats are deltas against these marks: a persistent
+        # store carries lifetime hit/alloc counters across serves, and
+        # reporting the raw totals would double-count every serve after
+        # the first (the lifetime view stays available as template_*)
+        hits0 = pcache.hits if pcache is not None else 0
+        reused0 = pcache.tokens_reused if pcache is not None else 0
+        pool_mark = ((pool.n_allocs, pool.n_frees, pool.n_retains,
+                      pool.n_cow) if pool is not None else (0, 0, 0, 0))
 
         pos = np.zeros(n, np.int32)       # cache valid length per slot
         cur = np.zeros(n, np.int32)       # pending (unfed) token per slot
@@ -656,14 +737,27 @@ class Server:
 
         # per-request candidate digests, hashed once (admission steering
         # re-consults the prefix maps every engine step while a request
-        # queues — only the map lookups need repeating, not the hashing)
-        dig_by_uid: Dict[int, list] = {}
+        # queues — only the map lookups need repeating, not the hashing).
+        # The memo is keyed by uid for O(1) reuse but the prompt's
+        # identity is VERIFIED before every reuse: a uid recycled for a
+        # different prompt (duplicates in one stream, or uid reuse
+        # against a long-lived server) must never steer or adopt with
+        # the old prompt's digests.  Cluster assignment (template store)
+        # happens here too — once per (uid, prompt), on first hashing.
+        dig_by_uid: Dict[int, tuple] = {}
+        cid_by_uid: Dict[int, int] = {}
 
         def prefix_digests(uid):
-            d = dig_by_uid.get(uid)
-            if d is None:
-                p = np.asarray(prompts[uid], np.int32)[-scfg.max_seq:]
-                d = dig_by_uid[uid] = pcache.prefix_digests(p, chunk)
+            po = prompts[uid]
+            memo = dig_by_uid.get(uid)
+            if memo is not None and (memo[0] is po or np.array_equal(
+                    np.asarray(memo[0]), np.asarray(po))):
+                return memo[1]
+            p = np.asarray(po, np.int32)[-scfg.max_seq:]
+            d = pcache.prefix_digests(p, chunk)
+            dig_by_uid[uid] = (po, d)
+            if store is not None:
+                cid_by_uid[uid] = store.assign(p, d)
             return d
 
         def start_admission(j, uid) -> bool:
@@ -705,6 +799,10 @@ class Server:
                                                  jnp.int32(phys(j)))
                 fed[j] = hit.fed
                 fr.set_frontier(j, hit.cov)
+                # the slot now holds its own refs on every adopted
+                # block — release the in-flight pin lookup() took so
+                # pool-pressure eviction may reclaim the entry again
+                pcache.adoption_done(hit)
             elif layout is not None:
                 # the slot's previous occupant left stale centroids; its
                 # ring entries are hidden by the position mask, but stale
@@ -814,10 +912,18 @@ class Server:
                             s, p_next, chunk,
                             digests=prefix_digests(uid))
                                  if pcache is not None else 0)
-                        cands.append((occ[s], -match, s, free[0]))
+                        # template-store steering: among equal direct
+                        # matches, prefer the shard holding this
+                        # request's traffic cluster — same-cluster
+                        # requests land back-to-back where their
+                        # entries (and pinned blocks) already live
+                        aff = (store.shard_affinity(
+                            s, cid_by_uid.get(uid, -1))
+                               if store is not None else 0)
+                        cands.append((occ[s], -match, -aff, s, free[0]))
                 if not cands:
                     break
-                j = min(cands)[3]
+                j = min(cands)[-1]
                 if chunk:
                     if start_admission(j, uid):
                         qi += 1
@@ -1099,7 +1205,9 @@ class Server:
                                     snap, self._rules)
                             pcache.register(shard_of(j), prompt_np[uid],
                                             int(fed[j]), cov_of(j),
-                                            blocks, snap)
+                                            blocks, snap,
+                                            cluster=cid_by_uid.get(
+                                                uid, -1))
                         continue
                     # final chunk landed: its last row's logits are the
                     # request's first generated token
@@ -1198,9 +1306,19 @@ class Server:
                 n_compacts += 1
 
         if pcache is not None:
-            # entries are a per-serve cache: release every pinned block
-            # so the pool drains to zero with the request stream
-            pcache.clear()
+            if store is None:
+                # entries are a per-serve cache: release every pinned
+                # block so the pool drains to zero with the request
+                # stream
+                pcache.clear()
+            else:
+                # persistent template store: entries and their pinned
+                # blocks survive the drain — the pool and the device
+                # cache hand back to the server for the next serve.
+                # Drain accounting weakens from allocated()==0 to
+                # allocated()==pinned_blocks(); anything beyond the
+                # pins is a leak and shows up in pool_blocks_end.
+                self._tmpl_pool, self._tmpl_cache = pool, cache
         wall = time.perf_counter() - t0_serve
         gen_total = sum(len(v) for v in toks.values())
         # each request's first token comes from prefill; tokens/s rates
@@ -1265,25 +1383,53 @@ class Server:
                     "pool_blocks_peak": float(pool.peak_blocks),
                     "pool_occupancy_peak": pool.peak_blocks
                     / max(pool.n_blocks, 1),
-                    "pool_allocs": float(pool.n_allocs),
-                    "pool_frees": float(pool.n_frees),
-                    "pool_retains": float(pool.n_retains),
-                    "pool_cow": float(pool.n_cow),
+                    # per-serve deltas: a persistent pool carries its
+                    # lifetime counters across serves
+                    "pool_allocs": float(pool.n_allocs - pool_mark[0]),
+                    "pool_frees": float(pool.n_frees - pool_mark[1]),
+                    "pool_retains": float(pool.n_retains - pool_mark[2]),
+                    "pool_cow": float(pool.n_cow - pool_mark[3]),
                     # peak surplus of logical block mappings over the
                     # physical blocks backing them — the tail KV that
                     # prefix sharing avoided materializing
                     "kv_shared_blocks": float(kv_shared_peak),
                     "kv_bytes_saved": float(
                         kv_shared_peak * paged.block_size * tail_bpt),
-                    # every request completed → every block recycled
-                    "pool_blocks_end": float(pool.allocated()),
+                    # every request completed → every block recycled,
+                    # minus what the template store deliberately pins
+                    # across serves (0 = no leak in both modes)
+                    "pool_blocks_end": float(
+                        pool.allocated()
+                        - (store.pinned_blocks() if store is not None
+                           else 0)),
                 })
                 if pcache is not None:
+                    # per-serve deltas (satellite of the persistent
+                    # store: the counters are lifetime-cumulative on the
+                    # cache object; raw totals would double-count every
+                    # serve after the first)
                     self.last_stats.update({
-                        "prefix_hits": float(pcache.hits),
+                        "prefix_hits": float(pcache.hits - hits0),
                         "prefix_tokens_reused": float(
-                            pcache.tokens_reused),
+                            pcache.tokens_reused - reused0),
                     })
+                if store is not None:
+                    # lifetime store view + per-cluster traffic picture
+                    self.last_stats.update(store.stats())
+                    self.last_stats["template_bytes_pinned"] = float(
+                        store.pinned_blocks() * paged.block_size
+                        * tail_bpt)
+                    for c in store.cluster_stats()[:8]:
+                        cid = int(c["cid"])
+                        self.last_stats.update({
+                            f"template_cluster{cid}_cohesion":
+                                c["cohesion"],
+                            f"template_cluster{cid}_hit_rate":
+                                c["hit_rate"],
+                            f"template_cluster{cid}_bytes_pinned":
+                                c["blocks_pinned"] * paged.block_size
+                                * tail_bpt,
+                        })
             else:
                 self.last_stats.update({
                     "kv_bytes_peak_per_shard": float(

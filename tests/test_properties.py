@@ -523,6 +523,112 @@ class TestBlockPoolProperties:
             assert ((t + i) % R) // bsz in wb
 
 
+class TestTemplateStoreProperties:
+    """Conservation invariants of the persistent template store
+    (runtime/template_store.TemplateStore) under interleaved
+    register/lookup/evict/invalidate/clear traffic spanning simulated
+    serve boundaries: every block's ref count equals its table mappings
+    plus the store's pins, the inter-serve drain leaves exactly
+    ``pinned_blocks()`` allocated, eviction never touches an entry with
+    an adoption in flight, and clear/invalidate/epoch-flip always drain
+    the pins to zero."""
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 2),
+           st.lists(st.tuples(st.integers(0, 3), st.integers(0, 2),
+                              st.sampled_from(["register", "adopt", "evict",
+                                               "invalidate", "clear",
+                                               "serve_boundary"])),
+                    min_size=1, max_size=50),
+           st.integers(0, 10_000))
+    def test_store_pins_conserve_refs_across_serves(self, shards, ops,
+                                                    seed):
+        from repro.runtime import kv_pool
+        from repro.runtime.template_store import (TemplateStore,
+                                                  TemplateStoreConfig)
+        rng = np.random.default_rng(seed)
+        R, bsz, chunk = 16, 4, 8
+        n_slots = 2 * shards
+        pool = kv_pool.BlockPool(
+            n_slots, R, kv_pool.PagedKVConfig(block_size=bsz,
+                                              pool_blocks=32),
+            n_shards=shards, slots_per_shard=2)
+        store = TemplateStore(TemplateStoreConfig(max_entries=3,
+                                                  promote_after=2))
+        epoch = ("cfg", "ccfg", chunk)
+        assert store.bind(epoch, shards, pool)       # first bind: cold
+
+        def prompt_of(fam):                          # distinct families
+            return np.arange(24, dtype=np.int32) + 100 * fam
+
+        def held_pins():
+            out = []
+            for m in store._maps:
+                for e in m.values():
+                    out.extend(int(g) for g in e.blocks.values())
+            return out
+
+        def check():
+            pool.check_invariants()
+            held = held_pins()
+            mapped = pool.table[pool.table >= 0]
+            live = set(int(g) for g in np.unique(mapped)) | set(held)
+            for gid in live:
+                expect = int((mapped == gid).sum()) + held.count(gid)
+                assert int(pool.ref[gid]) == expect, (gid, expect)
+            assert pool.allocated() == len(live)
+
+        for slot_raw, fam, op in ops:
+            slot = slot_raw % n_slots
+            shard = pool.shard_of(slot)
+            p = prompt_of(fam)
+            if op == "register":
+                fed = int(rng.choice([chunk, 2 * chunk]))
+                bis = kv_pool.write_blocks(0, fed, R, bsz)
+                for bi in bis:
+                    pool.alloc(slot, bi)
+                store.register(shard, p, fed, 0,
+                               {bi: int(pool.table[slot, bi])
+                                for bi in bis}, snap=object(),
+                               cluster=store.assign(
+                                   p, store.prefix_digests(p, chunk)))
+            elif op == "adopt":
+                d = store.prefix_digests(p, chunk)
+                e = store.lookup(shard, p, chunk, digests=d)
+                if e is not None:
+                    # a pool-pressure reclaim landing between lookup and
+                    # restore must never drop the in-flight entry
+                    store.evict_lru(shard)
+                    assert any(v is e
+                               for v in store._maps[shard].values())
+                    store.adoption_done(e)
+            elif op == "evict":
+                store.evict_lru(shard)
+            elif op == "invalidate":
+                store.invalidate()
+                assert store.pinned_blocks() == 0
+            elif op == "clear":
+                store.clear()
+                assert store.pinned_blocks() == 0
+            else:                       # serve_boundary: drain + rebind
+                for s in range(n_slots):
+                    pool.free_slot(s)
+                assert pool.allocated() == store.pinned_blocks()
+                assert not store.bind(epoch, shards, pool)  # warm: kept
+                assert pool.allocated() == store.pinned_blocks()
+            check()
+        # final serve drain + epoch flip: the pool must come all the
+        # way back (a new config can never see a stale snapshot)
+        for s in range(n_slots):
+            pool.free_slot(s)
+        assert pool.allocated() == store.pinned_blocks()
+        assert store.bind(("other-config",), shards, pool)  # cold
+        assert store.pinned_blocks() == 0
+        assert pool.allocated() == 0
+        assert pool.n_frees == pool.n_allocs
+        pool.check_invariants()
+
+
 class TestRetentionPolicyProperties:
     """Invariants of the retention-policy layer (core/retention.py):
     sweeps driven by a policy may only free storage the policy marks

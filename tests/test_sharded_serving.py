@@ -210,6 +210,65 @@ def test_sharded_prefix_sharing_parity():
 
 
 @pytest.mark.slow
+def test_sharded_template_store_warm_parity():
+    """Persistent template store on a 2x4 mesh: per-data-shard entries
+    and their pinned pool blocks survive the inter-serve drain, the warm
+    second serve is bit-identical to BOTH a cold-store mesh serve and
+    the warm single-device serve (with warm hits > 0), and
+    invalidate_templates() drains the shared pool to zero."""
+    run_sub(_COMMON + """
+    from repro.runtime.kv_pool import PagedKVConfig
+    from repro.runtime.template_store import TemplateStoreConfig
+    ccfg = kv_compress.KVCompressConfig(n_clusters=8, iters=4,
+                                        keep_recent=16, refresh_every=8)
+    # pool headroom above full slot provisioning: persistent pins live
+    # in the surplus — a zero-surplus pool pressure-evicts every entry
+    # before the drain and nothing survives to the second serve
+    pg = PagedKVConfig(block_size=4, pool_blocks=24)
+    tpl = rng.integers(0, 64, size=(40,)).astype(np.int32)
+
+    def burst(sfx_seed):
+        r2 = np.random.default_rng(sfx_seed)
+        treqs, tprompts = [], {}
+        for i in range(8):
+            sfx = r2.integers(0, 64, size=(int(r2.integers(3, 9)),))
+            tprompts[i] = np.concatenate([tpl, sfx]).astype(np.int32)
+            treqs.append(Request(i, len(tprompts[i]),
+                                 int(r2.integers(6, 12))))
+        return treqs, tprompts
+
+    reqs1, prompts1 = burst(11)
+    reqs2, prompts2 = burst(13)
+
+    def scfg(store, use_mesh):
+        return ServerConfig(
+            batch_size=4, max_seq=96, kv_compress=ccfg, prefill_chunk=8,
+            paged=pg,
+            template_store=TemplateStoreConfig() if store else None,
+            mesh=mesh if use_mesh else None)
+
+    cold = Server(CFG, scfg(False, True), params)
+    ref2 = {o.uid: o.tokens for o in cold.serve(reqs2, prompts2)}
+    one = Server(CFG, scfg(True, False), params)
+    one.serve(reqs1, prompts1)
+    one2 = {o.uid: o.tokens for o in one.serve(reqs2, prompts2)}
+    srv = Server(CFG, scfg(True, True), params)
+    srv.serve(reqs1, prompts1)
+    assert srv.last_stats["template_pinned_blocks"] > 0
+    outs = srv.serve(reqs2, prompts2)
+    st = srv.last_stats
+    for o in outs:
+        assert o.tokens == ref2[o.uid], o.uid
+        assert o.tokens == one2[o.uid], o.uid
+    assert st["prefix_hits"] > 0          # warm across the serve gap
+    assert st["pool_blocks_end"] == 0.0
+    srv.invalidate_templates()
+    assert srv._store.pinned_blocks() == 0
+    print("sharded template store warm parity OK")
+    """)
+
+
+@pytest.mark.slow
 def test_sharded_windowed_paged_parity():
     """Sliding-window ('GL') serving on a 2x4 mesh: 'L' layers retire
     behind WindowRetention (dense window rings, per-row wlo mask), 'G'

@@ -1,0 +1,271 @@
+"""Persistent cross-serve template store (runtime/template_store.py).
+
+Engine-level: a second serve() against a warm store must produce greedy
+tokens bit-identical to a cold-store serve while actually hitting the
+store (entries and their pinned pool blocks survived the inter-stream
+drain), per-serve stats must be deltas (no double counting), and
+invalidation must drain the pool to zero.  Unit-level: the in-flight
+adoption guard, scored eviction, and epoch-stamped invalidation.
+"""
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core import kv_compress
+from repro.core.request_cluster import Request
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.runtime.kv_pool import BlockPool, PagedKVConfig
+from repro.runtime.server import Server, ServerConfig
+from repro.runtime.template_store import (TemplateStore,
+                                          TemplateStoreConfig)
+
+TINY = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                   n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab=64,
+                   pad_vocab_multiple=16, dtype="float32")
+CCFG = kv_compress.KVCompressConfig(n_clusters=8, iters=4, keep_recent=16,
+                                    refresh_every=8)
+# pool headroom above the slots' own 8-block footprint: persistent pins
+# live in the surplus (a fully-provisioned pool evicts every entry under
+# pressure before the serve drains — see the oversubscription test)
+PG = PagedKVConfig(block_size=4, pool_blocks=24)
+SCFG = dict(batch_size=2, max_seq=96, kv_compress=CCFG, prefill_chunk=8,
+            paged=PG)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return tfm.init_params(jax.random.PRNGKey(0), TINY)
+
+
+def _stream(template_seed=5, sfx_seed=11, n=4, tpl_len=40):
+    """Templated burst: one shared template per stream + unique
+    suffixes.  Streams with the same template_seed share the template
+    (the cross-serve reuse target); uids always start at 0 so repeat
+    serves exercise uid recycling."""
+    rng = np.random.default_rng(template_seed)
+    template = rng.integers(0, 64, size=(tpl_len,)).astype(np.int32)
+    sfx_rng = np.random.default_rng(sfx_seed)
+    reqs, prompts = [], {}
+    for i in range(n):
+        sfx = sfx_rng.integers(0, 64, size=(
+            int(sfx_rng.integers(3, 9)),)).astype(np.int32)
+        prompts[i] = np.concatenate([template, sfx])
+        reqs.append(Request(i, len(prompts[i]),
+                            int(sfx_rng.integers(6, 12))))
+    return reqs, prompts
+
+
+class TestTemplateStoreEngine:
+
+    def test_warm_serve_bit_identical_hits_and_drains(self, params):
+        reqs1, prompts1 = _stream(sfx_seed=11)
+        reqs2, prompts2 = _stream(sfx_seed=13)
+        cold = Server(TINY, ServerConfig(**SCFG), params)
+        ref2 = {o.uid: o.tokens for o in cold.serve(reqs2, prompts2)}
+
+        srv = Server(TINY, ServerConfig(
+            template_store=TemplateStoreConfig(), **SCFG), params)
+        srv.serve(reqs1, prompts1)
+        st1 = dict(srv.last_stats)
+        # the store persisted entries + pinned blocks through the drain
+        assert st1["template_entries"] > 0
+        assert st1["template_pinned_blocks"] > 0
+        assert st1["pool_blocks_end"] == 0.0      # nothing beyond pins
+        assert srv._tmpl_pool is not None
+        assert srv._tmpl_pool.allocated() == srv._store.pinned_blocks()
+
+        outs2 = srv.serve(reqs2, prompts2)
+        st2 = dict(srv.last_stats)
+        for o in outs2:                            # warm == cold, bitwise
+            assert o.tokens == ref2[o.uid], o.uid
+        assert st2["prefix_hits"] > 0              # really hit the store
+        assert st2["pool_blocks_end"] == 0.0
+        # warm start skipped template chunks the cold serve had to feed
+        assert st2["prefill_chunks"] < st1["prefill_chunks"]
+        # per-serve deltas + lifetime totals (no double counting)
+        assert st2["template_hits_total"] == (st1["prefix_hits"]
+                                              + st2["prefix_hits"])
+        assert st2["template_tokens_reused_total"] == (
+            st1["prefix_tokens_reused"] + st2["prefix_tokens_reused"])
+        # traffic clustering surfaced per-cluster stats
+        assert st2["template_clusters"] >= 1
+        assert 0.0 < st2["template_cohesion_mean"] <= 1.0
+        assert st2["template_bytes_pinned"] > 0
+        assert st2["template_cluster0_hit_rate"] >= 0.0
+
+        # explicit invalidation drains every pinned block
+        srv.invalidate_templates()
+        assert srv._store.pinned_blocks() == 0
+        assert srv._tmpl_pool is None and srv._tmpl_cache is None
+
+    def test_uid_reuse_across_serves_different_prompts(self, params):
+        """Duplicate-uid regression (digest memo): serve #2 recycles the
+        exact uids of serve #1 for a different template.  Stale
+        uid-keyed digests would steer/adopt serve-1 prefixes for
+        serve-2 prompts; content verification keeps tokens exact."""
+        reqs1, prompts1 = _stream(template_seed=5)
+        reqs2, prompts2 = _stream(template_seed=9, sfx_seed=13)
+        assert [r.uid for r in reqs1] == [r.uid for r in reqs2]
+        cold = Server(TINY, ServerConfig(**SCFG), params)
+        ref2 = {o.uid: o.tokens for o in cold.serve(reqs2, prompts2)}
+
+        srv = Server(TINY, ServerConfig(
+            template_store=TemplateStoreConfig(), **SCFG), params)
+        srv.serve(reqs1, prompts1)
+        outs2 = srv.serve(reqs2, prompts2)
+        for o in outs2:
+            assert o.tokens == ref2[o.uid], o.uid
+        # template B never matches template A's entries
+        st2 = srv.last_stats
+        assert st2["prefix_tokens_reused"] <= sum(
+            len(p) for p in prompts2.values())
+
+    def test_oversubscribed_pool_evicts_under_adoption_pressure(self,
+                                                                params):
+        """Satellite regression: a fully-provisioned pool (zero pin
+        headroom) keeps the reclaim path hot — evict_lru fires while
+        admissions are adopting entries.  The in-flight guard must keep
+        every adoption sound: serves complete, tokens stay bit-identical
+        to the cold run, and the drain invariant holds with whatever
+        pins survived."""
+        tight = dict(SCFG)
+        tight["paged"] = PagedKVConfig(block_size=4)   # 8 blocks total
+        reqs1, prompts1 = _stream(sfx_seed=11)
+        reqs2, prompts2 = _stream(sfx_seed=13)
+        cold = Server(TINY, ServerConfig(**tight), params)
+        ref2 = {o.uid: o.tokens for o in cold.serve(reqs2, prompts2)}
+        srv = Server(TINY, ServerConfig(
+            template_store=TemplateStoreConfig(), **tight), params)
+        srv.serve(reqs1, prompts1)
+        assert srv.last_stats["prefix_hits"] > 0   # sharing ran hot
+        outs2 = srv.serve(reqs2, prompts2)
+        for o in outs2:
+            assert o.tokens == ref2[o.uid], o.uid
+        assert srv.last_stats["pool_blocks_end"] == 0.0
+
+    def test_epoch_change_invalidates_shared_store(self, params):
+        """A TemplateStore instance reused by a second Server (different
+        params ⇒ different epoch) must come up cold — a stale snapshot
+        under new weights can never be adopted."""
+        reqs, prompts = _stream()
+        store = TemplateStore(TemplateStoreConfig())
+        srv1 = Server(TINY, ServerConfig(template_store=store, **SCFG),
+                      params)
+        srv1.serve(reqs, prompts)
+        assert store.pinned_blocks() > 0
+        inval0 = store.invalidations
+
+        params2 = tfm.init_params(jax.random.PRNGKey(1), TINY)
+        cold = Server(TINY, ServerConfig(**SCFG), params2)
+        ref = {o.uid: o.tokens for o in cold.serve(reqs, prompts)}
+        srv2 = Server(TINY, ServerConfig(template_store=store, **SCFG),
+                      params2)
+        outs = srv2.serve(reqs, prompts)
+        assert store.invalidations > inval0        # epoch flipped
+        for o in outs:
+            assert o.tokens == ref[o.uid], o.uid
+
+
+class TestTemplateStoreUnit:
+
+    @staticmethod
+    def _registered(store, pool, slot, prompt, fed):
+        bis = [bi for bi in range(pool.blocks_per_slot)
+               if bi * 4 < fed]
+        for bi in bis:
+            pool.alloc(slot, bi)
+        blocks = {bi: int(pool.table[slot, bi]) for bi in bis}
+        store.register(pool.shard_of(slot), prompt, fed, 0, blocks,
+                       snap=object())
+
+    def test_inflight_guard_pins_entry_during_adoption(self):
+        """The eviction-mid-adoption bug: an entry between lookup and
+        restore must survive pool-pressure eviction even when it is the
+        scored victim."""
+        pool = BlockPool(2, 16, PagedKVConfig(block_size=4,
+                                              pool_blocks=16))
+        store = TemplateStore(TemplateStoreConfig(max_entries=4))
+        store.bind("epoch", 1, pool)
+        chunk = 8
+        pA = np.arange(24, dtype=np.int32)
+        pB = np.arange(24, dtype=np.int32) + 1
+        self._registered(store, pool, 0, pA, 8)
+        self._registered(store, pool, 1, pB, 8)
+        # make B the higher-scored entry, then put A (the victim by
+        # score) in flight
+        for _ in range(2):
+            e = store.lookup(0, pB, chunk,
+                             digests=store.prefix_digests(pB, chunk))
+            store.adoption_done(e)
+        eA = store.lookup(0, pA, chunk,
+                          digests=store.prefix_digests(pA, chunk))
+        assert eA is not None and eA.in_flight == 1
+        assert store.evict_lru(0)                  # must pick B, not A
+        assert any(v is eA for v in store._maps[0].values())
+        assert not store.evict_lru(0)              # only the pin remains
+        with pytest.raises(RuntimeError, match="in flight"):
+            store.invalidate()
+        store.adoption_done(eA)
+        assert store.evict_lru(0)                  # evictable again
+        assert store.pinned_blocks() == 0
+        for s in range(2):
+            pool.free_slot(s)
+        assert pool.allocated() == 0
+        with pytest.raises(ValueError, match="without a matching"):
+            store.adoption_done(eA)
+
+    def test_scored_eviction_keeps_earning_templates(self):
+        """hits × tokens-reused beats recency: the entry that keeps
+        collapsing admissions survives a newer never-hit entry (pure
+        LRU would evict the hot template)."""
+        pool = BlockPool(2, 16, PagedKVConfig(block_size=4,
+                                              pool_blocks=16))
+        store = TemplateStore(TemplateStoreConfig(max_entries=4))
+        store.bind("epoch", 1, pool)
+        chunk = 8
+        hot = np.arange(24, dtype=np.int32)
+        decoy = np.arange(24, dtype=np.int32) + 1
+        self._registered(store, pool, 0, hot, 8)
+        for _ in range(2):
+            e = store.lookup(0, hot, chunk,
+                             digests=store.prefix_digests(hot, chunk))
+            store.adoption_done(e)
+        self._registered(store, pool, 1, decoy, 8)   # newest stamp
+        assert store.evict_lru(0)
+        assert store.match_len(0, hot, chunk) == 8   # hot survived
+        assert store.match_len(0, decoy, chunk) == 0
+
+    def test_bind_epoch_and_pool_identity(self):
+        pool = BlockPool(2, 16, PagedKVConfig(block_size=4,
+                                              pool_blocks=16))
+        store = TemplateStore(TemplateStoreConfig())
+        assert store.bind("e1", 1, pool)             # cold first bind
+        p = np.arange(24, dtype=np.int32)
+        TestTemplateStoreUnit._registered(store, pool, 0, p, 8)
+        assert not store.bind("e1", 1, pool)         # warm: entries kept
+        assert store.pinned_blocks() > 0
+        assert store.bind("e2", 1, pool)             # epoch change: cold
+        assert store.pinned_blocks() == 0
+        TestTemplateStoreUnit._registered(store, pool, 0, p, 8)
+        pool2 = BlockPool(2, 16, PagedKVConfig(block_size=4,
+                                               pool_blocks=16))
+        assert store.bind("e2", 1, pool2)            # pool change: cold
+        assert store.pinned_blocks() == 0
+
+    def test_promotion_assigns_recurring_family(self):
+        """Mettu–Plaxton-style medoid promotion: an unmatched prompt
+        family becomes a cluster once it recurs promote_after times."""
+        store = TemplateStore(TemplateStoreConfig(promote_after=2))
+        store.bind("e", 1, BlockPool(
+            2, 16, PagedKVConfig(block_size=4, pool_blocks=16)))
+        chunk = 8
+        p = np.arange(24, dtype=np.int32)
+        d = store.prefix_digests(p, chunk)
+        assert store.assign(p, d) == -1              # first sighting
+        cid = store.assign(p, d)                     # recurrence: promote
+        assert cid >= 0
+        assert store.assign(p, d) == cid             # sticky
+        stats = store.stats()
+        assert stats["template_clusters"] == 1.0
