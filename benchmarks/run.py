@@ -901,6 +901,150 @@ def window_bench(quick=False, seed=7, mesh_spec=None,
              f"runs={n_runs};records={len(records)};path={json_out}")
 
 
+def slo_bench(quick=False, seed=7, mesh_spec=None,
+              json_out="artifacts/serve_bench.json"):
+    """SLO-aware scheduling under overload (runtime/scheduler.py): a
+    mixed-priority burst oversubscribes the slots 5-10x against a KV
+    pool deliberately too small for the in-flight set, with every
+    protected (priority-1) request arriving at the FIFO tail — the
+    worst case for priority-blind admission.  Three serves per mesh
+    variant:
+
+      * slo   — tight pool + scheduler + priorities: the brownout
+        ladder (defer -> preempt/swap -> shed) must complete the burst
+        with ZERO PoolExhausted and ZERO protected-class sheds;
+      * blind — same tight pool + scheduler but priorities stripped:
+        the protected uids wait out the whole queue, so their p95 TTFT
+        is the do-nothing baseline the scheduler must beat;
+      * reference — unpressured pool, no scheduler: preemption and
+        swap must be schedule-invisible, so every non-shed completion's
+        tokens must be bit-identical to this serve.
+
+    Records per-class TTFT, the full sched_* counter set, and the
+    slo-vs-blind comparison into the deduped serve-bench JSON."""
+    from repro.kernels.ops import interpret_default
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models import transformer as tfm
+    from repro.models.config import ModelConfig
+    from repro.runtime.kv_pool import PagedKVConfig
+    from repro.runtime.scheduler import SLOConfig
+    from repro.runtime.server import Server, ServerConfig
+
+    SMALL = ModelConfig(name="serve-lm", family="dense", n_layers=2,
+                        d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+                        d_ff=256, vocab=256, pad_vocab_multiple=128,
+                        dtype="float32")
+    params = tfm.init_params(jax.random.PRNGKey(0), SMALL)
+    rng = np.random.default_rng(seed)
+    n = 20 if quick else 40                   # batch_size=4: 5x / 10x
+    n_high = n // 4
+    reqs, prompts = [], {}
+    for i in range(n):
+        plen = int(rng.integers(6, 30))
+        prompts[i] = rng.integers(0, 256, size=(plen,)).astype(np.int32)
+        reqs.append(Request(i, plen, int(rng.integers(6, 14)),
+                            priority=1 if i >= n - n_high else 0))
+    high_uids = {r.uid for r in reqs if r.priority == 1}
+    blind = [Request(r.uid, r.prompt_len, r.max_new_tokens) for r in reqs]
+    ccfg = kv_compress.KVCompressConfig(n_clusters=8, iters=4,
+                                        keep_recent=16, refresh_every=8)
+    chunk = 8
+    mesh = make_serving_mesh(mesh_spec) if mesh_spec else None
+
+    # FIFO admission on every variant: clustered batching would reorder
+    # the stream by traffic class and dilute the tail-arrival worst case
+    def scfg(pool_blocks, sched, use_mesh):
+        return ServerConfig(
+            batch_size=4, max_seq=96, kv_compress=ccfg,
+            prefill_chunk=chunk, use_clustered_batching=False,
+            paged=PagedKVConfig(block_size=4, pool_blocks=pool_blocks),
+            scheduler=SLOConfig() if sched else None,
+            mesh=mesh if use_mesh else None)
+
+    probe = [Request(10_000 + i, l, g)
+             for i, (l, g) in enumerate([(9, 3), (11, 5)])]
+    probe_prompts = {r.uid: rng.integers(0, 256, size=(r.prompt_len,))
+                     .astype(np.int32) for r in probe}
+
+    def ttft_p95(outs, uids):
+        vals = [o.prefill_ms for o in outs
+                if o.uid in uids and not o.shed]
+        return float(np.percentile(vals, 95)) if vals else float("inf")
+
+    records, comparisons = [], {}
+    variant_tags = [("", False)]
+    if mesh is not None:
+        variant_tags.append((f"_mesh{mesh_spec.lower()}", True))
+    for tag, use_mesh in variant_tags:
+        # the tight pool cannot hold the full slot provisioning (4
+        # blocks/slot x slots/shard): admission-time block demand
+        # collides with decode residency and the ladder has to act
+        tight = 10 if not use_mesh else 8
+        ref = Server(SMALL, scfg(48, False, use_mesh), params)
+        ref.serve(probe, probe_prompts)       # warm the launch shapes
+        ref_out = {o.uid: o.tokens for o in ref.serve(blind, prompts)}
+
+        outs, walls, stats = {}, {}, {}
+        for vname, stream in [("slo", reqs), ("blind", blind)]:
+            srv = Server(SMALL, scfg(tight, True, use_mesh), params)
+            srv.serve(probe, probe_prompts)
+            t0 = time.perf_counter()
+            outs[vname] = srv.serve(stream, prompts)
+            walls[vname] = time.perf_counter() - t0
+            stats[vname] = {k: float(v)
+                            for k, v in srv.last_stats.items()}
+
+        same = all(o.tokens == ref_out[o.uid]
+                   for o in outs["slo"] if not o.shed)
+        shed_high = stats["slo"]["sched_shed_high"]
+        p95_slo = ttft_p95(outs["slo"], high_uids)
+        p95_blind = ttft_p95(outs["blind"], high_uids)
+        for vname in ("slo", "blind"):
+            st, name = stats[vname], f"serve_slo_{vname}{tag}"
+            p95h = p95_slo if vname == "slo" else p95_blind
+            emit(name, walls[vname] * 1e6,
+                 f"ttft_p95_ms_high={p95h:.1f};"
+                 f"preempts={st['sched_preemptions']:.0f};"
+                 f"swaps_in={st['sched_swaps_in']:.0f};"
+                 f"sheds={st['sched_sheds']:.0f};"
+                 f"shed_high={st['sched_shed_high']:.0f}")
+            records.append({
+                "name": name, "seed": seed,
+                "mesh": mesh_spec if use_mesh else "1x1",
+                "batch_size": 4, "requests": n, "high_requests": n_high,
+                "pool_blocks": tight, "wall_s": walls[vname],
+                "ttft_p95_ms_high": p95h, **st,
+            })
+        cmp = {
+            "ttft_p95_ms_high_slo": p95_slo,
+            "ttft_p95_ms_high_blind": p95_blind,
+            "ttft_p95_high_ratio": p95_slo / max(p95_blind, 1e-9),
+            "slo_beats_blind_ttft": bool(p95_slo < p95_blind),
+            "preemptions": stats["slo"]["sched_preemptions"],
+            "swaps_in": stats["slo"]["sched_swaps_in"],
+            "sheds": stats["slo"]["sched_sheds"],
+            "shed_high": shed_high,
+            "tokens_identical": bool(same),
+        }
+        comparisons[f"serve_slo{tag}"] = cmp
+        emit(f"serve_slo{tag}_vs_blind", 0.0,
+             f"ttft_p95_high_ratio={cmp['ttft_p95_high_ratio']:.2f};"
+             f"slo_beats_blind={cmp['slo_beats_blind_ttft']};"
+             f"shed_high={shed_high:.0f};tokens_identical={same}")
+
+    if json_out:
+        scenario = "serve_slo" + ("_quick" if quick else "")
+        run_key = {"git_sha": _git_sha(), "seed": seed,
+                   "mesh": mesh_spec or "1x1", "scenario": scenario}
+        n_runs = _append_serve_json(json_out, run_key, {
+            "quick": bool(quick), "timestamp": time.time(),
+            "backend": jax.default_backend(),
+            "pallas_interpret": bool(interpret_default()),
+            "records": records, "comparisons": comparisons})
+        emit("serve_slo_json", 0.0,
+             f"runs={n_runs};records={len(records)};path={json_out}")
+
+
 def roofline_summary(quick=False):
     arts = sorted(glob.glob("artifacts/dryrun/*.json"))
     if not arts:
@@ -933,7 +1077,7 @@ BENCHES = [t1_median_throughput, t2_recognition_rate, t3_fixed_point,
            t4_optimal_k, t5_kmedians_end2end, kv_compress_bench,
            request_batching_bench, grad_compress_bench, serve_bench,
            prefix_share_bench, template_store_bench, window_bench,
-           roofline_summary]
+           slo_bench, roofline_summary]
 
 
 def main() -> None:
@@ -967,7 +1111,7 @@ def main() -> None:
             b(quick=args.quick, seed=args.seed, mesh_spec=args.mesh,
               json_out=args.json_out, paged=args.paged)
         elif b in (prefix_share_bench, template_store_bench,
-                   window_bench):
+                   window_bench, slo_bench):
             b(quick=args.quick, seed=args.seed, mesh_spec=args.mesh,
               json_out=args.json_out)
         else:

@@ -29,6 +29,18 @@ class Request:
     uid: int
     prompt_len: int
     max_new_tokens: int
+    # SLO class (runtime/scheduler.py): larger = more important.  0 is
+    # best-effort/batch; priorities only matter to a Server configured
+    # with ServerConfig.scheduler — everything else ignores them, and a
+    # request's greedy tokens never depend on its priority (scheduling
+    # is schedule-invisible by construction).
+    priority: int = 0
+    # soft TTFT deadline in ms from serve() start (0 = none).  A
+    # best-effort request whose deadline has already passed when the
+    # engine would otherwise defer it under pool pressure is shed
+    # instead of retried — it can no longer meet its SLO, so its blocks
+    # are better spent on requests that still can.
+    deadline_ms: float = 0.0
 
 
 class BatchPlan(NamedTuple):
@@ -44,9 +56,28 @@ def features(reqs: Sequence[Request]) -> np.ndarray:
 def plan_batches(reqs: Sequence[Request], batch_size: int,
                  n_clusters: int = 4, seed: int = 0) -> BatchPlan:
     """Cluster by (len, gen) with bit-serial k-medians, then fill batches
-    cluster-by-cluster in sorted-length order."""
+    cluster-by-cluster in sorted-length order.
+
+    Priority-aware: when the queue mixes SLO classes, each class is
+    planned independently (highest first) and the class plans
+    concatenate, so every high-priority request is admitted before any
+    lower-priority one — the padding-minimal clustering runs within a
+    class, never across classes (a batch straddling classes would make a
+    high-priority TTFT wait on best-effort prompts).  Single-class
+    queues (the default: every ``priority`` 0) take the exact pre-SLO
+    path, bit-identical plans included."""
     if not reqs:
         return BatchPlan([], 0.0)
+    prios = sorted({r.priority for r in reqs}, reverse=True)
+    if len(prios) > 1:
+        by_uid = {r.uid: r for r in reqs}
+        batches: List[List[int]] = []
+        for p in prios:
+            sub = [r for r in reqs if r.priority == p]
+            batches.extend(plan_batches(sub, batch_size, n_clusters,
+                                        seed).batches)
+        waste = padding_waste([[by_uid[u] for u in b] for b in batches])
+        return BatchPlan(batches, waste)
     x = features(reqs)
     if len(reqs) < max(4 * batch_size, n_clusters * batch_size):
         # small queue (clusters could not each fill a batch on average):

@@ -47,6 +47,7 @@ from repro.launch.mesh import make_serving_mesh  # noqa: E402
 from repro.models import transformer as tfm  # noqa: E402
 from repro.runtime.kv_pool import PagedKVConfig  # noqa: E402
 from repro.runtime.prefix_cache import PrefixShareConfig  # noqa: E402
+from repro.runtime.scheduler import SLOConfig  # noqa: E402
 from repro.runtime.server import Server, ServerConfig  # noqa: E402
 from repro.runtime.template_store import TemplateStoreConfig  # noqa: E402
 
@@ -112,6 +113,13 @@ def main():
     ap.add_argument("--refresh-every", type=int, default=None,
                     help="clustered serving: decode steps between "
                          "compactions (default 32)")
+    ap.add_argument("--priority-demo", action="store_true",
+                    help="SLO scheduling demo (requires --paged): mark "
+                         "the last quarter of the queue priority-1, "
+                         "shrink the pool below full provisioning, and "
+                         "serve under the brownout ladder (defer -> "
+                         "preempt/swap -> shed); prints per-class TTFT "
+                         "and the sched_* counters")
     args = ap.parse_args()
 
     cfg = (configs.get_reduced(args.arch) if args.reduced
@@ -138,6 +146,22 @@ def main():
                     rng.integers(64, min(160, args.max_seq - args.max_new),
                                  args.requests))
     reqs = [Request(i, int(l), args.max_new) for i, l in enumerate(lens)]
+    if args.priority_demo:
+        if not args.paged:
+            ap.error("--priority-demo needs the paged clustered engine "
+                     "(add --paged)")
+        if any(cfg.pattern_for_layer(i) != "G" for i in range(cfg.n_layers)):
+            ap.error(f"--priority-demo: {args.arch} has windowed layers; "
+                     f"the SLO scheduler serves all-global clustered "
+                     f"models only")
+        # protected class arrives LAST — the worst case for FIFO, and
+        # exactly what priority preemption exists to fix
+        n_high = max(len(reqs) // 4, 1)
+        reqs = [Request(r.uid, r.prompt_len, r.max_new_tokens,
+                        priority=1 if r.uid >= len(reqs) - n_high else 0)
+                for r in reqs]
+        print(f"[serve] priority demo: {n_high}/{len(reqs)} requests "
+              f"priority-1 at the queue tail")
     prompts = {r.uid: rng.integers(0, cfg.vocab, size=(r.prompt_len,)).astype(
         np.int32) for r in reqs}
     if args.persist_templates:
@@ -189,12 +213,24 @@ def main():
             per_slot = (ccfg.keep_recent + args.block_size - 1) \
                 // args.block_size
             pool_blocks = 2 * max(args.batch_size // shards, 1) * per_slot
+        if args.priority_demo and not pool_blocks:
+            # undersubscribe on purpose: the scheduler only has work to
+            # do when the pool can't hold every slot's tail ring at once
+            shards = mesh.shape["data"] if mesh is not None else 1
+            per_slot = (ccfg.keep_recent + args.block_size - 1) \
+                // args.block_size
+            slots = max(args.batch_size // shards, 1)
+            pool_blocks = max(per_slot + 1, (3 * slots * per_slot) // 4)
         paged = PagedKVConfig(block_size=args.block_size,
                               pool_blocks=pool_blocks)
         print(f"[serve] paged KV: {args.block_size}-position blocks, "
               f"{pool_blocks or 'auto'} blocks/shard"
               + (" (auto-doubled for template-store headroom)"
-                 if pool_blocks != args.pool_blocks else ""))
+                 if args.persist_templates
+                 and pool_blocks != args.pool_blocks else "")
+              + (" (auto-tightened to force brownout pressure)"
+                 if args.priority_demo
+                 and pool_blocks != args.pool_blocks else ""))
     pshare = tstore = None
     if args.persist_templates:
         # cap entries near the pool headroom: every entry pins blocks,
@@ -213,7 +249,8 @@ def main():
         batch_size=args.batch_size, max_seq=args.max_seq,
         use_clustered_batching=not args.no_clustering, mesh=mesh,
         prefill_chunk=args.prefill_chunk, kv_compress=ccfg,
-        paged=paged, prefix_share=pshare, template_store=tstore), params)
+        paged=paged, prefix_share=pshare, template_store=tstore,
+        scheduler=SLOConfig() if args.priority_demo else None), params)
     t0 = time.perf_counter()
     outs = srv.serve(reqs, prompts)
     dt = time.perf_counter() - t0
@@ -253,6 +290,23 @@ def main():
               f"{st['prefix_tokens_reused']:.0f} prompt tokens reused, "
               f"{st['kv_bytes_saved'] / 1024:.1f} KiB tail KV shared "
               f"({st['pool_cow']:.0f} copy-on-write swaps)")
+    if args.priority_demo:
+        prio = {r.uid: r.priority for r in reqs}
+        shed = [o.uid for o in outs if o.shed]
+
+        def p95(cls):
+            vals = [o.prefill_ms for o in outs
+                    if prio[o.uid] == cls and not o.shed]
+            return float(np.percentile(vals, 95)) if vals else float("nan")
+
+        print(f"[serve] SLO scheduling: TTFT p95 priority-1 "
+              f"{p95(1):.0f} ms vs best-effort {p95(0):.0f} ms; "
+              f"{st['sched_preemptions']:.0f} preemptions, "
+              f"{st['sched_swaps_in']:.0f} swap-ins "
+              f"({st['sched_reuploaded_blocks']:.0f} blocks re-uploaded, "
+              f"{st['sched_readopted_blocks']:.0f} re-adopted), "
+              f"{st['sched_deferrals']:.0f} deferrals, "
+              f"{st['sched_sheds']:.0f} shed {shed}")
     if mesh is not None:
         if "n_data_shards" in srv.last_stats:
             ws = [f"{srv.last_stats[f'slot_waste_shard{s}']:.2f}"

@@ -179,6 +179,14 @@ class BlockPool:
         # -1 = unmapped; otherwise a global physical block id
         self.table = np.full((n_slots, self.blocks_per_slot), -1, np.int32)
         self.ref = np.zeros(self.n_blocks, np.int32)
+        # per-block generation, bumped when a block returns to the free
+        # list.  A swap record that remembers (gid, gen) can prove at
+        # resume time that the block was never recycled in between — and
+        # since a live shared block's payload is immutable under the COW
+        # rule, an unchanged generation means the device bytes still
+        # match the host copy and the re-upload can be skipped entirely
+        # (scheduler re-adoption fast path).
+        self.gen = np.zeros(self.n_blocks, np.int64)
         # min-heaps per shard (lowest free id first, O(log n) alloc/free)
         self._free: List[List[int]] = [
             list(range(s * self.pool_blocks, (s + 1) * self.pool_blocks))
@@ -215,6 +223,11 @@ class BlockPool:
         pinned by the prefix cache) count ONCE (occupancy and peak-KV
         stats must not double-count shared blocks)."""
         return self._live
+
+    def free_blocks(self, shard: int) -> int:
+        """Free-list depth for one data shard — how many fresh blocks
+        ``alloc`` can hand out there before ``PoolExhausted``."""
+        return len(self._free[shard])
 
     def shared_extra(self) -> int:
         """Logical table mappings beyond one per physical block — the
@@ -327,6 +340,7 @@ class BlockPool:
         if self.ref[gid] == 0:
             s = gid // self.pool_blocks
             heapq.heappush(self._free[s], int(gid))
+            self.gen[gid] += 1
             self.n_frees += 1
             self._live -= 1
             self._live_shard[s] -= 1
@@ -343,6 +357,50 @@ class BlockPool:
         """Recycle every block a slot holds (request exit / slot reset)."""
         for bi in range(self.blocks_per_slot):
             self.free_block(slot, bi)
+
+    # ------------------------------------------------------------------
+    # preemption swap support (runtime/scheduler.py)
+    # ------------------------------------------------------------------
+
+    def release_slot(self, slot: int) -> Dict[int, Tuple[int, int]]:
+        """Bulk-release a preempted slot's table, returning
+        ``{ring_block_idx: (gid, gen_at_release)}`` for every mapping it
+        held.  Shared blocks (prefix-cache pins, other adopters) stay
+        live with one fewer ref; exclusively-owned blocks return to the
+        free list.  The (gid, gen) pairs are what :meth:`readopt` checks
+        at resume time to decide whether the device payload is provably
+        unchanged."""
+        held: Dict[int, Tuple[int, int]] = {}
+        for bi in range(self.blocks_per_slot):
+            gid = int(self.table[slot, bi])
+            if gid < 0:
+                continue
+            held[bi] = (gid, int(self.gen[gid]))
+            self.free_block(slot, bi)
+        return held
+
+    def readopt(self, slot: int, block_idx: int, gid: int,
+                gen: int) -> bool:
+        """Re-map a resuming slot's ring block onto the physical block it
+        held before preemption — but only when the block is provably
+        unchanged: still live (someone else kept it referenced the whole
+        time, so COW immutability applied throughout), same generation
+        (never recycled through the free list), on the resuming slot's
+        shard, and the target table entry unmapped.  Returns True on the
+        fast path (caller skips the host→device payload upload); False
+        means the caller must alloc fresh and re-upload."""
+        if self.table[slot, block_idx] >= 0:
+            return False
+        if not (0 <= gid < self.n_blocks):
+            return False
+        if self.ref[gid] <= 0 or int(self.gen[gid]) != int(gen):
+            return False
+        if gid // self.pool_blocks != self.shard_of(slot):
+            return False
+        self.retain(gid)
+        self.table[slot, block_idx] = gid
+        self.dirty = True
+        return True
 
     def free_retired(self, slot: int, t: int, policy) -> int:
         """Return blocks whose every claimed position is retired under

@@ -63,6 +63,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import hashlib
 import math
 import time
 from typing import Dict, List, Optional, Sequence
@@ -81,9 +82,11 @@ from repro.models.config import ModelConfig
 from repro.runtime import kv_pool
 from repro.runtime import prefix_cache as prefix_mod
 from repro.runtime import template_store as template_mod
+from repro.runtime.scheduler import SLOConfig, SLOScheduler, SwapRecord
 from repro.sharding import (Rules, constrain_cache, default_table,
                             place_admission, place_block_tables,
-                            place_prefix_snapshot, shard_cache, use_rules)
+                            place_prefix_snapshot, place_swap_payload,
+                            shard_cache, use_rules)
 from repro.sharding.rules import _key_str as _key_name
 
 
@@ -150,6 +153,18 @@ class ServerConfig:
     # ``allocated() == store.pinned_blocks()`` (reported as
     # ``pool_blocks_end == 0`` after subtracting the pins); use
     # ``Server.invalidate_templates()`` to drain the pins explicitly.
+    scheduler: Optional[SLOConfig] = None
+    # SLO-aware scheduling (runtime/scheduler.py): requests carry
+    # priorities/deadlines (Request.priority / .deadline_ms); under slot
+    # or pool pressure the engine preempts the cheapest lower-priority
+    # in-flight slot — its clustered snapshot + mapped tail blocks swap
+    # to host memory and the blocks return to the pool — and re-admits
+    # it mid-stream bit-identically when capacity returns.  Best-effort
+    # load is deferred/shed to protect the high class's TTFT; the
+    # brownout ladder (defer → preempt → swap-in → shed) runs ahead of
+    # PoolExhausted, which then only fires when all remaining work is
+    # the protected class.  Requires the paged clustered engine
+    # (kv_compress= + paged=, all-'G' layers).
     mesh: Optional[Mesh] = None
     # (data, model) device mesh (launch/mesh.make_serving_mesh): decode
     # slots + their KV caches partition over "data", attention heads (and
@@ -165,6 +180,8 @@ class Completion:
     tokens: List[int]
     prefill_ms: float              # wall-clock time to first token (TTFT)
     decode_ms: float
+    shed: bool = False             # dropped by SLO brownout: tokens are
+                                   # partial (or empty if never admitted)
 
 
 def _is_exact_kv(node) -> bool:
@@ -270,6 +287,19 @@ class Server:
                     "counts, snapshots restore only FrontierRetention "
                     "(clustered) slot state, and prefix-pure registration "
                     "points only exist on the chunked admission schedule")
+        self._slo = scfg.scheduler
+        if self._slo is not None:
+            if (self._paged is None or scfg.kv_compress is None
+                    or set(cfg.layer_pattern) - set("G")
+                    or scfg.engine != "continuous"):
+                raise ValueError(
+                    "scheduler= (SLO-aware preemption) requires the "
+                    "paged clustered continuous engine with an all-'G' "
+                    "layer pattern (kv_compress= + paged=): swap "
+                    "snapshots restore only FrontierRetention "
+                    "(clustered) slot state, and preemption frees pool "
+                    "blocks — the dense and exact engines have nothing "
+                    "to swap")
         self._chunk = scfg.prefill_chunk
         if self._chunk:
             if scfg.engine != "continuous":
@@ -306,15 +336,17 @@ class Server:
         # and the device engine cache that carry the store's pinned
         # blocks between serve() calls.  The config epoch stamps every
         # input a registered snapshot depends on — a store rebound under
-        # a different model/KV config/geometry (or a different params
-        # object: identity is the conservative proxy for "same weights")
-        # invalidates instead of adopting stale state.
+        # a different model/KV config/geometry or different weight BYTES
+        # invalidates instead of adopting stale state.  The weight stamp
+        # is a content hash, not object identity, so reloaded identical
+        # params (a new pytree with the same bytes) keep a warm store.
         self._tmpl_pool: Optional[kv_pool.BlockPool] = None
         self._tmpl_cache = None
         self._store_epoch = (repr(cfg), repr(scfg.kv_compress),
                              repr(scfg.paged), scfg.prefill_chunk,
                              scfg.max_seq, scfg.batch_size,
-                             self._n_data_shards, id(self.params))
+                             self._n_data_shards,
+                             self._params_digest(self.params))
         # bucket-padded prefill is only exact for global attention (causal
         # mask + masked decode); sliding-window rings and SSM/RG-LRU state
         # absorb pad tokens, so those models admit at exact prompt length
@@ -406,6 +438,17 @@ class Server:
                 with _ctx():
                     return self._constrain(self._cow_impl(c, src, dst))
 
+            def _swap_out_fn(c, j, bt_row):
+                with _ctx():
+                    return (tfm.clustered_slot_state(c, j),
+                            self._gather_swap_tails(c, bt_row))
+
+            def _swap_in_fn(c, snap, tails, j, bt_row):
+                with _ctx():
+                    c2 = tfm.restore_clustered_slot_state(c, snap, j)
+                    return self._constrain(
+                        self._scatter_swap_tails(c2, tails, bt_row))
+
             # ``width`` (max chunk index + 1, sequencing sliding-window
             # ring commits) is static: exactly two traces — the mixed
             # shape (width = prefill_chunk) and pure decode (width = 1)
@@ -421,6 +464,16 @@ class Server:
             self._restore_slot_state = jax.jit(_restore_fn,
                                                donate_argnums=(0,))
             self._cow = jax.jit(_cow_fn, donate_argnums=(0,))
+            # preemption swap: out gathers one slot's clustered snapshot
+            # plus its full tail-ring block row (the host keeps only the
+            # mapped blocks' bytes meaningful; unmapped rows gather the
+            # shard-base alias garbage the masks already exclude); in
+            # restores the snapshot and scatters ONLY freshly-allocated
+            # blocks back (re-adopted blocks may be shared — writing
+            # them, even with identical bytes, would break the COW
+            # protocol — and their payloads are provably unchanged)
+            self._swap_out = jax.jit(_swap_out_fn)
+            self._swap_in = jax.jit(_swap_in_fn, donate_argnums=(0,))
 
     def _constrain(self, cache):
         """Pin engine-cache leaves to their mesh layout inside traced fns
@@ -484,6 +537,15 @@ class Server:
         plan = self._plan(requests)
         order = [u for b in plan.batches for u in b]
         by_uid = {r.uid: r for r in requests}
+        if (self.scfg.scheduler is not None
+                and self.scfg.scheduler.priority_admission):
+            # admission control: the protected class admits ahead of
+            # best-effort work regardless of queue position (stable
+            # within a class, so the batcher's padding-minimal order
+            # survives inside each class).  Tokens are unaffected —
+            # per-slot state is a function of the slot's own stream —
+            # only who waits.
+            order.sort(key=lambda uid: -by_uid[uid].priority)
 
         # data-shard bookkeeping: NamedSharding partitions the slot axis
         # contiguously, so logical slot j lives on data shard
@@ -512,14 +574,21 @@ class Server:
         cache = None
         store = self._store
         if paged is not None:
-            if store is not None and self._tmpl_pool is not None:
-                # warm cross-serve start: the previous serve's pool and
-                # device cache carry the store's pinned template blocks.
-                # Ownership is taken eagerly (the attrs are nulled) so a
-                # serve that dies mid-flight can never leave a
-                # half-donated cache behind — the next serve comes up
-                # cold and bind() invalidates the orphaned entries.
-                pool, cache = self._tmpl_pool, self._tmpl_cache
+            parked = store.parked if store is not None else None
+            if (parked is not None and parked[2] == self._store_epoch
+                    and parked[3] == max(shards, 1)):
+                # warm cross-serve start: the parked pool and device
+                # cache carry the store's pinned template blocks.  The
+                # canonical copy lives on the STORE keyed by epoch, so
+                # a different Server instance under the same epoch
+                # (weights content-hashed — a reloaded identical pytree
+                # counts) adopts it too.  Ownership is taken eagerly
+                # (the slot is nulled) so a serve that dies mid-flight
+                # can never leave a half-donated cache behind — the
+                # next serve comes up cold and bind() invalidates the
+                # orphaned entries.
+                pool, cache = parked[0], parked[1]
+                store.parked = None
                 self._tmpl_pool = self._tmpl_cache = None
                 pool.reset_peaks()
             else:
@@ -557,6 +626,12 @@ class Server:
         reused0 = pcache.tokens_reused if pcache is not None else 0
         pool_mark = ((pool.n_allocs, pool.n_frees, pool.n_retains,
                       pool.n_cow) if pool is not None else (0, 0, 0, 0))
+        # SLO scheduler: one per serve — the swap backlog never outlives
+        # the request stream (every parked request resumes or sheds
+        # before the serve returns), so cross-serve template state is
+        # untouched by preemption
+        slo_cfg = self._slo
+        slo = SLOScheduler(slo_cfg, n) if slo_cfg is not None else None
 
         pos = np.zeros(n, np.int32)       # cache valid length per slot
         cur = np.zeros(n, np.int32)       # pending (unfed) token per slot
@@ -735,6 +810,188 @@ class Server:
             if idx_of(j) >= bucket:
                 resize_to(min(per_shard, _pow2ceil(idx_of(j) + 1)))
 
+        # ---- SLO preemption / swap / brownout (runtime/scheduler.py) --
+        # All of these run at clean step boundaries only (admission
+        # phase, post-step pass, zero-progress backstops): mid-step a
+        # victim's COW payload copies may not have been applied yet and
+        # a swap-out gather would read uninitialized fresh blocks.
+        # Victims are always ACTIVE (decoding) slots — an admitting slot
+        # mid-prefill may hold an in-flight prefix-cache pin
+        # (lookup→restore window), and interrupting it would break the
+        # pin protocol; admitting slots use the existing defer machinery
+        # instead.
+
+        def victim_candidates(shard=None):
+            """(priority, mapped_block_count, slot) for every active
+            slot (optionally one shard's — blocks are shard-local, so
+            pool pressure needs a same-shard victim)."""
+            out = []
+            for j in range(n):
+                if not active[j]:
+                    continue
+                if shard is not None and shard_of(j) != shard:
+                    continue
+                out.append((by_uid[slot_uid[j]].priority,
+                            int((pool.table[j] >= 0).sum()), j))
+            return out
+
+        def preempt(j):
+            """Swap slot ``j`` out to host memory: gather its clustered
+            snapshot + tail-ring block payloads, release its blocks
+            (remembering (gid, generation) for re-adoption), park the
+            request on the swap backlog.  Bit-identity on resume comes
+            for free: each slot's state is a deterministic function of
+            its own token stream (per-slot compaction cadence), and the
+            swap round-trips that state exactly."""
+            nonlocal cache
+            uid = slot_uid[j]
+            r = by_uid[uid]
+            bt_read = pool.row_for_read(j)
+            snap, tails = self._swap_out(cache, jnp.int32(phys(j)),
+                                         jnp.asarray(bt_read))
+            snap, tails = jax.device_get((snap, tails))
+            held = pool.release_slot(j)
+            rec = SwapRecord(
+                uid=uid, priority=r.priority, pos=int(pos[j]),
+                cur=int(cur[j]), fed=int(fed[j]),
+                since_tok=int(since_tok[j]), cov=int(cov_of(j)),
+                max_new_tokens=r.max_new_tokens,
+                deadline_ms=r.deadline_ms, held=held, snap=snap,
+                tails=tails, epoch=self._store_epoch, seq=0,
+                n_blocks_swapped=len(held))
+            slo.record_swap(rec)
+            slo.swap_bytes += len(held) * paged.block_size * tail_bpt
+            active[j] = False
+            slot_uid[j] = -1
+            since_tok[j] = 0
+            return rec
+
+        def resume_swapped(j, rec) -> bool:
+            """Re-admit a parked request mid-stream into slot ``j``
+            (possibly a different slot/shard than it was preempted from
+            — the host payload is slot-agnostic).  Blocks that stayed
+            live with an unchanged generation re-adopt without a
+            re-upload; the rest re-allocate and scatter back from the
+            host copy.  False = the pool cannot back it right now
+            (caller defers the resume, nothing half-restored)."""
+            nonlocal cache
+            assert rec.epoch == self._store_epoch, (
+                "swap record from another config epoch — a parked "
+                "request cannot outlive the serve that preempted it")
+            # headroom gate: a resume that consumes the shard's last
+            # free blocks re-creates the very starvation that parked
+            # requests in the first place (the freed blocks bounce
+            # straight back and the engine thrashes swap-out/swap-in
+            # without decoding).  Only resume when the shard can absorb
+            # the re-upload AND still hand one write block to the
+            # resumed slot and each surviving active slot.
+            s = shard_of(j)
+            headroom = 1 + sum(1 for jj in range(n)
+                               if active[jj] and shard_of(jj) == s)
+            if pool.free_blocks(s) < len(rec.held) + headroom:
+                slo.deferrals += 1
+                return False
+            pool.free_slot(j)   # recycle any previous occupant's blocks
+            readopted = []
+            fresh = []
+            for bi, (gid, gen) in rec.held.items():
+                if pool.readopt(j, bi, gid, gen):
+                    readopted.append(bi)
+                else:
+                    fresh.append(bi)
+            if fresh and not try_ensure(j, fresh, []):
+                pool.free_slot(j)       # drop the re-adoptions too
+                slo.deferrals += 1
+                return False
+            slo.readopted_blocks += len(readopted)
+            slo.reuploaded_blocks += len(fresh)
+            ensure_row(j)
+            row = np.full(pool.blocks_per_slot, pool.n_blocks, np.int32)
+            for bi in fresh:
+                row[bi] = pool.table[j, bi]
+            snap, tails = rec.snap, rec.tails
+            if self._rules is not None:
+                snap = place_prefix_snapshot(snap, self._rules)
+                tails = place_swap_payload(tails, self._rules)
+            cache = self._swap_in(cache, snap, tails,
+                                  jnp.int32(phys(j)), jnp.asarray(row))
+            pos[j] = rec.pos
+            cur[j] = rec.cur
+            fed[j] = rec.fed
+            since_tok[j] = rec.since_tok
+            active[j] = True
+            slot_uid[j] = rec.uid
+            fr.set_frontier(j, rec.cov)
+            slo.pop_record(rec)
+            slo.swap_bytes -= rec.n_blocks_swapped * paged.block_size \
+                * tail_bpt
+            return True
+
+        def shed_active(j):
+            """Drop an in-flight best-effort request outright (partial
+            tokens already in ``toks`` are returned, blocks freed)."""
+            uid = slot_uid[j]
+            slo.shed_uid(uid, by_uid[uid].priority)
+            active[j] = False
+            admitting[j] = False
+            slot_uid[j] = -1
+            since_tok[j] = 0
+            pool.free_slot(j)
+
+        def brownout_shed() -> bool:
+            """Last brownout rung before PoolExhausted: shed best-effort
+            work so the engine regains forward progress.  Cheapest
+            first — a parked record (its blocks are already free), then
+            the unadmittable queue head, then an active slot.  Never
+            sheds the protected class: False means only high-class work
+            remains and the exhaustion is real."""
+            nonlocal qi
+            if not slo_cfg.shed_on_exhaustion:
+                return False
+            rec = slo.pick_shed()
+            if rec is not None:
+                slo.shed_record(rec)
+                slo.swap_bytes -= rec.n_blocks_swapped \
+                    * paged.block_size * tail_bpt
+                return True
+            if qi < len(order):
+                r = by_uid[order[qi]]
+                if not slo.is_high(r.priority):
+                    slo.shed_uid(r.uid, r.priority)
+                    qi += 1
+                    return True
+            v = slo.pick_victim(victim_candidates(), slo_cfg.high_class)
+            if v is not None:
+                shed_active(v)
+                return True
+            return False
+
+        def brownout_reclaim() -> bool:
+            """Zero-progress brownout: preempt the lowest-priority
+            active slot when a strictly-higher-priority one needs its
+            blocks (swap rung), else shed (final rung).  At zero
+            forward progress ONLY, within-class preemption is allowed
+            too: when every active slot is the same class and all are
+            block-starved, swapping the cheapest one out lets the rest
+            advance and it resumes bit-identically once capacity
+            returns — strictly better than raising on all of them.
+            (Needs >= 2 actives: swapping the only active would just
+            resume into the same wall.)"""
+            cands = victim_candidates()
+            if cands and slo.can_swap():
+                v = slo.pick_victim(cands, max(c[0] for c in cands))
+                within_class = v is None
+                if within_class and len(cands) >= 2:
+                    v = slo.pick_victim(cands,
+                                        max(c[0] for c in cands) + 1)
+                if v is not None:
+                    rec = preempt(v)
+                    # hold until real tokens decode again, else the
+                    # freed blocks bounce straight back (live-lock)
+                    rec.hold = within_class
+                    return True
+            return brownout_shed()
+
         # per-request candidate digests, hashed once (admission steering
         # re-consults the prefix maps every engine step while a request
         # queues — only the map lookups need repeating, not the hashing).
@@ -895,8 +1152,39 @@ class Server:
             # holding the longest matching prefix entry — block ids are
             # shard-local, so reuse can't cross shards); chunked mode
             # starts at most one in-flight prefill per shard
-            while qi < len(order):
+            while True:
+                # a parked (preempted) request resumes ahead of any
+                # fresh admission of equal or lower priority — it
+                # already paid its admission once
+                rec = slo.peek_resume() if slo is not None else None
+                if (rec is not None and qi < len(order)
+                        and by_uid[order[qi]].priority > rec.priority):
+                    rec = None
+                if rec is None and qi >= len(order):
+                    break
                 occ = occupancy()
+                if rec is not None:
+                    rcands = []
+                    for s in range(max(shards, 1)):
+                        slots = range(s * per_shard,
+                                      min((s + 1) * per_shard, n))
+                        free = [j for j in slots
+                                if not (active[j] or admitting[j])]
+                        if free:
+                            rcands.append((occ[s], s, free[0]))
+                    if rcands:
+                        if resume_swapped(min(rcands)[-1], rec):
+                            continue
+                        break   # pool-deferred resume: retry later
+                    # slot pressure on a resume: preempt a strictly
+                    # lower-priority active slot to make room
+                    v = (slo.pick_victim(victim_candidates(),
+                                         rec.priority)
+                         if slo.can_swap() else None)
+                    if v is not None:
+                        preempt(v)
+                        continue
+                    break
                 uid = order[qi]
                 p_next = (np.asarray(prompts[uid], np.int32)[-scfg.max_seq:]
                           if pcache is not None else None)
@@ -922,28 +1210,69 @@ class Server:
                                if store is not None else 0)
                         cands.append((occ[s], -match, -aff, s, free[0]))
                 if not cands:
+                    # slot pressure: a higher-priority head preempts
+                    # the cheapest strictly-lower-priority active slot
+                    # on an admissible shard (chunked mode: a shard
+                    # already feeding a prefill can't admit even with a
+                    # free slot, so its victims don't help)
+                    if slo is not None and slo.can_swap():
+                        adm = [s for s in range(max(shards, 1))
+                               if not (chunk and any(
+                                   admitting[j] for j in range(
+                                       s * per_shard,
+                                       min((s + 1) * per_shard, n))))]
+                        v = slo.pick_victim(
+                            [c for c in victim_candidates()
+                             if shard_of(c[2]) in adm],
+                            by_uid[uid].priority)
+                        if v is not None:
+                            preempt(v)
+                            continue
                     break
                 j = min(cands)[-1]
-                if chunk:
-                    if start_admission(j, uid):
-                        qi += 1
-                    else:
-                        break   # pool-deferred: retry after a give-back
-                elif admit_blocking(j, uid):
+                ok = (start_admission(j, uid) if chunk
+                      else admit_blocking(j, uid))
+                if ok:
                     qi += 1
-                else:
-                    break   # pool-deferred: retry after the give-back
+                    continue
+                # pool-deferred admission: count it, then walk the
+                # brownout ladder — shed a best-effort request already
+                # past its TTFT deadline (it can no longer meet its
+                # SLO; its blocks serve requests that still can), or
+                # preempt a lower-priority slot on the target shard
+                if slo is not None:
+                    slo.deferrals += 1
+                    r = by_uid[uid]
+                    if (not slo.is_high(r.priority)
+                            and r.deadline_ms > 0
+                            and (time.perf_counter() - t0_serve) * 1e3
+                            > r.deadline_ms):
+                        slo.shed_uid(uid, r.priority)
+                        qi += 1
+                        continue
+                    if slo.can_swap():
+                        v = slo.pick_victim(
+                            victim_candidates(shard_of(j)), r.priority)
+                        if v is not None:
+                            preempt(v)
+                            continue
+                break   # pool-deferred: retry after a give-back
 
             if not (active.any() or admitting.any()):
-                if qi >= len(order):
+                if qi >= len(order) and (slo is None
+                                         or slo.backlog_size() == 0):
                     break
-                # admission deferred on an idle engine: reclaim covered
-                # blocks + prefix-cache pins and retry; only a genuinely
-                # unservable request (nothing left to reclaim, nothing in
-                # flight to make progress) surfaces PoolExhausted
+                # admission (or a parked request's resume) deferred on
+                # an idle engine: reclaim covered blocks + prefix-cache
+                # pins and retry; then the brownout ladder sheds
+                # best-effort work; only a genuinely unservable
+                # protected request surfaces PoolExhausted
                 freed = reclaim_all()
                 idle_retries += 1
                 if idle_retries > 1 and freed == 0:
+                    if slo is not None and brownout_reclaim():
+                        idle_retries = 0
+                        continue
                     raise kv_pool.PoolExhausted(
                         "zero forward progress: an idle engine cannot "
                         "admit the next request even with every "
@@ -1001,6 +1330,7 @@ class Server:
             width = chunk if mixed else 1
             real_rows = int(active.sum()) + sum(step_chunks.values())
             stalled_decode = set()
+            stalled_admit = set()
             if pool is not None:
                 # paged packed launch: one row per real (slot, position)
                 # pair, padded per data shard to a power-of-two row bucket
@@ -1024,6 +1354,7 @@ class Server:
                                 int(fed[j]), step_chunks[j], R,
                                 paged.block_size), cow_pairs):
                             del step_chunks[j]
+                            stalled_admit.add(j)
                     elif active[j]:
                         if not try_ensure(j, kv_pool.write_blocks(
                                 int(pos[j]), 1, R, paged.block_size),
@@ -1035,6 +1366,10 @@ class Server:
                 width = chunk if mixed else 1
                 real_rows = (int(active.sum()) - len(stalled_decode)
                              + sum(step_chunks.values()))
+                if real_rows > 0 and slo is not None:
+                    # forward progress this step: records parked by a
+                    # zero-progress preemption become resumable again
+                    slo.clear_holds()
                 if real_rows == 0:
                     # every slot is pool-stalled: nothing can advance
                     # until blocks come back, and nothing is running to
@@ -1043,6 +1378,12 @@ class Server:
                     freed = reclaim_all()
                     stall_retries += 1
                     if stall_retries > 1 and freed == 0:
+                        # brownout ahead of the raise: swap out the
+                        # lowest-priority stalled slot so its blocks
+                        # unstick higher ones, else shed best-effort
+                        if slo is not None and brownout_reclaim():
+                            stall_retries = 0
+                            continue
                         raise kv_pool.PoolExhausted(
                             "zero forward progress: every slot's next "
                             "ring write needs a block and no block is "
@@ -1305,6 +1646,23 @@ class Server:
                     since_tok[j] = 0
                 n_compacts += 1
 
+            # ---- post-step priority pass -----------------------------
+            # a pool-stalled slot (decode or admission) whose priority
+            # strictly exceeds a neighbour's gets that neighbour's
+            # blocks next step: swap the shard's cheapest lower-priority
+            # active slot out (one victim per shard per step — a clean
+            # boundary, every COW copy of this step already applied)
+            if slo is not None and (stalled_decode or stalled_admit):
+                for s in range(max(shards, 1)):
+                    sp = [by_uid[slot_uid[j]].priority
+                          for j in (stalled_decode | stalled_admit)
+                          if shard_of(j) == s]
+                    if not sp or not slo.can_swap():
+                        continue
+                    v = slo.pick_victim(victim_candidates(s), max(sp))
+                    if v is not None:
+                        preempt(v)
+
         if pcache is not None:
             if store is None:
                 # entries are a per-serve cache: release every pinned
@@ -1314,11 +1672,15 @@ class Server:
             else:
                 # persistent template store: entries and their pinned
                 # blocks survive the drain — the pool and the device
-                # cache hand back to the server for the next serve.
-                # Drain accounting weakens from allocated()==0 to
+                # cache park on the store (epoch-keyed, so any Server
+                # under the same epoch can adopt) with mirror attrs on
+                # the server for introspection.  Drain accounting
+                # weakens from allocated()==0 to
                 # allocated()==pinned_blocks(); anything beyond the
                 # pins is a leak and shows up in pool_blocks_end.
                 self._tmpl_pool, self._tmpl_cache = pool, cache
+                pcache.parked = (pool, cache, self._store_epoch,
+                                 max(shards, 1))
         wall = time.perf_counter() - t0_serve
         gen_total = sum(len(v) for v in toks.values())
         # each request's first token comes from prefill; tokens/s rates
@@ -1436,16 +1798,39 @@ class Server:
                         per_shard * R * tail_bpt),
                     "pool_occupancy_peak": 1.0,
                 })
+        if slo is not None:
+            # brownout ladder accounting (sched_shed_high must be 0:
+            # the protected class is never shed, only raised on)
+            self.last_stats.update(slo.stats())
         if shards > 1:
             self.last_stats["n_data_shards"] = float(shards)
             for s in range(shards):
                 self.last_stats[f"slot_waste_shard{s}"] = (
                     1.0 - shard_busy_steps[s] / (shard_steps * per_shard)
                     if shard_steps else 0.0)
-        return [Completion(uid=r.uid, tokens=toks[r.uid],
-                           prefill_ms=pre_ms[r.uid],
-                           decode_ms=dec_ms_tok * len(toks[r.uid]))
+        shed_uids = slo.shed_uids if slo is not None else ()
+        return [Completion(uid=r.uid, tokens=toks.get(r.uid, []),
+                           prefill_ms=pre_ms.get(r.uid, 0.0),
+                           decode_ms=dec_ms_tok
+                           * len(toks.get(r.uid, [])),
+                           shed=r.uid in shed_uids)
                 for r in requests]
+
+    @staticmethod
+    def _params_digest(params) -> str:
+        """Content hash of the parameter pytree: leaf paths, shapes,
+        dtypes, and raw bytes.  The template-store epoch stamps this
+        instead of ``id(params)`` so reloaded identical weights (a new
+        pytree object, same bytes) keep a warm store, while any real
+        weight change still invalidates every snapshot."""
+        h = hashlib.blake2b(digest_size=16)
+        flat, _ = jax.tree_util.tree_flatten_with_path(params)
+        for kp, leaf in flat:
+            arr = np.asarray(leaf)
+            h.update("/".join(_key_name(k) for k in kp).encode())
+            h.update(repr((arr.shape, str(arr.dtype))).encode())
+            h.update(arr.tobytes())
+        return h.hexdigest()
 
     @staticmethod
     def _tail_bytes_per_token(cache) -> int:
@@ -1632,6 +2017,69 @@ class Server:
         if "scan" in dst:
             out["scan"] = walk(dst["scan"], src["scan"], 1)
         return out
+
+    @staticmethod
+    def _gather_swap_tails(cache, bt_row):
+        """Swap-out gather: every clustered leaf's tail blocks for one
+        slot, in ring-block order.  ``bt_row`` is the slot's (T,)
+        read-sanitized table row (unmapped → shard base: those rows
+        gather alias garbage the cov/position masks already exclude, and
+        swap-in never scatters them back).  Non-clustered nodes yield
+        None — the swap protocol, like the prefix snapshot it extends,
+        is defined only for FrontierRetention (clustered) state."""
+        def leaf(node):
+            out = {}
+            for key in ("k_tail", "v_tail"):
+                p = node[key]
+                if p.ndim == 5:            # scan-stacked (L, nb, bs, H, Dh)
+                    out[key] = p[:, bt_row]
+                else:                      # (nb, bs, H, Dh)
+                    out[key] = p[bt_row]
+            return out
+
+        def walk(node):
+            if _is_clustered_kv(node):
+                return leaf(node)
+            if isinstance(node, dict):
+                return {k: walk(v) for k, v in node.items()}
+            if isinstance(node, list):
+                return [walk(v) for v in node]
+            return None
+
+        return walk(cache)
+
+    @staticmethod
+    def _scatter_swap_tails(cache, tails, bt_row):
+        """Swap-in scatter: write a resuming slot's host tail payloads
+        into its freshly-allocated pool blocks.  ``bt_row`` is (T,) with
+        ONLY fresh allocations holding real ids — re-adopted blocks and
+        never-mapped ring blocks point out of range (``n_blocks``) so
+        mode='drop' skips them: a re-adopted block may be shared
+        (ref > 1) and its device bytes provably equal the host copy
+        already, so writing it would violate the COW protocol for zero
+        information."""
+        def leaf(node, tl):
+            out = dict(node)
+            for key in ("k_tail", "v_tail"):
+                p = node[key]
+                if p.ndim == 5:
+                    out[key] = p.at[:, bt_row].set(
+                        tl[key].astype(p.dtype), mode="drop")
+                else:
+                    out[key] = p.at[bt_row].set(
+                        tl[key].astype(p.dtype), mode="drop")
+            return out
+
+        def walk(node, tl):
+            if _is_clustered_kv(node):
+                return leaf(node, tl)
+            if isinstance(node, dict):
+                return {k: walk(v, tl[k]) for k, v in node.items()}
+            if isinstance(node, list):
+                return [walk(v, t2) for v, t2 in zip(node, tl)]
+            return node
+
+        return walk(cache, tails)
 
     def _cow_impl(self, cache, src, dst):
         """Device half of copy-on-write (prefix sharing): copy pool

@@ -94,10 +94,18 @@ class TemplateStoreConfig:
     cost of an idle server, not just a transient within one stream.
     ``promote_after`` is the Mettu–Plaxton recurrence threshold: how
     many times an unmatched prompt family must be seen before its
-    digest is promoted to a cluster medoid."""
+    digest is promoted to a cluster medoid.  ``retire_after`` is the
+    recurrence-*decay* twin (0 = never retire): a medoid whose cluster
+    saw no member, hit, or registration for that many ``assign()``
+    ticks is pruned — a long-lived server sheds dead
+    ``TemplateCluster`` records instead of accumulating every template
+    family it ever met, the symmetric counterpart of promotion (mass
+    arriving makes a center; mass decaying unmakes it).  Unpromoted
+    family recurrence counts decay on the same clock."""
     max_entries: int = 32
     min_prefix: int = 0
     promote_after: int = 2
+    retire_after: int = 0
 
 
 @dataclasses.dataclass
@@ -110,6 +118,7 @@ class TemplateCluster:
     tokens_reused: int = 0    # prompt tokens members skipped
     prompt_tokens: int = 0    # total prompt tokens over members
     matched_tokens: int = 0   # matched boundary tokens at assignment
+    last_seen: int = 0        # assign-tick of last member/hit activity
 
     @property
     def cohesion(self) -> float:
@@ -136,9 +145,21 @@ class TemplateStore(PrefixCache):
         self.epoch: object = None
         self.invalidations = 0
         self._clusters: Dict[int, TemplateCluster] = {}
-        self._families: Dict[bytes, int] = {}    # digest -> recurrences
+        # digest -> (recurrences, last assign-tick seen)
+        self._families: Dict[bytes, Tuple[int, int]] = {}
         self._medoid_cid: Dict[bytes, int] = {}  # promoted digest -> cid
         self._next_cid = 0
+        self._tick = 0                 # assign() clock for retirement
+        self.clusters_retired = 0
+        # canonical warm-handoff slot: (pool, device cache, epoch,
+        # n_shards) parked by the server at end-of-serve.  Living on the
+        # STORE (not the Server) makes the epoch's content-hashed weight
+        # stamp meaningful — a brand-new Server over a reloaded pytree
+        # with identical bytes adopts the parked pool + cache and keeps
+        # every pin, instead of cold-binding on pool identity.  Adoption
+        # clears the slot eagerly (single ownership: an older server
+        # serving afterwards simply rebinds cold).
+        self.parked: Optional[tuple] = None
 
     @property
     def share(self) -> PrefixShareConfig:
@@ -182,6 +203,7 @@ class TemplateStore(PrefixCache):
         self._clusters.clear()
         self._families.clear()
         self._medoid_cid.clear()
+        self.parked = None
         self.invalidations += 1
 
     def pinned_blocks(self) -> int:
@@ -223,8 +245,37 @@ class TemplateStore(PrefixCache):
             self._next_cid += 1
             self._medoid_cid[dig] = cid
             self._clusters[cid] = TemplateCluster(cid=cid, medoid=dig,
-                                                  medoid_fed=fed)
+                                                  medoid_fed=fed,
+                                                  last_seen=self._tick)
+            self._families.pop(dig, None)
         return cid
+
+    def _touch(self, cid: int) -> None:
+        c = self._clusters.get(cid)
+        if c is not None:
+            c.last_seen = self._tick
+
+    def _retire(self) -> None:
+        """Recurrence-decay pruning (Mettu–Plaxton in reverse): drop
+        clusters idle for ``retire_after`` assign ticks and family
+        counts just as stale.  Entries of a retired cluster stay valid
+        (their snapshots/blocks are cluster-agnostic) but de-associate
+        — a later recurrence re-promotes from scratch, exactly like a
+        never-seen family."""
+        horizon = self._tick - self.tcfg.retire_after
+        dead = [cid for cid, c in self._clusters.items()
+                if c.last_seen < horizon]
+        for cid in dead:
+            c = self._clusters.pop(cid)
+            self._medoid_cid.pop(c.medoid, None)
+            for m in self._maps:
+                for e in m.values():
+                    if e.cluster == cid:
+                        e.cluster = -1
+            self.clusters_retired += 1
+        for dig in [d for d, (_, seen) in self._families.items()
+                    if seen < horizon]:
+            del self._families[dig]
 
     def assign(self, prompt: np.ndarray,
                digests: List[Tuple[int, bytes]]) -> int:
@@ -233,6 +284,9 @@ class TemplateStore(PrefixCache):
         longest first; unmatched prompts accrue family recurrences until
         medoid promotion.  Returns the cluster id, or -1 while the
         prompt's family is still below the promotion threshold."""
+        self._tick += 1
+        if self.tcfg.retire_after > 0:
+            self._retire()
         plen = len(prompt)
         for fed, dig in digests:
             for m in self._maps:
@@ -246,20 +300,22 @@ class TemplateStore(PrefixCache):
                     c.members += 1
                     c.matched_tokens += fed
                     c.prompt_tokens += plen
+                    c.last_seen = self._tick
                     return e.cluster
         if not digests:
             return -1
         fam_fed, fam_dig = digests[-1]   # shortest boundary = family key
         cid = self._medoid_cid.get(fam_dig)
         if cid is None:
-            seen = self._families.get(fam_dig, 0) + 1
-            self._families[fam_dig] = seen
+            seen = self._families.get(fam_dig, (0, 0))[0] + 1
+            self._families[fam_dig] = (seen, self._tick)
             if seen < self.tcfg.promote_after:
                 return -1
             cid = self._promote(fam_dig, fam_fed)
         c = self._clusters[cid]
         c.members += 1
         c.prompt_tokens += plen
+        c.last_seen = self._tick
         return cid
 
     def shard_affinity(self, shard: int, cid: int) -> int:
@@ -280,6 +336,7 @@ class TemplateStore(PrefixCache):
             if c is not None:
                 c.hits += 1
                 c.tokens_reused += e.fed
+                c.last_seen = self._tick
         return e
 
     # ------------------------------------------------------------------
@@ -313,6 +370,7 @@ class TemplateStore(PrefixCache):
             "template_hits_total": float(self.hits),
             "template_tokens_reused_total": float(self.tokens_reused),
             "template_clusters": float(len(live)),
+            "template_clusters_retired": float(self.clusters_retired),
             "template_cohesion_mean": (float(np.mean(coh)) if coh
                                        else 0.0),
         }

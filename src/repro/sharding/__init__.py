@@ -4,5 +4,6 @@ from repro.sharding.rules import (Rules, admission_spec, annotate,
                                   current_rules, default_table, param_spec,
                                   place_admission, place_block_tables,
                                   place_prefix_snapshot,
+                                  place_swap_payload,
                                   shard_cache, shardings_from_specs,
                                   tree_param_specs, use_rules)  # noqa: F401

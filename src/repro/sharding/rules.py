@@ -371,6 +371,31 @@ def place_prefix_snapshot(snap, rules: Rules):
     return jax.tree_util.tree_unflatten(treedef, placed)
 
 
+def place_swap_payload(payload, rules: Rules):
+    """Mesh placement for a swapped-out slot's host round-trip at resume
+    time (runtime/scheduler.py): the clustered snapshot plus the
+    gathered tail-ring block payloads.
+
+    Tail payload leaves are ``(n_mapped_blocks, block_size, H, Dh)``
+    (or layer-stacked with one extra leading axis) — the leading block
+    axis indexes the *specific* blocks being scattered back, which land
+    on whatever data shard the resuming slot lives on, so it cannot
+    shard over ``data`` (same one-device-assignment argument as the B=1
+    admission path).  Head dims shard over ``model`` exactly like
+    ``admission_spec``, so the resume transfer costs ``1/model``-th of
+    the payload per device — and a resume may land on a *different*
+    shard than the swap-out (the payload is slot- and shard-agnostic
+    host bytes; only pool block ids are shard-local, and those are
+    re-allocated at resume)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(payload)
+    placed = [
+        jax.device_put(leaf, NamedSharding(
+            rules.mesh, admission_spec(_leaf_path(kp), leaf.shape, rules)))
+        for kp, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, placed)
+
+
 def place_admission(cache, rules: Rules):
     """Place a B=1 admission-prefill cache on the mesh with
     ``admission_spec`` layouts (model-sharded heads, minimal replication)

@@ -764,3 +764,174 @@ class TestGradCompressProperties:
         idx2 = jnp.argmin(d, axis=1).astype(jnp.uint8).reshape(g.shape)
         g2 = grad_compress.dequantize_tensor(idx2, cents)
         np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2))
+
+
+class TestSchedulerSwapProperties:
+    """Preempt / swap / resume / shed state machine over the real
+    BlockPool + SLOScheduler (no device arrays): whatever order the
+    brownout ladder fires in, the pool must conserve blocks — every
+    allocated block is mapped by exactly one active slot, parked
+    requests hold zero device blocks (their payload is host-side), a
+    resume re-adopts a block only if its (gid, generation) provably
+    survived, and the protected class is never shed."""
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 2), st.sampled_from([4, 8]),
+           st.lists(st.tuples(st.integers(0, 3), st.integers(0, 4),
+                              st.sampled_from(["admit", "decode", "preempt",
+                                               "resume", "shed_active",
+                                               "shed_parked"])),
+                    min_size=1, max_size=60),
+           st.integers(0, 10_000))
+    def test_preempt_swap_resume_shed_conserve_pool(self, shards, bsz,
+                                                    ops, seed):
+        from repro.runtime import kv_pool
+        from repro.runtime.scheduler import SLOConfig, SLOScheduler
+
+        rng = np.random.default_rng(seed)
+        R = 16
+        n_slots = 3 * shards
+        pool = kv_pool.BlockPool(
+            n_slots, R, kv_pool.PagedKVConfig(block_size=bsz),
+            n_shards=shards, slots_per_shard=3)
+        slo = SLOScheduler(SLOConfig(), n_slots)
+        occupant = {}          # slot -> (uid, priority)
+        t_of = np.zeros(n_slots, np.int64)
+        next_uid = 0
+        n_shed_parked = 0
+
+        def mapped(slot):
+            return int((pool.table[slot] >= 0).sum())
+
+        def conserve():
+            pool.check_invariants()
+            # active slots own every allocated block; parked own none
+            assert pool.allocated() == sum(mapped(s) for s in occupant)
+            for s in range(n_slots):
+                if s not in occupant:
+                    assert mapped(s) == 0, s
+
+        for slot_raw, arg, op in ops:
+            slot = (slot_raw * shards) % n_slots
+            if op == "admit" and slot not in occupant:
+                prio = int(arg % 2)
+                try:
+                    for b in kv_pool.write_blocks(0, 1 + arg, R, bsz):
+                        pool.alloc(slot, b)
+                except kv_pool.PoolExhausted:
+                    pool.free_slot(slot)
+                else:
+                    occupant[slot] = (next_uid, prio)
+                    t_of[slot] = 1 + arg
+                    next_uid += 1
+            elif op == "decode" and slot in occupant:
+                try:
+                    for b in kv_pool.write_blocks(int(t_of[slot]), 1, R,
+                                                  bsz):
+                        pool.alloc(slot, b)
+                except kv_pool.PoolExhausted:
+                    pass
+                else:
+                    t_of[slot] += 1
+            elif op == "preempt" and occupant:
+                # the engine preempts via pick_victim over the actives
+                cands = [(p, mapped(s), s)
+                         for s, (_, p) in occupant.items()]
+                v = slo.pick_victim(cands,
+                                    max(c[0] for c in cands) + 1)
+                uid, prio = occupant.pop(v)
+                held = pool.release_slot(v)
+                from repro.runtime.scheduler import SwapRecord
+                rec = SwapRecord(uid=uid, priority=prio,
+                                 pos=int(t_of[v]), cur=0, fed=0,
+                                 since_tok=0, cov=0, max_new_tokens=4,
+                                 deadline_ms=0.0, held=held, snap=None,
+                                 tails=None, epoch=0, seq=0,
+                                 n_blocks_swapped=len(held))
+                slo.record_swap(rec)
+            elif op == "resume" and slo.backlog_size() > 0:
+                free = [s for s in range(n_slots) if s not in occupant]
+                rec = slo.peek_resume()
+                if free and rec is not None:
+                    slot = free[arg % len(free)]
+                    ok = True
+                    for bi, (gid, gen) in rec.held.items():
+                        if not pool.readopt(slot, bi, gid, gen):
+                            try:
+                                pool.alloc(slot, bi)
+                            except kv_pool.PoolExhausted:
+                                ok = False
+                                break
+                    if not ok:
+                        pool.free_slot(slot)   # defer: nothing half-done
+                    else:
+                        # release_slot bumps gen when ref hits 0, so a
+                        # re-adoption here can only be a block a co-owner
+                        # kept live; either way every held index is now
+                        # mapped on the new slot
+                        assert all(pool.table[slot, bi] >= 0
+                                   for bi in rec.held)
+                        occupant[slot] = (rec.uid, rec.priority)
+                        t_of[slot] = rec.pos
+                        slo.pop_record(rec)
+            elif op == "shed_active" and occupant:
+                lows = [(p, s) for s, (_, p) in occupant.items()
+                        if not slo.is_high(p)]
+                if lows:
+                    _, v = min(lows)
+                    uid, prio = occupant.pop(v)
+                    slo.shed_uid(uid, prio)
+                    pool.free_slot(v)
+            elif op == "shed_parked":
+                rec = slo.pick_shed()
+                if rec is not None:
+                    slo.shed_record(rec)
+                    n_shed_parked += 1
+            conserve()
+
+        # protected class never shed, ladder accounting conserved:
+        # every swap-out either swapped back in, is still parked, or
+        # was shed from the backlog — no request vanishes
+        assert slo.shed_high == 0
+        assert slo.shed_uids <= set(range(next_uid))
+        parked = {r.uid for r in slo._backlog}
+        assert slo.shed_uids.isdisjoint(
+            {u for u, _ in occupant.values()} | parked)
+        assert slo.swaps_out == (slo.swaps_in + slo.backlog_size()
+                                 + n_shed_parked)
+        # drain: every remaining mapping freed -> pool fully restored
+        for s in list(occupant):
+            pool.free_slot(s)
+        pool.check_invariants()
+        assert pool.allocated() == 0
+        assert (pool.table == -1).all()
+
+    def test_readopt_rejects_recycled_block(self):
+        """A released block that was re-allocated (generation bumped)
+        must NOT re-adopt — the device bytes no longer match the host
+        copy, so the resume has to re-upload instead."""
+        from repro.runtime import kv_pool
+        pool = kv_pool.BlockPool(2, 16, kv_pool.PagedKVConfig(block_size=4))
+        pool.alloc(0, 0)
+        held = pool.release_slot(0)
+        (gid, gen), = held.values()
+        # the release itself bumped the generation (ref hit 0): even an
+        # UN-recycled free-list block refuses — a fresh alloc may
+        # overwrite it at any time, so identity is unprovable
+        assert not pool.readopt(0, 0, gid, gen)
+        assert pool.table[0, 0] == -1               # nothing half-adopted
+        # the fast path that DOES re-adopt: the block stayed live the
+        # whole time because a second owner (prefix sharing / pin) held
+        # it — ref never hit zero, generation never moved
+        g2 = pool.alloc(0, 0)
+        pool.retain(g2)                             # simulated co-owner
+        held2 = pool.release_slot(0)
+        (gid2, gen2), = held2.values()
+        assert pool.ref[gid2] == 1                  # co-owner keeps it live
+        assert pool.readopt(0, 0, gid2, gen2)
+        assert pool.table[0, 0] == gid2
+        assert pool.ref[gid2] == 2
+        pool.free_block(0, 0)                       # drop the mapping
+        pool.release(gid2)                          # co-owner lets go
+        pool.check_invariants()
+        assert pool.allocated() == 0

@@ -1,0 +1,298 @@
+"""SLO-aware scheduling (runtime/scheduler.py + engine integration).
+
+Unit level: victim selection (strictly-lower priority, cheapest =
+fewest mapped blocks), backlog ordering (priority then swap-out FIFO,
+holds respected), shed eligibility (protected class refuses), and the
+priority-aware batch planner.  Engine level: preempting a best-effort
+slot to host memory and resuming it mid-stream must be
+schedule-invisible — greedy tokens bit-identical to an uninterrupted
+big-pool run — in chunked and blocking admission, and overload must
+brown out (defer → preempt → shed best-effort) instead of raising
+``PoolExhausted`` while the protected class completes untouched.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import kv_compress
+from repro.core.request_cluster import Request, plan_batches
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.runtime.kv_pool import PagedKVConfig
+from repro.runtime.scheduler import SLOConfig, SLOScheduler, SwapRecord
+from repro.runtime.server import Server, ServerConfig
+
+TINY = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                   n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab=64,
+                   pad_vocab_multiple=16, dtype="float32")
+CCFG = kv_compress.KVCompressConfig(n_clusters=8, iters=4, keep_recent=16,
+                                    refresh_every=8)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return tfm.init_params(jax.random.PRNGKey(0), TINY)
+
+
+def _mixed_stream(n=8, n_high=3, seed=3, vocab=64):
+    """FIFO-order stream with the high-priority tail: best-effort
+    requests arrive first and occupy every slot, so the late
+    interactive arrivals can only be served by preempting them."""
+    rng = np.random.default_rng(seed)
+    reqs, prompts = [], {}
+    for i in range(n):
+        plen = int(rng.integers(6, 30))
+        prompts[i] = rng.integers(0, vocab, size=(plen,)).astype(np.int32)
+        reqs.append(Request(i, plen, int(rng.integers(6, 14)),
+                            priority=1 if i >= n - n_high else 0))
+    return reqs, prompts
+
+
+def _serve(scfg, params, reqs, prompts):
+    srv = Server(TINY, scfg, params)
+    outs = srv.serve(reqs, prompts)
+    return {o.uid: o for o in outs}, srv.last_stats
+
+
+# ---------------------------------------------------------------------------
+# unit: SLOScheduler policy
+# ---------------------------------------------------------------------------
+
+
+def _rec(uid, priority, seq=0, n_blocks=1, hold=False):
+    return SwapRecord(uid=uid, priority=priority, pos=4, cur=1, fed=4,
+                      since_tok=0, cov=0, max_new_tokens=4, deadline_ms=0.0,
+                      held={0: (uid, 0)}, snap=None, tails=None, epoch=0,
+                      seq=seq, n_blocks_swapped=n_blocks, hold=hold)
+
+
+class TestSLOSchedulerUnit:
+
+    def test_pick_victim_strictly_lower_and_cheapest(self):
+        slo = SLOScheduler(SLOConfig(), 4)
+        cands = [(0, 3, 0), (0, 1, 1), (1, 0, 2)]
+        # cheapest among strictly-lower classes: fewest mapped blocks
+        assert slo.pick_victim(cands, 1) == 1
+        # nothing strictly below the lowest class
+        assert slo.pick_victim(cands, 0) is None
+        # within-class never picked unless the caller raises the bar
+        assert slo.pick_victim([(1, 2, 0), (1, 1, 3)], 1) is None
+        assert slo.pick_victim([(1, 2, 0), (1, 1, 3)], 2) == 3
+        assert slo.pick_victim([], 5) is None
+
+    def test_backlog_resume_order_and_holds(self):
+        slo = SLOScheduler(SLOConfig(), 4)
+        a, b, c = _rec(0, 0), _rec(1, 1), _rec(2, 1)
+        for r in (a, b, c):
+            slo.record_swap(r)
+        # highest class first, FIFO within the class
+        assert slo.peek_resume() is b
+        b.hold = True
+        assert slo.peek_resume() is c          # held records are skipped
+        c.hold = True
+        assert slo.peek_resume() is a
+        a.hold = True
+        assert slo.peek_resume() is None
+        slo.clear_holds()                      # forward progress happened
+        assert slo.peek_resume() is b
+        slo.pop_record(b)
+        assert slo.peek_resume() is c
+        assert slo.swaps_in == 1
+        assert slo.backlog_size() == 2
+
+    def test_swap_cap_defaults_to_slot_count(self):
+        slo = SLOScheduler(SLOConfig(), 2)
+        assert slo.can_swap()
+        slo.record_swap(_rec(0, 0))
+        slo.record_swap(_rec(1, 0))
+        assert not slo.can_swap()
+        assert SLOScheduler(SLOConfig(max_swapped=5), 2).max_swapped == 5
+
+    def test_shed_protects_high_class(self):
+        slo = SLOScheduler(SLOConfig(high_class=1), 4)
+        lo, hi = _rec(0, 0), _rec(1, 2)
+        slo.record_swap(lo)
+        slo.record_swap(hi)
+        assert slo.pick_shed() is lo           # never offers the high one
+        with pytest.raises(RuntimeError):
+            slo.shed_record(hi)
+        with pytest.raises(RuntimeError):
+            slo.shed_uid(9, 1)
+        slo.shed_record(lo)
+        assert slo.pick_shed() is None         # only protected work parked
+        assert slo.shed_uids == {0}
+        assert slo.shed_high == 0
+
+    def test_shed_lifo_within_class(self):
+        # the longest-parked equal has the best claim on resuming, so
+        # the most recently parked one sheds first
+        slo = SLOScheduler(SLOConfig(), 4)
+        first, second = _rec(0, 0), _rec(1, 0)
+        slo.record_swap(first)
+        slo.record_swap(second)
+        assert slo.pick_shed() is second
+
+    def test_stats_keys_complete(self):
+        st = SLOScheduler(SLOConfig(), 2).stats()
+        for k in ("sched_deferrals", "sched_preemptions", "sched_swaps_out",
+                  "sched_swaps_in", "sched_sheds", "sched_shed_high",
+                  "sched_swapped_peak_blocks", "sched_readopted_blocks",
+                  "sched_reuploaded_blocks", "sched_swap_bytes",
+                  "sched_backlog_end"):
+            assert st[k] == 0.0
+
+
+class TestPriorityPlanning:
+
+    def test_plan_batches_orders_classes(self):
+        reqs = [Request(i, 10 + i, 4, priority=i % 3) for i in range(9)]
+        plan = plan_batches(reqs, batch_size=2, n_clusters=2, seed=0)
+        by_uid = {r.uid: r.priority for r in reqs}
+        prios = [max(by_uid[u] for u in b) for b in plan.batches]
+        # every batch is single-class and classes appear high→low
+        for b in plan.batches:
+            assert len({by_uid[u] for u in b}) == 1
+        assert prios == sorted(prios, reverse=True)
+        assert sorted(u for b in plan.batches for u in b) == list(range(9))
+
+    def test_single_class_plan_unchanged(self):
+        reqs = [Request(i, 10 + 3 * i, 4) for i in range(6)]
+        base = plan_batches(reqs, batch_size=2, n_clusters=2, seed=0)
+        tagged = [Request(i, 10 + 3 * i, 4, priority=5) for i in range(6)]
+        same = plan_batches(tagged, batch_size=2, n_clusters=2, seed=0)
+        assert base.batches == same.batches
+
+
+# ---------------------------------------------------------------------------
+# engine: preemption is schedule-invisible
+# ---------------------------------------------------------------------------
+
+
+class TestEnginePreemption:
+
+    def _ref(self, params, reqs, prompts, chunk):
+        outs, _ = _serve(ServerConfig(
+            batch_size=2, max_seq=96, kv_compress=CCFG,
+            prefill_chunk=chunk,
+            paged=PagedKVConfig(block_size=4, pool_blocks=48),
+            use_clustered_batching=False), params, reqs, prompts)
+        return {u: o.tokens for u, o in outs.items()}
+
+    @pytest.mark.parametrize("chunk", [8, 0], ids=["chunked", "blocking"])
+    def test_preempt_swap_resume_bit_identical(self, params, chunk):
+        """Tight pool + late-arriving high-priority requests: the engine
+        must preempt best-effort slots to host memory and resume them,
+        with every completed request's greedy tokens bit-identical to an
+        uninterrupted big-pool run (mid-stream compaction in play)."""
+        reqs, prompts = _mixed_stream()
+        ref = self._ref(params, reqs, prompts, chunk)
+        outs, st = _serve(ServerConfig(
+            batch_size=2, max_seq=96, kv_compress=CCFG,
+            prefill_chunk=chunk,
+            paged=PagedKVConfig(block_size=4, pool_blocks=10),
+            use_clustered_batching=False,
+            # arrival-order admission: priority must act through
+            # preemption alone (the path this test pins)
+            scheduler=SLOConfig(priority_admission=False)),
+            params, reqs, prompts)
+        assert st["sched_preemptions"] >= 1.0      # really preempted
+        assert st["sched_swaps_in"] >= 1.0         # ... and resumed
+        assert st["sched_shed_high"] == 0.0
+        assert sorted(outs) == sorted(r.uid for r in reqs)
+        for uid, o in outs.items():
+            if o.shed:
+                assert not (uid >= 5)              # only best-effort sheds
+                continue
+            assert o.tokens == ref[uid], uid
+        # protected class always completes in full
+        for r in reqs:
+            if r.priority >= 1:
+                assert not outs[r.uid].shed
+                assert len(outs[r.uid].tokens) == r.max_new_tokens
+
+    def test_overload_browns_out_instead_of_raising(self, params):
+        """A pool far too small for the offered load must shed
+        best-effort work (partial tokens, ``shed`` flag) rather than
+        raise PoolExhausted, and still complete every protected
+        request bit-identically."""
+        reqs, prompts = _mixed_stream(n=10, n_high=3, seed=5)
+        ref = self._ref(params, reqs, prompts, 8)
+        outs, st = _serve(ServerConfig(
+            batch_size=4, max_seq=96, kv_compress=CCFG, prefill_chunk=8,
+            paged=PagedKVConfig(block_size=4, pool_blocks=9),
+            use_clustered_batching=False,
+            scheduler=SLOConfig(priority_admission=False)),
+            params, reqs, prompts)
+        assert st["sched_shed_high"] == 0.0
+        for r in reqs:
+            o = outs[r.uid]
+            if r.priority >= 1:
+                assert not o.shed
+                assert o.tokens == ref[r.uid]
+            elif not o.shed:
+                assert o.tokens == ref[r.uid]
+
+    def test_priority_admission_orders_protected_first(self, params):
+        """Default admission control: the protected class admits ahead
+        of the best-effort backlog it arrived behind, so every
+        protected TTFT beats every best-effort TTFT — and tokens stay
+        bit-identical to the unpressured run (ordering moves waiting
+        around, never token streams)."""
+        reqs, prompts = _mixed_stream()
+        ref = self._ref(params, reqs, prompts, 8)
+        outs, st = _serve(ServerConfig(
+            batch_size=2, max_seq=96, kv_compress=CCFG, prefill_chunk=8,
+            paged=PagedKVConfig(block_size=4, pool_blocks=10),
+            use_clustered_batching=False,
+            scheduler=SLOConfig()), params, reqs, prompts)
+        assert st["sched_shed_high"] == 0.0
+        prio = {r.uid: r.priority for r in reqs}
+        hi = [o.prefill_ms for o in outs.values() if prio[o.uid] >= 1]
+        lo = [o.prefill_ms for o in outs.values()
+              if prio[o.uid] == 0 and not o.shed]
+        assert hi and lo and max(hi) < min(lo)
+        for uid, o in outs.items():
+            if not o.shed:
+                assert o.tokens == ref[uid], uid
+
+    def test_deadline_shed_only_best_effort(self, params):
+        """An expired best-effort TTFT deadline sheds the request at its
+        next failed admission; protected requests never deadline-shed."""
+        rng = np.random.default_rng(11)
+        reqs, prompts = [], {}
+        for i in range(8):
+            plen = int(rng.integers(12, 30))
+            prompts[i] = rng.integers(0, 64, size=(plen,)).astype(np.int32)
+            # ancient deadline on the best-effort tail: any admission
+            # failure sheds it immediately
+            reqs.append(Request(i, plen, 8,
+                                priority=1 if i < 2 else 0,
+                                deadline_ms=0.0 if i < 2 else 1e-6))
+        outs, st = _serve(ServerConfig(
+            batch_size=2, max_seq=96, kv_compress=CCFG, prefill_chunk=8,
+            paged=PagedKVConfig(block_size=4, pool_blocks=8),
+            use_clustered_batching=False,
+            scheduler=SLOConfig(priority_admission=False)),
+            params, reqs, prompts)
+        assert st["sched_shed_high"] == 0.0
+        for r in reqs:
+            if r.priority >= 1:
+                assert not outs[r.uid].shed
+
+    def test_scheduler_requires_paged_clustered_continuous(self, params):
+        with pytest.raises(ValueError):
+            Server(TINY, ServerConfig(batch_size=2, max_seq=64,
+                                      scheduler=SLOConfig()), params)
+        with pytest.raises(ValueError):
+            Server(TINY, ServerConfig(
+                batch_size=2, max_seq=64, kv_compress=CCFG,
+                scheduler=SLOConfig()), params)
+
+    def test_no_scheduler_stats_absent(self, params):
+        reqs, prompts = _mixed_stream(n=3, n_high=0)
+        _, st = _serve(ServerConfig(
+            batch_size=2, max_seq=96, kv_compress=CCFG, prefill_chunk=8,
+            paged=PagedKVConfig(block_size=4)), params, reqs, prompts)
+        assert "sched_preemptions" not in st

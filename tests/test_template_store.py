@@ -269,3 +269,100 @@ class TestTemplateStoreUnit:
         assert store.assign(p, d) == cid             # sticky
         stats = store.stats()
         assert stats["template_clusters"] == 1.0
+
+
+class TestContentHashEpoch:
+
+    def test_same_bytes_new_pytree_keeps_pins(self, params):
+        """Epoch regression: the params component of the store epoch is
+        a CONTENT hash, not object identity — a rebuilt pytree with
+        byte-identical weights (a reloaded checkpoint, a device
+        round-trip) must warm-bind and keep every pinned block.  (The
+        different-PRNGKey test above still proves different bytes DO
+        invalidate.)"""
+        reqs1, prompts1 = _stream(sfx_seed=11)
+        reqs2, prompts2 = _stream(sfx_seed=13)
+        cold = Server(TINY, ServerConfig(**SCFG), params)
+        ref2 = {o.uid: o.tokens for o in cold.serve(reqs2, prompts2)}
+
+        store = TemplateStore(TemplateStoreConfig())
+        srv1 = Server(TINY, ServerConfig(template_store=store, **SCFG),
+                      params)
+        srv1.serve(reqs1, prompts1)
+        assert store.pinned_blocks() > 0
+        inval0 = store.invalidations
+
+        # fresh leaves, identical bytes: id() differs on every array
+        params_copy = jax.tree_util.tree_map(
+            lambda x: jax.numpy.array(np.asarray(x)), params)
+        assert all(a is not b for a, b in zip(
+            jax.tree_util.tree_leaves(params),
+            jax.tree_util.tree_leaves(params_copy)))
+        srv2 = Server(TINY, ServerConfig(template_store=store, **SCFG),
+                      params_copy)
+        outs = srv2.serve(reqs2, prompts2)
+        assert store.invalidations == inval0       # warm bind, pins kept
+        assert srv2.last_stats["prefix_hits"] > 0  # the reuse is real
+        for o in outs:
+            assert o.tokens == ref2[o.uid], o.uid
+
+
+class TestMedoidRetirement:
+
+    def test_recurrence_decay_retires_dead_clusters(self):
+        """A medoid whose cluster sees no member/hit/registration for
+        ``retire_after`` assign ticks is pruned; its entries
+        de-associate (cluster -> -1) but keep their blocks; a later
+        recurrence of the same family re-promotes from scratch."""
+        pool = BlockPool(2, 16, PagedKVConfig(block_size=4,
+                                              pool_blocks=16))
+        store = TemplateStore(TemplateStoreConfig(promote_after=2,
+                                                  retire_after=4))
+        store.bind("epoch", 1, pool)
+        p = np.arange(10, dtype=np.int32)
+        digA, digB = [(8, b"A")], [(8, b"B")]
+        assert store.assign(p, digA) == -1         # family below threshold
+        cid_a = store.assign(p, digA)              # promoted
+        assert cid_a >= 0
+        # give A a registered entry so de-association is observable
+        TestTemplateStoreUnit._registered(store, pool, 0, p, 8)
+        entry = next(iter(store._maps[0].values()))
+        entry.cluster = cid_a
+        # B stays active while A idles past the horizon
+        for _ in range(6):
+            store.assign(p, digB)
+        assert cid_a not in store._clusters        # A retired
+        assert store.clusters_retired == 1
+        assert store.stats()["template_clusters_retired"] == 1.0
+        assert entry.cluster == -1                 # entry de-associated
+        assert store.pinned_blocks() > 0           # ... blocks untouched
+        # the B cluster survived (it kept recurring)
+        assert any(c.medoid == b"B" for c in store._clusters.values())
+        # A's family restarts cold: promotion threshold applies again
+        assert store.assign(p, digA) == -1
+        cid_a2 = store.assign(p, digA)
+        assert cid_a2 >= 0 and cid_a2 != cid_a
+
+    def test_stale_family_counts_decay(self):
+        """Unpromoted family recurrences expire on the same clock, so a
+        slow drip of once-seen prompts cannot grow _families without
+        bound (nor promote via ancient sightings)."""
+        store = TemplateStore(TemplateStoreConfig(promote_after=2,
+                                                  retire_after=3))
+        p = np.arange(10, dtype=np.int32)
+        store.assign(p, [(8, b"X")])               # X seen once
+        for i in range(5):                         # unrelated traffic
+            store.assign(p, [(8, bytes([i]))])
+        assert b"X" not in store._families         # decayed, not counted
+        # a fresh sighting starts over at 1 -> still below threshold
+        assert store.assign(p, [(8, b"X")]) == -1
+
+    def test_retire_disabled_by_default(self):
+        store = TemplateStore(TemplateStoreConfig(promote_after=1))
+        p = np.arange(10, dtype=np.int32)
+        cid = store.assign(p, [(8, b"A")])
+        assert cid >= 0
+        for i in range(200):
+            store.assign(p, [(8, bytes([i % 250]))])
+        assert cid in store._clusters              # never retired
+        assert store.clusters_retired == 0
