@@ -640,7 +640,8 @@ def prefix_share_bench(quick=False, seed=7, mesh_spec=None,
 
 
 def template_store_bench(quick=False, seed=7, mesh_spec=None,
-                         json_out="artifacts/serve_bench.json"):
+                         json_out="artifacts/serve_bench.json",
+                         trace_out=None):
     """Repeat-serve templated traffic on the persistent template store
     (runtime/template_store.py): one server, two bursts sharing a
     template but with fresh suffixes.  Serve #1 fills the store (and
@@ -650,13 +651,18 @@ def template_store_bench(quick=False, seed=7, mesh_spec=None,
     serve #1's.  A cold-store server serves burst #2 for the
     bit-identity reference (persistence only skips recomputation, never
     changes tokens).  Store traffic-cluster stats (cohesion, hit rate,
-    bytes pinned) ride along in the records."""
+    bytes pinned) ride along in the records.  The store server runs with
+    lifecycle tracing ON while the cold reference stays untraced, so the
+    tokens_identical check doubles as the tracing-is-schedule-invisible
+    acceptance; ``trace_out`` writes its Chrome trace (Perfetto-loadable)
+    there."""
     from repro.kernels.ops import interpret_default
     from repro.launch.mesh import make_serving_mesh
     from repro.models import transformer as tfm
     from repro.models.config import ModelConfig
     from repro.runtime.kv_pool import PagedKVConfig
     from repro.runtime.server import Server, ServerConfig
+    from repro.runtime.telemetry import TelemetryConfig, phase_breakdown
     from repro.runtime.template_store import TemplateStoreConfig
 
     SMALL = ModelConfig(name="serve-lm", family="dense", n_layers=2,
@@ -691,7 +697,7 @@ def template_store_bench(quick=False, seed=7, mesh_spec=None,
     pcfg = PagedKVConfig(block_size=4, pool_blocks=48)
     mesh = make_serving_mesh(mesh_spec) if mesh_spec else None
 
-    def scfg(store, use_mesh):
+    def scfg(store, use_mesh, trace=False):
         # max_entries=2: single-template traffic hits one boundary; a
         # tight cap bounds the standing pinned-block cost (≤ 2 ring
         # windows per shard) well inside the pool's surplus
@@ -700,6 +706,7 @@ def template_store_bench(quick=False, seed=7, mesh_spec=None,
             prefill_chunk=chunk, paged=pcfg,
             template_store=(TemplateStoreConfig(max_entries=2)
                             if store else None),
+            telemetry=TelemetryConfig(trace=True) if trace else None,
             mesh=mesh if use_mesh else None)
 
     probe = [Request(10_000 + i, l, g)
@@ -719,7 +726,7 @@ def template_store_bench(quick=False, seed=7, mesh_spec=None,
         wall_cold = time.perf_counter() - t0
         st_cold = {k: float(v) for k, v in cold.last_stats.items()}
 
-        srv = Server(SMALL, scfg(True, use_mesh), params)
+        srv = Server(SMALL, scfg(True, use_mesh, trace=True), params)
         srv.serve(probe, probe_prompts)
         serves = []
         for reqs, prompts in [(reqs1, prompts1), (reqs2, prompts2)]:
@@ -730,6 +737,13 @@ def template_store_bench(quick=False, seed=7, mesh_spec=None,
                             srv.last_stats.items()},
                            {o.uid: o.tokens for o in outs}))
         (wall1, st1, _toks1), (wall2, st2, toks2) = serves
+        # phase breakdown + trace export come from the warm serve (#2),
+        # the one whose prefix-hit fast path the scenario exists to show
+        phase_ms = phase_breakdown(srv.last_trace)
+        if trace_out:
+            os.makedirs(trace_out, exist_ok=True)
+            srv.export_trace(os.path.join(trace_out,
+                                          f"trace_template{tag}.json"))
 
         same = toks2 == {o.uid: o.tokens for o in outs_cold}
         for name, wall, st in [
@@ -746,6 +760,8 @@ def template_store_bench(quick=False, seed=7, mesh_spec=None,
                 "name": name, "seed": seed,
                 "mesh": mesh_spec if use_mesh else "1x1",
                 "batch_size": 4, "requests": n, "wall_s": wall, **st,
+                **({"phase_ms": phase_ms}
+                   if name == f"serve_tmpl_store2{tag}" else {}),
             })
         cmp = {
             "ttft_p95_ms_cold_store": st1["ttft_p95_ms"],
@@ -902,7 +918,7 @@ def window_bench(quick=False, seed=7, mesh_spec=None,
 
 
 def slo_bench(quick=False, seed=7, mesh_spec=None,
-              json_out="artifacts/serve_bench.json"):
+              json_out="artifacts/serve_bench.json", trace_out=None):
     """SLO-aware scheduling under overload (runtime/scheduler.py): a
     mixed-priority burst oversubscribes the slots 5-10x against a KV
     pool deliberately too small for the in-flight set, with every
@@ -921,7 +937,12 @@ def slo_bench(quick=False, seed=7, mesh_spec=None,
         tokens must be bit-identical to this serve.
 
     Records per-class TTFT, the full sched_* counter set, and the
-    slo-vs-blind comparison into the deduped serve-bench JSON."""
+    slo-vs-blind comparison into the deduped serve-bench JSON.  The slo
+    serve runs with lifecycle tracing ON while ref and blind stay
+    untraced, so tokens_identical doubles as the tracing-is-schedule-
+    invisible acceptance; ``trace_out`` writes its Chrome trace
+    (Perfetto-loadable, preempt/swap/resume spans + brownout-rung
+    reason events) there."""
     from repro.kernels.ops import interpret_default
     from repro.launch.mesh import make_serving_mesh
     from repro.models import transformer as tfm
@@ -929,6 +950,7 @@ def slo_bench(quick=False, seed=7, mesh_spec=None,
     from repro.runtime.kv_pool import PagedKVConfig
     from repro.runtime.scheduler import SLOConfig
     from repro.runtime.server import Server, ServerConfig
+    from repro.runtime.telemetry import TelemetryConfig, phase_breakdown
 
     SMALL = ModelConfig(name="serve-lm", family="dense", n_layers=2,
                         d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
@@ -953,12 +975,13 @@ def slo_bench(quick=False, seed=7, mesh_spec=None,
 
     # FIFO admission on every variant: clustered batching would reorder
     # the stream by traffic class and dilute the tail-arrival worst case
-    def scfg(pool_blocks, sched, use_mesh):
+    def scfg(pool_blocks, sched, use_mesh, trace=False):
         return ServerConfig(
             batch_size=4, max_seq=96, kv_compress=ccfg,
             prefill_chunk=chunk, use_clustered_batching=False,
             paged=PagedKVConfig(block_size=4, pool_blocks=pool_blocks),
             scheduler=SLOConfig() if sched else None,
+            telemetry=TelemetryConfig(trace=True) if trace else None,
             mesh=mesh if use_mesh else None)
 
     probe = [Request(10_000 + i, l, g)
@@ -985,14 +1008,22 @@ def slo_bench(quick=False, seed=7, mesh_spec=None,
         ref_out = {o.uid: o.tokens for o in ref.serve(blind, prompts)}
 
         outs, walls, stats = {}, {}, {}
+        phase_ms = {}
         for vname, stream in [("slo", reqs), ("blind", blind)]:
-            srv = Server(SMALL, scfg(tight, True, use_mesh), params)
+            srv = Server(SMALL, scfg(tight, True, use_mesh,
+                                     trace=(vname == "slo")), params)
             srv.serve(probe, probe_prompts)
             t0 = time.perf_counter()
             outs[vname] = srv.serve(stream, prompts)
             walls[vname] = time.perf_counter() - t0
             stats[vname] = {k: float(v)
                             for k, v in srv.last_stats.items()}
+            if vname == "slo":
+                phase_ms = phase_breakdown(srv.last_trace)
+                if trace_out:
+                    os.makedirs(trace_out, exist_ok=True)
+                    srv.export_trace(os.path.join(
+                        trace_out, f"trace_slo{tag}.json"))
 
         same = all(o.tokens == ref_out[o.uid]
                    for o in outs["slo"] if not o.shed)
@@ -1014,6 +1045,7 @@ def slo_bench(quick=False, seed=7, mesh_spec=None,
                 "batch_size": 4, "requests": n, "high_requests": n_high,
                 "pool_blocks": tight, "wall_s": walls[vname],
                 "ttft_p95_ms_high": p95h, **st,
+                **({"phase_ms": phase_ms} if vname == "slo" else {}),
             })
         cmp = {
             "ttft_p95_ms_high_slo": p95_slo,
@@ -1101,6 +1133,10 @@ def main() -> None:
                          "(block-pool KV tails + packed ragged launches); "
                          "records padded-compute waste vs the dense "
                          "bucketed path")
+    ap.add_argument("--trace-out", default=None,
+                    help="directory where the traced scenarios (slo, "
+                         "template_store) write Chrome trace-event JSON "
+                         "(Perfetto-loadable request-lifecycle timelines)")
     args = ap.parse_args()
     only = args.only or args.scenario
     print("name,us_per_call,derived")
@@ -1110,8 +1146,10 @@ def main() -> None:
         if b is serve_bench:
             b(quick=args.quick, seed=args.seed, mesh_spec=args.mesh,
               json_out=args.json_out, paged=args.paged)
-        elif b in (prefix_share_bench, template_store_bench,
-                   window_bench, slo_bench):
+        elif b in (template_store_bench, slo_bench):
+            b(quick=args.quick, seed=args.seed, mesh_spec=args.mesh,
+              json_out=args.json_out, trace_out=args.trace_out)
+        elif b in (prefix_share_bench, window_bench):
             b(quick=args.quick, seed=args.seed, mesh_spec=args.mesh,
               json_out=args.json_out)
         else:

@@ -277,6 +277,52 @@ def main():
           f"tokens {'identical' if same_s else 'DIVERGED'} vs the "
           f"unpressured paged serve")
 
+    # --- observability (ServerConfig.telemetry) ---
+    # Every number printed above came out of `server.last_stats` — which
+    # is now a flat view over a typed metrics registry (`server.metrics`,
+    # runtime/telemetry.py): counters, gauges, and histograms with help
+    # strings, re-registered each serve so dynamic keys (per-cluster,
+    # per-shard, sched_*) can never leak across serves.  Turning on
+    # TelemetryConfig(trace=True) additionally records the request
+    # LIFECYCLE: queued → admit → prefill chunks → first token → decode
+    # → compact/absorb → preempt/swap-out → resume → finish/shed, plus
+    # one span per engine step (launch kind, rows, pool occupancy) and a
+    # brownout event naming the rung and WHY whenever the SLO ladder
+    # acts.  Tracing is host-side only — greedy tokens are bit-identical
+    # with it on or off — and `export_trace()` writes a Chrome
+    # trace-event file loadable in Perfetto / chrome://tracing (one
+    # process per data shard, one thread per decode slot).
+    from repro.runtime.telemetry import (TelemetryConfig, phase_breakdown,
+                                         validate_trace)
+    srv_o = Server(SMALL, ServerConfig(batch_size=4, max_seq=256,
+                                       kv_compress=ccfg, prefill_chunk=16,
+                                       paged=PagedKVConfig(block_size=8,
+                                                           pool_blocks=10),
+                                       scheduler=SLOConfig(),
+                                       telemetry=TelemetryConfig(
+                                           trace=True)), params)
+    outs_o = srv_o.serve(sreqs, prompts)
+    traced_same = ({o.uid: o.tokens for o in outs_o}
+                   == {o.uid: o.tokens for o in outs_s})
+    evs = srv_o.last_trace
+    problems = validate_trace(evs, totals=srv_o.last_stats)
+    kinds = sorted({e["name"] for e in evs})
+    ph = phase_breakdown(evs)
+    print(f"[telemetry] traced serve: {len(evs)} events "
+          f"({', '.join(kinds)}), schema problems: {len(problems)}, "
+          f"tokens {'identical' if traced_same else 'DIVERGED'} vs the "
+          f"untraced serve")
+    print("[telemetry] phase breakdown: " + ", ".join(
+        f"{k.removeprefix('phase_').removesuffix('_ms')} {v:.0f} ms"
+        for k, v in ph.items()))
+    # srv_o.export_trace("slo_trace.json") writes the Perfetto timeline;
+    # the registry documents itself — the serving metrics reference:
+    table = srv_o.metrics.reference_table()
+    print(f"[telemetry] metrics reference ({len(table.splitlines()) - 2} "
+          f"metrics; first rows):")
+    for line in table.splitlines()[:6]:
+        print("    " + line)
+
     # --- sliding-window serving (RetentionPolicy opens the model zoo) ---
     # Everything above serves an all-global-attention model, where "which
     # ring positions may be dropped?" is answered by the clustered

@@ -49,6 +49,8 @@ from repro.runtime.kv_pool import PagedKVConfig  # noqa: E402
 from repro.runtime.prefix_cache import PrefixShareConfig  # noqa: E402
 from repro.runtime.scheduler import SLOConfig  # noqa: E402
 from repro.runtime.server import Server, ServerConfig  # noqa: E402
+from repro.runtime.telemetry import (TelemetryConfig,  # noqa: E402
+                                     phase_breakdown)
 from repro.runtime.template_store import TemplateStoreConfig  # noqa: E402
 
 
@@ -113,6 +115,13 @@ def main():
     ap.add_argument("--refresh-every", type=int, default=None,
                     help="clustered serving: decode steps between "
                          "compactions (default 32)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a request-lifecycle Chrome trace-event "
+                         "JSON here (load in Perfetto / chrome://tracing: "
+                         "one process per data shard, one thread per "
+                         "decode slot) and print the engine-step phase "
+                         "breakdown; tracing is host-side only and "
+                         "leaves tokens bit-identical")
     ap.add_argument("--priority-demo", action="store_true",
                     help="SLO scheduling demo (requires --paged): mark "
                          "the last quarter of the queue priority-1, "
@@ -250,7 +259,9 @@ def main():
         use_clustered_batching=not args.no_clustering, mesh=mesh,
         prefill_chunk=args.prefill_chunk, kv_compress=ccfg,
         paged=paged, prefix_share=pshare, template_store=tstore,
-        scheduler=SLOConfig() if args.priority_demo else None), params)
+        scheduler=SLOConfig() if args.priority_demo else None,
+        telemetry=(TelemetryConfig(trace=True) if args.trace_out
+                   else None)), params)
     t0 = time.perf_counter()
     outs = srv.serve(reqs, prompts)
     dt = time.perf_counter() - t0
@@ -317,6 +328,16 @@ def main():
                   f"divide the data axis — slots replicated (no slot "
                   f"sharding); pick a batch size divisible by "
                   f"{mesh.shape['data']}")
+
+    if args.trace_out:
+        srv.export_trace(args.trace_out)
+        ph = phase_breakdown(srv.last_trace)
+        print(f"[serve] trace: {len(srv.last_trace)} events → "
+              f"{args.trace_out} (Perfetto-loadable)")
+        if ph:
+            print("[serve] phase breakdown: " + ", ".join(
+                f"{k.removeprefix('phase_').removesuffix('_ms')} "
+                f"{v:.1f} ms" for k, v in ph.items()))
 
     if args.persist_templates:
         # repeat-serve demo: the store survived the drain, so re-serving

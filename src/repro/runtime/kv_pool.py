@@ -402,6 +402,51 @@ class BlockPool:
         self.dirty = True
         return True
 
+    def resume_demand(self, slot: int, held: Dict[int, Tuple[int, int]]) -> int:
+        """How many FRESH blocks resuming ``slot`` from ``held``
+        (``{ring_block_idx: (gid, gen)}``, a :meth:`release_slot` result)
+        would actually pull from the free list: held blocks that would
+        survive :meth:`readopt`'s (gid, gen) fast-path checks cost
+        nothing.  Read-only — the headroom gate calls this BEFORE
+        committing to the resume, so it must not touch any state."""
+        s = self.shard_of(slot)
+        fresh = 0
+        for gid, gen in held.values():
+            if (0 <= gid < self.n_blocks and self.ref[gid] > 0
+                    and int(self.gen[gid]) == int(gen)
+                    and gid // self.pool_blocks == s):
+                continue
+            fresh += 1
+        return fresh
+
+    def publish(self, reg, mark: Tuple[int, int, int, int] = (0, 0, 0, 0),
+                bytes_per_block: float = 0.0) -> None:
+        """Publish pool metrics into a telemetry registry (duck-typed —
+        anything with ``counter``/``gauge`` get-or-create methods).
+        ``mark`` is the serve-start snapshot of (n_allocs, n_frees,
+        n_retains, n_cow) so per-serve deltas don't double-count."""
+        reg.gauge("kv_bytes_peak_per_shard",
+                  "peak live tail-KV bytes on the busiest data shard"
+                  ).set(float(self.peak_blocks_shard.max()) * bytes_per_block)
+        reg.gauge("pool_blocks_total",
+                  "pool capacity: blocks per shard x shards"
+                  ).set(float(self.n_blocks))
+        reg.gauge("pool_blocks_peak",
+                  "peak live blocks across the pool this serve"
+                  ).set(float(self.peak_blocks))
+        reg.gauge("pool_occupancy_peak",
+                  "peak live blocks / capacity this serve"
+                  ).set(float(self.peak_blocks) / max(self.n_blocks, 1))
+        a0, f0, r0, c0 = mark
+        reg.counter("pool_allocs", "fresh block allocations this serve"
+                    ).add(self.n_allocs - a0)
+        reg.counter("pool_frees", "blocks returned to the free list this serve"
+                    ).add(self.n_frees - f0)
+        reg.counter("pool_retains", "extra refs taken (adopt/retain) this serve"
+                    ).add(self.n_retains - r0)
+        reg.counter("pool_cow", "copy-on-write block swaps this serve"
+                    ).add(self.n_cow - c0)
+
     def free_retired(self, slot: int, t: int, policy) -> int:
         """Return blocks whose every claimed position is retired under
         ``policy`` (see the module docstring's retire-safety argument).

@@ -261,6 +261,40 @@ class SLOScheduler:
     # stats
     # ------------------------------------------------------------------
 
+    def publish(self, reg) -> None:
+        """Publish the brownout counters into a telemetry registry
+        (duck-typed).  Key names match :meth:`stats` exactly so the
+        registry-generated flat view stays backward compatible."""
+        reg.counter("sched_deferrals",
+                    "admissions/resumes pushed back for later retry"
+                    ).add(self.deferrals)
+        reg.counter("sched_preemptions",
+                    "slots preempted (swap-out rung)").add(self.preemptions)
+        reg.counter("sched_swaps_out",
+                    "slot states spilled to host memory").add(self.swaps_out)
+        reg.counter("sched_swaps_in",
+                    "parked requests resumed mid-stream").add(self.swaps_in)
+        reg.counter("sched_sheds",
+                    "best-effort requests dropped under brownout"
+                    ).add(self.sheds)
+        reg.counter("sched_shed_high",
+                    "protected-class sheds (must stay 0)").add(self.shed_high)
+        reg.gauge("sched_swapped_peak_blocks",
+                  "peak blocks-worth of tail KV parked on host"
+                  ).set(float(self.swapped_peak))
+        reg.counter("sched_readopted_blocks",
+                    "resume blocks re-adopted without re-upload"
+                    ).add(self.readopted_blocks)
+        reg.counter("sched_reuploaded_blocks",
+                    "resume blocks re-uploaded from the host copy"
+                    ).add(self.reuploaded_blocks)
+        reg.gauge("sched_swap_bytes",
+                  "host bytes currently parked (tails)"
+                  ).set(float(self.swap_bytes))
+        reg.gauge("sched_backlog_end",
+                  "records still parked at end of serve"
+                  ).set(float(len(self._backlog)))
+
     def stats(self) -> Dict[str, float]:
         return {
             "sched_deferrals": float(self.deferrals),

@@ -83,6 +83,8 @@ from repro.runtime import kv_pool
 from repro.runtime import prefix_cache as prefix_mod
 from repro.runtime import template_store as template_mod
 from repro.runtime.scheduler import SLOConfig, SLOScheduler, SwapRecord
+from repro.runtime import telemetry as tele_mod
+from repro.runtime.telemetry import TelemetryConfig
 from repro.sharding import (Rules, constrain_cache, default_table,
                             place_admission, place_block_tables,
                             place_prefix_snapshot, place_swap_payload,
@@ -165,6 +167,14 @@ class ServerConfig:
     # PoolExhausted, which then only fires when all remaining work is
     # the protected class.  Requires the paged clustered engine
     # (kv_compress= + paged=, all-'G' layers).
+    telemetry: Optional[TelemetryConfig] = None
+    # serving telemetry (runtime/telemetry.py): last_stats is always
+    # regenerated from the typed metrics registry; telemetry.trace
+    # additionally records host-side request-lifecycle spans and
+    # engine-step events into Server.last_trace (exportable as JSONL or
+    # Chrome trace JSON via Server.export_trace — loadable in Perfetto).
+    # Tracing never runs inside jit and never touches device state, so
+    # greedy tokens are bit-identical with tracing on vs off.
     mesh: Optional[Mesh] = None
     # (data, model) device mesh (launch/mesh.make_serving_mesh): decode
     # slots + their KV caches partition over "data", attention heads (and
@@ -332,6 +342,16 @@ class Server:
                     mesh.shape[a] for a in axes)
         self.params = params
         self.last_stats: Dict[str, float] = {}
+        # typed metrics registry + lifecycle tracer: last_stats is a
+        # flat view regenerated from the registry at the end of every
+        # serve, so per-serve dynamic keys (template_cluster*,
+        # slot_waste_shard*, sched_*) from a previous serve or mesh
+        # shape can never leak into the next serve's stats
+        self.metrics = tele_mod.MetricsRegistry()
+        self._tele = scfg.telemetry or TelemetryConfig()
+        self.tracer = (tele_mod.Tracer(self._tele.max_events)
+                       if self._tele.trace else None)
+        self.last_trace: List[dict] = []
         # cross-serve template persistence: the pool (host tables/refs)
         # and the device engine cache that carry the store's pinned
         # blocks between serve() calls.  The config epoch stamps every
@@ -494,6 +514,27 @@ class Server:
             return self._serve_continuous(requests, prompts)
         return self._serve_static(requests, prompts)
 
+    def export_trace(self, path: str, fmt: str = "chrome") -> None:
+        """Write the last serve's lifecycle trace (requires
+        ``ServerConfig.telemetry.trace``): ``fmt="chrome"`` emits Chrome
+        trace-event JSON loadable in Perfetto (one process per data
+        shard, spans nested under slot threads, last_stats embedded for
+        offline reconciliation); ``fmt="jsonl"`` emits the raw event
+        log, one JSON object per line."""
+        if fmt == "chrome":
+            tele_mod.write_chrome_trace(self.last_trace, path,
+                                        n_shards=self._n_data_shards,
+                                        stats=self.last_stats)
+        elif fmt == "jsonl":
+            tele_mod.write_jsonl(
+                self.last_trace, path,
+                meta={"n_shards": self._n_data_shards,
+                      "last_stats": {k: float(v)
+                                     for k, v in self.last_stats.items()}})
+        else:
+            raise ValueError(f"unknown trace format {fmt!r} "
+                             "(expected 'chrome' or 'jsonl')")
+
     def invalidate_templates(self) -> None:
         """Explicitly drop every persistent template entry, releasing
         the pool blocks the store pinned across serves — afterwards the
@@ -526,6 +567,14 @@ class Server:
             raise NotImplementedError(
                 "continuous engine serves decoder-only models")
         t0_serve = time.perf_counter()
+        # per-serve registry window: every non-persist metric from the
+        # previous serve (including dynamic per-cluster / per-shard /
+        # sched_* keys) is dropped here; lifetime *_total metrics survive
+        reg = self.metrics
+        reg.begin_serve()
+        tr = self.tracer
+        _annot = (tele_mod.annotation if self._tele.jax_profiler
+                  else (lambda _n: contextlib.nullcontext()))
         ccfg = scfg.kv_compress
         # the cache LAYOUT (clustered leaves + tail ring geometry) is
         # distinct from the retention policy served on top of it: ccfg ⇒
@@ -563,6 +612,14 @@ class Server:
 
         def phys(j):
             return shard_of(j) * bucket + idx_of(j)
+
+        if tr is not None:
+            tr.begin_serve(t0_serve, max(shards, 1))
+            for qpos, quid in enumerate(order):
+                qr = by_uid[quid]
+                tr.event("queued", tid="queue", uid=quid, t=t0_serve,
+                         queue_pos=qpos, priority=qr.priority,
+                         prompt_len=qr.prompt_len)
 
         # paged memory manager: tail rings live in a per-shard block pool
         # behind per-slot block tables; the launch bucket never shrinks
@@ -663,6 +720,42 @@ class Server:
         toks: Dict[int, List[int]] = {}
         pre_ms: Dict[int, float] = {}
         token_t: Dict[int, List[float]] = {}
+        # tracer tenancy bookkeeping: one "run" span per (slot, tenancy)
+        # segment — admit/resume opens it, finish/shed/preempt closes it.
+        # Token deltas across a uid's segments sum to its final count, so
+        # validate_trace can reconcile run spans against gen_tokens.
+        seg: List[Optional[tuple]] = [None] * n
+
+        def slot_tid(j):
+            return f"slot{idx_of(j)}"
+
+        def tr_open(j, uid, t, how, p0=0):
+            if tr is None:
+                return
+            seg[j] = (t, how, uid, len(toks.get(uid, ())), int(p0))
+
+        def tr_close(j, t, why):
+            """Close slot j's tenancy span.  Called BEFORE the slot's
+            blocks are freed so blocks_held reflects the tenancy."""
+            if tr is None or seg[j] is None:
+                return
+            t0s, how, uid, tok0, p0 = seg[j]
+            seg[j] = None
+            held = (int((pool.table[j] >= 0).sum())
+                    if pool is not None else 0)
+            tr.span("run", t0s, t, pid=shard_of(j), tid=slot_tid(j),
+                    uid=uid, start=how, end=why,
+                    tokens=len(toks.get(uid, ())) - tok0, pos0=p0,
+                    pos1=int(max(int(fed[j]), int(pos[j]))),
+                    blocks_held=held)
+
+        def tr_brownout(rung, why, **args):
+            """Instant event naming the brownout rung taken and WHY —
+            which headroom/pool check failed, which victim was chosen."""
+            if tr is not None:
+                tr.event("brownout", tid="engine", rung=rung, why=why,
+                         **args)
+
         qi = 0
         decode_steps = wasted_slots = 0
         rows_launched = 0
@@ -847,6 +940,7 @@ class Server:
             uid = slot_uid[j]
             r = by_uid[uid]
             bt_read = pool.row_for_read(j)
+            t_sw0 = time.perf_counter()
             snap, tails = self._swap_out(cache, jnp.int32(phys(j)),
                                          jnp.asarray(bt_read))
             snap, tails = jax.device_get((snap, tails))
@@ -861,6 +955,12 @@ class Server:
                 n_blocks_swapped=len(held))
             slo.record_swap(rec)
             slo.swap_bytes += len(held) * paged.block_size * tail_bpt
+            if tr is not None:
+                t_now = time.perf_counter()
+                tr.span("swap_out", t_sw0, t_now, pid=shard_of(j),
+                        tid=slot_tid(j), uid=uid, blocks=len(held),
+                        pos=int(pos[j]))
+                tr_close(j, t_now, "preempt")
             active[j] = False
             slot_uid[j] = -1
             since_tok[j] = 0
@@ -884,12 +984,21 @@ class Server:
             # straight back and the engine thrashes swap-out/swap-in
             # without decoding).  Only resume when the shard can absorb
             # the re-upload AND still hand one write block to the
-            # resumed slot and each surviving active slot.
+            # resumed slot and each surviving active slot.  The demand
+            # counts only truly-fresh blocks — held blocks whose
+            # (gid, gen) survived untouched re-adopt for free, so a
+            # mostly-readoptable resume is not rejected for the size of
+            # its whole ring.
             s = shard_of(j)
+            t_r0 = time.perf_counter()
             headroom = 1 + sum(1 for jj in range(n)
                                if active[jj] and shard_of(jj) == s)
-            if pool.free_blocks(s) < len(rec.held) + headroom:
+            fresh_demand = pool.resume_demand(j, rec.held)
+            if pool.free_blocks(s) < fresh_demand + headroom:
                 slo.deferrals += 1
+                tr_brownout("defer", "resume_headroom", uid=rec.uid,
+                            free=pool.free_blocks(s), fresh=fresh_demand,
+                            held=len(rec.held), headroom=headroom)
                 return False
             pool.free_slot(j)   # recycle any previous occupant's blocks
             readopted = []
@@ -902,6 +1011,8 @@ class Server:
             if fresh and not try_ensure(j, fresh, []):
                 pool.free_slot(j)       # drop the re-adoptions too
                 slo.deferrals += 1
+                tr_brownout("defer", "resume_alloc", uid=rec.uid,
+                            fresh=len(fresh))
                 return False
             slo.readopted_blocks += len(readopted)
             slo.reuploaded_blocks += len(fresh)
@@ -925,6 +1036,13 @@ class Server:
             slo.pop_record(rec)
             slo.swap_bytes -= rec.n_blocks_swapped * paged.block_size \
                 * tail_bpt
+            if tr is not None:
+                t_now = time.perf_counter()
+                tr_open(j, rec.uid, t_r0, "resume", p0=rec.pos)
+                tr.span("resume", t_r0, t_now, pid=shard_of(j),
+                        tid=slot_tid(j), uid=rec.uid,
+                        readopted=len(readopted), reuploaded=len(fresh),
+                        demand=fresh_demand)
             return True
 
         def shed_active(j):
@@ -932,6 +1050,12 @@ class Server:
             tokens already in ``toks`` are returned, blocks freed)."""
             uid = slot_uid[j]
             slo.shed_uid(uid, by_uid[uid].priority)
+            if tr is not None:
+                t_now = time.perf_counter()
+                tr.event("shed", pid=shard_of(j), tid=slot_tid(j),
+                         uid=uid, t=t_now, where="active",
+                         why="brownout")
+                tr_close(j, t_now, "shed")
             active[j] = False
             admitting[j] = False
             slot_uid[j] = -1
@@ -953,15 +1077,24 @@ class Server:
                 slo.shed_record(rec)
                 slo.swap_bytes -= rec.n_blocks_swapped \
                     * paged.block_size * tail_bpt
+                tr_brownout("shed", "parked_record", uid=rec.uid)
+                if tr is not None:
+                    tr.event("shed", tid="engine", uid=rec.uid,
+                             where="parked", why="pool_exhausted")
                 return True
             if qi < len(order):
                 r = by_uid[order[qi]]
                 if not slo.is_high(r.priority):
                     slo.shed_uid(r.uid, r.priority)
+                    tr_brownout("shed", "queue_head", uid=r.uid)
+                    if tr is not None:
+                        tr.event("shed", tid="queue", uid=r.uid,
+                                 where="queue", why="pool_exhausted")
                     qi += 1
                     return True
             v = slo.pick_victim(victim_candidates(), slo_cfg.high_class)
             if v is not None:
+                tr_brownout("shed", "active_victim", victim=int(v))
                 shed_active(v)
                 return True
             return False
@@ -985,6 +1118,12 @@ class Server:
                     v = slo.pick_victim(cands,
                                         max(c[0] for c in cands) + 1)
                 if v is not None:
+                    if tr is not None:
+                        vp, vnb, _ = next(c for c in cands if c[2] == v)
+                        tr_brownout("preempt", "zero_progress",
+                                    victim=int(v), victim_priority=vp,
+                                    victim_blocks=vnb,
+                                    within_class=within_class)
                     rec = preempt(v)
                     # hold until real tokens decode again, else the
                     # freed blocks bounce straight back (live-lock)
@@ -1066,6 +1205,9 @@ class Server:
                 # counts would unmask stale centroids (on a prefix hit
                 # the restore overwrites all of this state instead)
                 cache = self._reset_slot(cache, jnp.int32(phys(j)))
+            if tr is not None:
+                tr_open(j, uid, time.perf_counter(), "admit",
+                        p0=int(fed[j]))
             return True
 
         def admit_blocking(j, uid) -> bool:
@@ -1106,11 +1248,22 @@ class Server:
             first = int(jnp.argmax(logits1, -1)[0])
             now = time.perf_counter()
             pre_ms[uid] = (now - t0_serve) * 1e3        # TTFT
+            tr_open(j, uid, t0, "admit", p0=0)
             toks[uid] = [first]
             token_t[uid] = [now]
+            if tr is not None:
+                tr.span("prefill", t0, now, pid=shard_of(j),
+                        tid=slot_tid(j), uid=uid, prompt_len=plen)
+                tr.event("first_token", pid=shard_of(j), tid=slot_tid(j),
+                         uid=uid, t=now, ttft_ms=pre_ms[uid])
             pad_toks += bkt - plen
             useful_toks += plen
             if r.max_new_tokens <= 1:
+                if tr is not None:
+                    t_done = time.perf_counter()
+                    tr.event("finish", pid=shard_of(j), tid=slot_tid(j),
+                             uid=uid, t=t_done)
+                    tr_close(j, t_done, "finish")
                 if pool is not None:
                     pool.free_slot(j)   # done at prefill; slot stays free
                 return True
@@ -1182,6 +1335,8 @@ class Server:
                                          rec.priority)
                          if slo.can_swap() else None)
                     if v is not None:
+                        tr_brownout("preempt", "resume_slot_pressure",
+                                    victim=int(v), for_uid=rec.uid)
                         preempt(v)
                         continue
                     break
@@ -1226,6 +1381,8 @@ class Server:
                              if shard_of(c[2]) in adm],
                             by_uid[uid].priority)
                         if v is not None:
+                            tr_brownout("preempt", "slot_pressure",
+                                        victim=int(v), for_uid=uid)
                             preempt(v)
                             continue
                     break
@@ -1248,14 +1405,20 @@ class Server:
                             and (time.perf_counter() - t0_serve) * 1e3
                             > r.deadline_ms):
                         slo.shed_uid(uid, r.priority)
+                        if tr is not None:
+                            tr.event("shed", tid="queue", uid=uid,
+                                     where="queue", why="deadline")
                         qi += 1
                         continue
                     if slo.can_swap():
                         v = slo.pick_victim(
                             victim_candidates(shard_of(j)), r.priority)
                         if v is not None:
+                            tr_brownout("preempt", "admission_pool",
+                                        victim=int(v), for_uid=uid)
                             preempt(v)
                             continue
+                tr_brownout("defer", "admission_pool", uid=uid)
                 break   # pool-deferred: retry after a give-back
 
             if not (active.any() or admitting.any()):
@@ -1311,6 +1474,7 @@ class Server:
                         target = int(np.clip(
                             fed[j] + cl - R + ccfg.refresh, 0, fed[j]))
                         kv_retired["frontier"] += target - fr.frontier(j)
+                        t_ab0 = time.perf_counter()
                         if pool is not None:
                             cache = self._absorb_paged(
                                 cache, jnp.int32(phys(j)),
@@ -1324,6 +1488,12 @@ class Server:
                                                  jnp.int32(target))
                             fr.set_frontier(int(j), target)
                         n_absorbs += 1
+                        if tr is not None:
+                            tr.span("absorb", t_ab0, time.perf_counter(),
+                                    pid=shard_of(int(j)),
+                                    tid=slot_tid(int(j)),
+                                    uid=slot_uid[int(j)],
+                                    target=int(target))
 
             # ---- build the launch -----------------------------------------
             mixed = bool(step_chunks)
@@ -1433,10 +1603,11 @@ class Server:
                         last_row[j] = base + i
                 bt_dev = bt_device()
                 t0 = time.perf_counter()
-                logits, cache = self._decode_packed(
-                    cache, jnp.asarray(tokp), jnp.asarray(rslot),
-                    jnp.asarray(rpos), jnp.asarray(rtw),
-                    jnp.asarray(rcidx), bt_dev, width)
+                with _annot("decode_packed"):
+                    logits, cache = self._decode_packed(
+                        cache, jnp.asarray(tokp), jnp.asarray(rslot),
+                        jnp.asarray(rpos), jnp.asarray(rtw),
+                        jnp.asarray(rcidx), bt_dev, width)
                 nxt = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
                 nxt_of = lambda jj: nxt[last_row[jj]]      # noqa: E731
                 # launch_rows_frac / launch_bucket_mean stay SLOT
@@ -1464,12 +1635,16 @@ class Server:
 
                 t0 = time.perf_counter()
                 if mixed:
-                    logits, cache = self._mixed(cache, jnp.asarray(tok),
-                                                jnp.asarray(t_vec),
-                                                jnp.asarray(cl_vec))
+                    with _annot("mixed_step"):
+                        logits, cache = self._mixed(cache,
+                                                    jnp.asarray(tok),
+                                                    jnp.asarray(t_vec),
+                                                    jnp.asarray(cl_vec))
                 else:
-                    logits, cache = self._decode(cache, jnp.asarray(tok),
-                                                 jnp.asarray(t_vec))
+                    with _annot("decode_step"):
+                        logits, cache = self._decode(cache,
+                                                     jnp.asarray(tok),
+                                                     jnp.asarray(t_vec))
                 nxt = np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
                 nxt_of = lambda jj: nxt[phys(jj)]          # noqa: E731
                 rows_step, compute_rows = bp, bp * width
@@ -1480,6 +1655,20 @@ class Server:
             launch_real += real_rows
             launch_padded += compute_rows
             wasted_slots += int(n - (active | admitting).sum())
+            if tr is not None:
+                kind = ("decode" if not step_chunks else
+                        ("mixed" if real_rows > sum(step_chunks.values())
+                         else "prefill"))
+                tr.span("engine_step", t0, now, tid="engine", kind=kind,
+                        width=int(width), rows=int(compute_rows),
+                        real_rows=int(real_rows),
+                        occupancy=[int(x) for x in occupancy()],
+                        pool_free=([pool.free_blocks(s)
+                                    for s in range(max(shards, 1))]
+                                   if pool is not None else []),
+                        pool_live=(int(pool.allocated())
+                                   if pool is not None else 0),
+                        stalled=len(stalled_decode) + len(stalled_admit))
             advanced = active.copy()
             for j in stalled_decode:
                 advanced[j] = False     # a pool-stalled slot didn't decode
@@ -1521,6 +1710,10 @@ class Server:
                         continue        # pool-stalled this step
                     cl = step_chunks[j]
                     fed[j] += cl
+                    if tr is not None:
+                        tr.event("prefill_chunk", pid=shard_of(j),
+                                 tid=slot_tid(j), uid=uid, t=now,
+                                 fed=int(fed[j]), chunk=cl)
                     if wr is not None:
                         kv_retired["window"] += wr.advance(j, int(fed[j]))
                     plen = len(prompt_np[uid])
@@ -1557,6 +1750,7 @@ class Server:
                         if fr.frontier(j) < target_end:
                             kv_retired["frontier"] += (target_end
                                                        - fr.frontier(j))
+                            t_ab0 = time.perf_counter()
                             if pool is not None:
                                 cache = self._absorb_paged(
                                     cache, jnp.int32(pj), jnp.int32(plen),
@@ -1570,12 +1764,25 @@ class Server:
                                                      jnp.int32(target_end))
                                 fr.set_frontier(j, target_end)
                             n_absorbs += 1
+                            if tr is not None:
+                                tr.span("absorb", t_ab0,
+                                        time.perf_counter(),
+                                        pid=shard_of(j), tid=slot_tid(j),
+                                        uid=uid, target=int(target_end))
                     first = int(nxt_of(j))
                     toks[uid] = [first]
                     token_t[uid] = [now]
                     pre_ms[uid] = (now - t0_serve) * 1e3    # TTFT
+                    if tr is not None:
+                        tr.event("first_token", pid=shard_of(j),
+                                 tid=slot_tid(j), uid=uid, t=now,
+                                 ttft_ms=pre_ms[uid])
                     admitting[j] = False
                     if by_uid[uid].max_new_tokens <= 1:
+                        if tr is not None:
+                            tr.event("finish", pid=shard_of(j),
+                                     tid=slot_tid(j), uid=uid, t=now)
+                            tr_close(j, now, "finish")
                         slot_uid[j] = -1
                         if pool is not None:
                             if quota is not None:
@@ -1598,6 +1805,10 @@ class Server:
                     if len(toks[uid]) >= by_uid[uid].max_new_tokens:
                         active[j] = False
                         since_tok[j] = 0
+                        if tr is not None:
+                            tr.event("finish", pid=shard_of(j),
+                                     tid=slot_tid(j), uid=uid, t=now)
+                            tr_close(j, now, "finish")
                         if pool is not None:
                             if quota is not None:
                                 # an exact-KV slot retires its whole
@@ -1624,6 +1835,7 @@ class Server:
                 lengths = np.zeros(bp, np.int32)
                 for j in due:
                     lengths[phys(j)] = pos[j]
+                t_c0 = time.perf_counter()
                 if pool is not None:
                     cache = self._compact_paged(cache, jnp.asarray(lengths),
                                                 bt_device())
@@ -1645,6 +1857,9 @@ class Server:
                         pool.free_retired(j, int(pos[j]), fr)
                     since_tok[j] = 0
                 n_compacts += 1
+                if tr is not None:
+                    tr.span("compact", t_c0, time.perf_counter(),
+                            tid="engine", slots=[int(j) for j in due])
 
             # ---- post-step priority pass -----------------------------
             # a pool-stalled slot (decode or admission) whose priority
@@ -1691,123 +1906,142 @@ class Server:
         itls: List[float] = []
         for ts in token_t.values():
             itls.extend(b - a for a, b in zip(ts, ts[1:]))
-        self.last_stats = {
-            "decode_steps": float(decode_steps),
-            "slot_waste": wasted_slots / max(decode_steps * n, 1),
-            "prefill_pad_frac": pad_toks / max(pad_toks + useful_toks, 1),
-            "gen_tokens": float(gen_total),
-            "decode_s": dec_s,
-            "tokens_per_s": dec_tokens / max(dec_s, 1e-9),
-            "wall_s": wall,
-            "tokens_per_s_wall": gen_total / max(wall, 1e-9),
-            "ttft_p50_ms": _percentile_ms(ttfts, 50),
-            "ttft_p95_ms": _percentile_ms(ttfts, 95),
-            "itl_p50_ms": _percentile_ms(itls, 50),
-            "itl_p95_ms": _percentile_ms(itls, 95),
-            "launch_rows_frac": rows_launched / max(decode_steps * n, 1),
-            "launch_bucket_mean": rows_launched
-            / max(decode_steps * max(shards, 1), 1),
-            # padded-compute waste: launched rows × width that carried no
-            # real (slot, position) pair — the number the packed ragged
-            # launch exists to shrink — and its complement, the fraction
-            # of launched compute rows that were real tokens
-            "launch_pad_frac": 1.0 - launch_real / max(launch_padded, 1),
-            "launch_ragged_frac": launch_real / max(launch_padded, 1),
-            "prefill_chunks": float(n_chunks),
-            "kv_absorbs": float(n_absorbs),
-            "kv_compactions": float(n_compacts),
-            # positions each retention policy retired this serve —
-            # FrontierRetention counts coverage-frontier advancement
-            # (absorbs + compactions + admission clusterize, dense and
-            # paged alike), WindowRetention positions that aged out of
-            # 'L' layers' sliding windows, QuotaRetention block-backed
-            # positions released at request exit.  Always present so
-            # benchmark schemas stay stable across engine modes
-            "kv_retired_frontier": float(kv_retired["frontier"]),
-            "kv_retired_window": float(kv_retired["window"]),
-            "kv_retired_quota": float(kv_retired["quota"]),
-        }
+        # ---- publish into the typed metrics registry -----------------
+        # last_stats is regenerated from the registry (flat_view) so
+        # every historical key keeps working while the keys themselves
+        # become typed, documented metrics (see reg.reference_table())
+        reg.counter("decode_steps",
+                    "engine launches this serve").add(decode_steps)
+        reg.gauge("slot_waste", "idle slot-steps / total slot-steps"
+                  ).set(wasted_slots / max(decode_steps * n, 1))
+        reg.gauge("prefill_pad_frac",
+                  "prompt pad tokens / all prefill tokens"
+                  ).set(pad_toks / max(pad_toks + useful_toks, 1))
+        reg.counter("gen_tokens", "tokens generated this serve"
+                    ).add(gen_total)
+        reg.gauge("decode_s", "seconds inside engine launches"
+                  ).set(dec_s)
+        reg.gauge("tokens_per_s", "decode-loop tokens per launch second"
+                  ).set(dec_tokens / max(dec_s, 1e-9))
+        reg.gauge("wall_s", "end-to-end serve wall seconds").set(wall)
+        reg.gauge("tokens_per_s_wall", "all tokens per wall second"
+                  ).set(gen_total / max(wall, 1e-9))
+        ht = reg.histogram("ttft", "wall-clock time to first token",
+                           quantiles=(50, 95, 99), scale=1e3,
+                           suffix="_ms")
+        for v in ttfts:
+            ht.observe(v)
+        hi = reg.histogram("itl", "inter-token latency",
+                           quantiles=(50, 95, 99), scale=1e3,
+                           suffix="_ms")
+        for v in itls:
+            hi.observe(v)
+        reg.gauge("launch_rows_frac", "launched slot rows / slots×steps"
+                  ).set(rows_launched / max(decode_steps * n, 1))
+        reg.gauge("launch_bucket_mean", "mean launch bucket per shard"
+                  ).set(rows_launched
+                        / max(decode_steps * max(shards, 1), 1))
+        # padded-compute waste: launched rows × width that carried no
+        # real (slot, position) pair — the number the packed ragged
+        # launch exists to shrink — and its complement, the fraction
+        # of launched compute rows that were real tokens
+        reg.gauge("launch_pad_frac",
+                  "launched compute rows carrying no real token"
+                  ).set(1.0 - launch_real / max(launch_padded, 1))
+        reg.gauge("launch_ragged_frac",
+                  "real tokens / launched compute rows"
+                  ).set(launch_real / max(launch_padded, 1))
+        reg.counter("prefill_chunks",
+                    "prompt chunks fed through mixed launches"
+                    ).add(n_chunks)
+        reg.counter("kv_absorbs", "streaming absorb_chunk calls"
+                    ).add(n_absorbs)
+        reg.counter("kv_compactions", "batched compaction passes"
+                    ).add(n_compacts)
+        # positions each retention policy retired this serve —
+        # FrontierRetention counts coverage-frontier advancement
+        # (absorbs + compactions + admission clusterize, dense and
+        # paged alike), WindowRetention positions that aged out of
+        # 'L' layers' sliding windows, QuotaRetention block-backed
+        # positions released at request exit.  Always present so
+        # benchmark schemas stay stable across engine modes
+        reg.counter("kv_retired_frontier",
+                    "positions retired behind the coverage frontier"
+                    ).add(kv_retired["frontier"])
+        reg.counter("kv_retired_window",
+                    "positions aged out of sliding windows"
+                    ).add(kv_retired["window"])
+        reg.counter("kv_retired_quota",
+                    "block-backed positions released at request exit"
+                    ).add(kv_retired["quota"])
         if layout is not None:
             # KV-allocation picture, comparable across paged and dense:
             # dense "allocates" every launched slot's full tail ring
-            self.last_stats.update({
-                "kv_frag": 1.0 - kv_live_sum / max(kv_alloc_sum, 1),
-                "kv_alloc_tokens_peak": float(kv_alloc_peak),
-            })
+            reg.gauge("kv_frag",
+                      "1 - live ring tokens / allocated ring capacity"
+                      ).set(1.0 - kv_live_sum / max(kv_alloc_sum, 1))
+            reg.gauge("kv_alloc_tokens_peak",
+                      "peak allocated ring tokens"
+                      ).set(float(kv_alloc_peak))
             if pool is not None:
-                self.last_stats.update({
-                    # physical blocks only: shared blocks count once
-                    # (kv_shared_blocks/kv_bytes_saved carry the surplus)
-                    "kv_bytes_peak_per_shard": float(
-                        int(pool.peak_blocks_shard.max())
-                        * paged.block_size * tail_bpt),
-                    "pool_blocks_total": float(pool.n_blocks),
-                    "pool_blocks_peak": float(pool.peak_blocks),
-                    "pool_occupancy_peak": pool.peak_blocks
-                    / max(pool.n_blocks, 1),
-                    # per-serve deltas: a persistent pool carries its
-                    # lifetime counters across serves
-                    "pool_allocs": float(pool.n_allocs - pool_mark[0]),
-                    "pool_frees": float(pool.n_frees - pool_mark[1]),
-                    "pool_retains": float(pool.n_retains - pool_mark[2]),
-                    "pool_cow": float(pool.n_cow - pool_mark[3]),
-                    # peak surplus of logical block mappings over the
-                    # physical blocks backing them — the tail KV that
-                    # prefix sharing avoided materializing
-                    "kv_shared_blocks": float(kv_shared_peak),
-                    "kv_bytes_saved": float(
-                        kv_shared_peak * paged.block_size * tail_bpt),
-                    # every request completed → every block recycled,
-                    # minus what the template store deliberately pins
-                    # across serves (0 = no leak in both modes)
-                    "pool_blocks_end": float(
-                        pool.allocated()
-                        - (store.pinned_blocks() if store is not None
-                           else 0)),
-                })
+                # physical blocks only: shared blocks count once
+                # (kv_shared_blocks/kv_bytes_saved carry the surplus);
+                # alloc/free/retain/cow are per-serve deltas vs the
+                # serve-start mark (a persistent pool carries lifetime
+                # counters)
+                pool.publish(reg, pool_mark,
+                             paged.block_size * tail_bpt)
+                reg.gauge("kv_shared_blocks",
+                          "peak logical mappings beyond physical blocks"
+                          ).set(float(kv_shared_peak))
+                reg.gauge("kv_bytes_saved",
+                          "tail KV bytes prefix sharing avoided"
+                          ).set(float(kv_shared_peak * paged.block_size
+                                      * tail_bpt))
+                # every request completed → every block recycled, minus
+                # what the template store deliberately pins across
+                # serves (0 = no leak in both modes)
+                reg.gauge("pool_blocks_end",
+                          "blocks live beyond store pins (>0 = leak)"
+                          ).set(float(pool.allocated()
+                                      - (store.pinned_blocks()
+                                         if store is not None else 0)))
                 if pcache is not None:
-                    # per-serve deltas (satellite of the persistent
-                    # store: the counters are lifetime-cumulative on the
-                    # cache object; raw totals would double-count every
-                    # serve after the first)
-                    self.last_stats.update({
-                        "prefix_hits": float(pcache.hits - hits0),
-                        "prefix_tokens_reused": float(
-                            pcache.tokens_reused - reused0),
-                    })
+                    # per-serve deltas (the counters are lifetime-
+                    # cumulative on the cache object; raw totals would
+                    # double-count every serve after the first)
+                    reg.counter("prefix_hits",
+                                "prefix-cache adoptions this serve"
+                                ).add(pcache.hits - hits0)
+                    reg.counter("prefix_tokens_reused",
+                                "prompt tokens adopted this serve"
+                                ).add(pcache.tokens_reused - reused0)
                 if store is not None:
-                    # lifetime store view + per-cluster traffic picture
-                    self.last_stats.update(store.stats())
-                    self.last_stats["template_bytes_pinned"] = float(
-                        store.pinned_blocks() * paged.block_size
-                        * tail_bpt)
-                    for c in store.cluster_stats()[:8]:
-                        cid = int(c["cid"])
-                        self.last_stats.update({
-                            f"template_cluster{cid}_cohesion":
-                                c["cohesion"],
-                            f"template_cluster{cid}_hit_rate":
-                                c["hit_rate"],
-                            f"template_cluster{cid}_bytes_pinned":
-                                c["blocks_pinned"] * paged.block_size
-                                * tail_bpt,
-                        })
+                    # lifetime store view (persist=True counters survive
+                    # begin_serve) + per-cluster traffic picture
+                    store.publish(reg, paged.block_size * tail_bpt)
             else:
-                self.last_stats.update({
-                    "kv_bytes_peak_per_shard": float(
-                        per_shard * R * tail_bpt),
-                    "pool_occupancy_peak": 1.0,
-                })
+                reg.gauge("kv_bytes_peak_per_shard",
+                          "peak live tail-KV bytes on the busiest shard"
+                          ).set(float(per_shard * R * tail_bpt))
+                reg.gauge("pool_occupancy_peak",
+                          "peak live blocks / capacity").set(1.0)
         if slo is not None:
             # brownout ladder accounting (sched_shed_high must be 0:
             # the protected class is never shed, only raised on)
-            self.last_stats.update(slo.stats())
+            slo.publish(reg)
         if shards > 1:
-            self.last_stats["n_data_shards"] = float(shards)
+            reg.gauge("n_data_shards", "data shards this serve"
+                      ).set(float(shards))
             for s in range(shards):
-                self.last_stats[f"slot_waste_shard{s}"] = (
-                    1.0 - shard_busy_steps[s] / (shard_steps * per_shard)
-                    if shard_steps else 0.0)
+                reg.gauge(f"slot_waste_shard{s}",
+                          f"idle slot-step fraction on data shard {s}"
+                          ).set(1.0 - shard_busy_steps[s]
+                                / (shard_steps * per_shard)
+                                if shard_steps else 0.0)
+        self.last_stats = reg.flat_view()
+        if tr is not None:
+            self.last_trace = tr.finish()
         shed_uids = slo.shed_uids if slo is not None else ()
         return [Completion(uid=r.uid, tokens=toks.get(r.uid, []),
                            prefill_ms=pre_ms.get(r.uid, 0.0),
@@ -2358,7 +2592,11 @@ class Server:
         out: List[Completion] = []
         for batch_uids in plan.batches:
             out.extend(self._serve_batch(batch_uids, by_uid, prompts))
-        self.last_stats = {"plan_waste": plan.waste}
+        self.metrics.begin_serve()
+        self.metrics.gauge(
+            "plan_waste", "padding waste of the static batch plan"
+        ).set(plan.waste)
+        self.last_stats = self.metrics.flat_view()
         return out
 
     def _serve_batch(self, uids, by_uid, prompts) -> List[Completion]:

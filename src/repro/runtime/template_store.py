@@ -361,6 +361,52 @@ class TemplateStore(PrefixCache):
                         "blocks_pinned": float(len(gids))})
         return out
 
+    def publish(self, reg, bytes_per_block: float = 0.0,
+                max_clusters: int = 8) -> None:
+        """Publish store metrics into a telemetry registry (duck-typed).
+
+        Key names match :meth:`stats` plus the per-cluster
+        ``template_cluster{cid}_*`` trio for the ``max_clusters`` largest
+        clusters.  Lifetime ``*_total`` counters register with
+        ``persist=True`` (the store outlives serves) and republish via
+        ``set_to``; everything else is a per-serve gauge, so stale
+        cluster keys from a previous serve can never leak."""
+        st = self.stats()
+        reg.gauge("template_entries",
+                  "prefix entries registered in the store"
+                  ).set(st["template_entries"])
+        reg.gauge("template_pinned_blocks",
+                  "pool blocks pinned by store entries"
+                  ).set(st["template_pinned_blocks"])
+        reg.counter("template_hits_total",
+                    "lifetime prefix-adoption hits", persist=True
+                    ).set_to(st["template_hits_total"])
+        reg.counter("template_tokens_reused_total",
+                    "lifetime prompt tokens adopted from the store",
+                    persist=True).set_to(st["template_tokens_reused_total"])
+        reg.gauge("template_clusters",
+                  "live traffic clusters").set(st["template_clusters"])
+        reg.counter("template_clusters_retired",
+                    "clusters retired under recurrence decay", persist=True
+                    ).set_to(st["template_clusters_retired"])
+        reg.gauge("template_cohesion_mean",
+                  "mean matched/prompt token cohesion over live clusters"
+                  ).set(st["template_cohesion_mean"])
+        reg.gauge("template_bytes_pinned",
+                  "bytes of tail KV pinned by store entries"
+                  ).set(st["template_pinned_blocks"] * bytes_per_block)
+        for c in self.cluster_stats()[:max_clusters]:
+            cid = int(c["cid"])
+            reg.gauge(f"template_cluster{cid}_cohesion",
+                      f"cluster {cid}: matched/prompt cohesion"
+                      ).set(c["cohesion"])
+            reg.gauge(f"template_cluster{cid}_hit_rate",
+                      f"cluster {cid}: hits per member admission"
+                      ).set(c["hit_rate"])
+            reg.gauge(f"template_cluster{cid}_bytes_pinned",
+                      f"cluster {cid}: bytes pinned by its entries"
+                      ).set(c["blocks_pinned"] * bytes_per_block)
+
     def stats(self) -> Dict[str, float]:
         live = [c for c in self._clusters.values() if c.members]
         coh = [c.cohesion for c in live]

@@ -935,3 +935,102 @@ class TestSchedulerSwapProperties:
         pool.release(gid2)                          # co-owner lets go
         pool.check_invariants()
         assert pool.allocated() == 0
+
+
+class TestTraceSchemaProperties:
+    """The trace validator (runtime/telemetry.py) accepts every
+    well-formed request lifecycle the engine can emit — any number of
+    swap/resume round-trips per uid, any terminal shape (finish, shed
+    from a slot, shed while parked) — and flags the canonical
+    corruptions: a missing or duplicated terminal, a resume with no
+    matching swap_out, and totals that don't reconcile."""
+
+    END = ("finish", "shed", "park_shed")
+
+    @staticmethod
+    def _build(plan):
+        """Synthesize a lifecycle event list from ``plan``: one entry
+        per uid of (tokens-per-segment list, terminal shape), with a
+        synthetic monotone clock and one slot track per uid — the same
+        span geometry the engine emits (resume/swap_out spans nested in
+        the run segment they border, equal-end allowed)."""
+        events, clock = [], [0.0]
+        totals = {"sched_swaps_out": 0.0, "sched_swaps_in": 0.0,
+                  "sched_sheds": 0.0, "gen_tokens": 0.0}
+
+        def tick():
+            clock[0] += 1.0
+            return clock[0]
+
+        def ev(name, ts, uid, tid, **args):
+            events.append({"name": name, "ph": "i", "ts": ts, "pid": 0,
+                           "tid": tid, "uid": uid, "args": args})
+
+        def sp(name, ts, dur, uid, tid, **args):
+            events.append({"name": name, "ph": "X", "ts": ts, "dur": dur,
+                           "pid": 0, "tid": tid, "uid": uid, "args": args})
+
+        for uid, (segs, end) in enumerate(plan):
+            tid = f"slot{uid}"
+            ev("queued", tick(), uid, "queue")
+            for si, toks in enumerate(segs):
+                last = si == len(segs) - 1
+                t0 = tick()
+                if si > 0:                      # resuming a parked uid
+                    sp("resume", t0, 0.25, uid, tid)
+                    totals["sched_swaps_in"] += 1
+                t1 = tick()
+                totals["gen_tokens"] += toks
+                if not last or end == "park_shed":
+                    sp("swap_out", t1, 0.25, uid, tid)
+                    sp("run", t0, t1 + 0.25 - t0, uid, tid, tokens=toks)
+                    totals["sched_swaps_out"] += 1
+                else:
+                    sp("run", t0, t1 - t0, uid, tid, tokens=toks)
+                    if end == "shed":
+                        ev("shed", t1, uid, tid)
+                        totals["sched_sheds"] += 1
+                    else:
+                        ev("finish", t1, uid, tid)
+            if end == "park_shed":              # brownout while parked
+                ev("shed", tick(), uid, "engine")
+                totals["sched_sheds"] += 1
+        return events, totals
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(st.tuples(st.lists(st.integers(0, 5), min_size=1,
+                                       max_size=3),
+                              st.sampled_from(END)),
+                    min_size=1, max_size=5))
+    def test_well_formed_lifecycles_validate_clean(self, plan):
+        from repro.runtime.telemetry import validate_trace
+        events, totals = self._build(plan)
+        assert validate_trace(events, totals=totals) == []
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.tuples(st.lists(st.integers(0, 5), min_size=1,
+                                       max_size=3),
+                              st.sampled_from(END)),
+                    min_size=1, max_size=4))
+    def test_corruptions_are_flagged(self, plan):
+        from repro.runtime.telemetry import validate_trace
+        events, totals = self._build(plan)
+        # dropping uid 0's terminal orphans its run span
+        cut = [e for e in events
+               if not (e["uid"] == 0 and e["name"] in ("finish", "shed"))]
+        assert any("uid 0" in p and "terminal" in p
+                   for p in validate_trace(cut))
+        # duplicating a terminal double-finishes the request
+        dup = events + [{"name": "finish", "ph": "i", "ts": 1e9,
+                         "pid": 0, "tid": "slot0", "uid": 0, "args": {}}]
+        assert validate_trace(dup) != []
+        # a resume with no park is a pairing violation
+        orphan = events + [{"name": "resume", "ph": "X", "ts": 2e9,
+                            "dur": 1.0, "pid": 0, "tid": "slot0",
+                            "uid": 999, "args": {}}]
+        assert any("resume without matching swap_out" in p
+                   for p in validate_trace(orphan))
+        # token totals that don't add up fail reconciliation
+        off = dict(totals, gen_tokens=totals["gen_tokens"] + 1)
+        assert any("gen_tokens" in p
+                   for p in validate_trace(events, totals=off))

@@ -1,0 +1,390 @@
+"""Serving telemetry layer (runtime/telemetry.py + engine integration).
+
+Unit level: the typed metrics registry (get-or-create, kind collision,
+begin_serve per-serve drop vs lifetime persist, exact-then-bucketed
+histogram quantiles, markdown reference table), the trace-schema
+validator on synthetic good/bad event sequences, and the Chrome
+trace-event exporter roundtrip.  Engine level: lifecycle tracing must be
+schedule-invisible (greedy tokens bit-identical with tracing on vs off,
+including under preemption/swap/resume pressure), the emitted trace must
+satisfy every schema invariant and reconcile against ``last_stats``, and
+dynamic per-serve keys from one serve must never leak into the next
+serve's stats (the stale-``last_stats``-keys regression).
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import kv_compress
+from repro.core.request_cluster import Request
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.runtime.kv_pool import PagedKVConfig
+from repro.runtime.scheduler import SLOConfig
+from repro.runtime.server import Server, ServerConfig
+from repro.runtime.telemetry import (TRACE_SCHEMA, MetricsRegistry,
+                                     TelemetryConfig, Tracer,
+                                     events_from_chrome, phase_breakdown,
+                                     validate_chrome_file,
+                                     validate_jsonl_file, validate_trace,
+                                     write_chrome_trace, write_jsonl)
+from repro.runtime.template_store import TemplateStoreConfig
+
+TINY = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                   n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab=64,
+                   pad_vocab_multiple=16, dtype="float32")
+CCFG = kv_compress.KVCompressConfig(n_clusters=8, iters=4, keep_recent=16,
+                                    refresh_every=8)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return tfm.init_params(jax.random.PRNGKey(0), TINY)
+
+
+def _mixed_stream(n=8, n_high=3, seed=3, vocab=64):
+    rng = np.random.default_rng(seed)
+    reqs, prompts = [], {}
+    for i in range(n):
+        plen = int(rng.integers(6, 30))
+        prompts[i] = rng.integers(0, vocab, size=(plen,)).astype(np.int32)
+        reqs.append(Request(i, plen, int(rng.integers(6, 14)),
+                            priority=1 if i >= n - n_high else 0))
+    return reqs, prompts
+
+
+# ---------------------------------------------------------------------------
+# unit: metrics registry
+# ---------------------------------------------------------------------------
+
+
+class TestMetricsRegistry:
+
+    def test_get_or_create_and_kind_collision(self):
+        reg = MetricsRegistry()
+        c = reg.counter("x", "help")
+        c.add(2)
+        assert reg.counter("x") is c            # same object back
+        assert reg.flat_view() == {"x": 2.0}
+        with pytest.raises(ValueError):
+            reg.gauge("x")                      # kind collision
+
+    def test_begin_serve_drops_per_serve_keeps_persist(self):
+        reg = MetricsRegistry()
+        reg.gauge("template_cluster0_cohesion").set(0.9)
+        reg.counter("sched_preemptions").add(3)
+        reg.counter("template_hits_total", persist=True).set_to(7)
+        reg.begin_serve()
+        assert reg.flat_view() == {"template_hits_total": 7.0}
+        # republish is monotone: a fresh store view can't move it back
+        reg.counter("template_hits_total", persist=True).set_to(5)
+        assert reg.flat_view() == {"template_hits_total": 7.0}
+
+    def test_histogram_exact_matches_percentile(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("ttft", quantiles=(50, 95, 99), scale=1e3,
+                          suffix="_ms")
+        rng = np.random.default_rng(0)
+        vals = rng.exponential(0.05, size=200)
+        for v in vals:
+            h.observe(v)
+        assert h.exact
+        view = h.view()
+        for q in (50, 95, 99):
+            want = float(np.percentile(vals, q) * 1e3)
+            assert view[f"ttft_p{q}_ms"] == want   # bit-identical
+
+    def test_histogram_bucket_fallback_past_cap(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("lat", quantiles=(50,), max_samples=8)
+        for v in np.linspace(0.5, 4.0, 32):
+            h.observe(v)
+        assert not h.exact
+        got = h.quantile(50)
+        # bucketed estimate stays inside the observed range
+        assert 0.5 <= got <= 8.0
+        assert h.count == 32
+
+    def test_flat_view_insertion_order(self):
+        reg = MetricsRegistry()
+        for name in ("b", "a", "c"):
+            reg.gauge(name).set(1.0)
+        assert list(reg.flat_view()) == ["b", "a", "c"]
+
+    def test_reference_table(self):
+        reg = MetricsRegistry()
+        reg.counter("gen_tokens", "tokens generated")
+        reg.counter("template_hits_total", "lifetime hits", persist=True)
+        reg.histogram("ttft", "time to first token", quantiles=(50, 95),
+                      suffix="_ms")
+        table = reg.reference_table()
+        assert "| `gen_tokens` | counter | tokens generated |" in table
+        assert "counter (lifetime)" in table
+        assert "`ttft_p50_ms`, `ttft_p95_ms`" in table
+
+
+# ---------------------------------------------------------------------------
+# unit: trace validator on synthetic sequences
+# ---------------------------------------------------------------------------
+
+
+def _ev(name, ts, uid=None, tid="engine", pid=0, **args):
+    return {"name": name, "ph": "i", "ts": float(ts), "pid": pid,
+            "tid": tid, "uid": uid, "args": args}
+
+
+def _sp(name, ts, dur, uid=None, tid="engine", pid=0, **args):
+    return {"name": name, "ph": "X", "ts": float(ts), "dur": float(dur),
+            "pid": pid, "tid": tid, "uid": uid, "args": args}
+
+
+class TestValidateTrace:
+
+    def _good(self):
+        return [
+            _ev("queued", 0.0, uid=1, tid="queue"),
+            _ev("queued", 1.0, uid=2, tid="queue"),
+            _sp("engine_step", 10.0, 5.0, kind="mixed"),
+            _ev("first_token", 15.0, uid=1, tid="slot0"),
+            _sp("swap_out", 20.0, 2.0, uid=1, tid="slot0"),
+            _sp("run", 5.0, 22.0, uid=1, tid="slot0", tokens=3),
+            _sp("resume", 30.0, 2.0, uid=1, tid="slot0"),
+            _ev("finish", 40.0, uid=1, tid="slot0"),
+            _sp("run", 30.0, 10.0, uid=1, tid="slot0", tokens=4),
+            _ev("shed", 41.0, uid=2, tid="queue"),
+        ]
+
+    def test_clean_sequence_validates(self):
+        assert validate_trace(self._good()) == []
+
+    def test_missing_terminal_flagged(self):
+        evs = [e for e in self._good()
+               if not (e["name"] == "finish" and e["uid"] == 1)]
+        assert any("uid 1" in p and "terminal" in p
+                   for p in validate_trace(evs))
+
+    def test_double_terminal_flagged(self):
+        evs = self._good() + [_ev("finish", 50.0, uid=1, tid="slot0")]
+        assert any("uid 1: 2 terminal" in p for p in validate_trace(evs))
+
+    def test_partial_overlap_flagged(self):
+        evs = [_sp("engine_step", 0.0, 10.0),
+               _sp("compact", 5.0, 10.0)]      # straddles the step end
+        assert any("partially overlaps" in p for p in validate_trace(evs))
+        # proper nesting and disjoint siblings both pass
+        assert validate_trace([_sp("engine_step", 0.0, 10.0),
+                               _sp("compact", 2.0, 3.0),
+                               _sp("engine_step", 20.0, 5.0)]) == []
+
+    def test_swap_pairing(self):
+        bad = [_sp("resume", 5.0, 1.0, uid=3, tid="slot0")]
+        assert any("resume without matching swap_out" in p
+                   for p in validate_trace(bad))
+        parked = [_sp("swap_out", 1.0, 1.0, uid=3, tid="slot0")]
+        assert any("still parked" in p for p in validate_trace(parked))
+        # parked-then-shed is a legal end state
+        assert validate_trace(parked
+                              + [_ev("shed", 9.0, uid=3)]) == []
+
+    def test_totals_reconciliation(self):
+        evs = self._good()
+        totals = {"sched_swaps_out": 1.0, "sched_swaps_in": 1.0,
+                  "sched_sheds": 1.0, "decode_steps": 1.0,
+                  "gen_tokens": 7.0}
+        assert validate_trace(evs, totals=totals) == []
+        assert any("gen_tokens" in p for p in validate_trace(
+            evs, totals={**totals, "gen_tokens": 99.0}))
+        assert any("decode_steps" in p for p in validate_trace(
+            evs, totals={**totals, "decode_steps": 2.0}))
+
+    def test_phase_breakdown(self):
+        ph = phase_breakdown([
+            _sp("engine_step", 0.0, 1000.0, kind="decode"),
+            _sp("engine_step", 2000.0, 3000.0, kind="mixed"),
+            _sp("compact", 6000.0, 500.0)])
+        assert ph == {"phase_compact_ms": 0.5, "phase_decode_ms": 1.0,
+                      "phase_mixed_ms": 3.0}
+
+
+# ---------------------------------------------------------------------------
+# unit: exporters
+# ---------------------------------------------------------------------------
+
+
+class TestExporters:
+
+    def test_chrome_roundtrip(self, tmp_path):
+        tr = Tracer()
+        tr.begin_serve(100.0, n_shards=2)
+        tr.event("queued", tid="queue", uid=4, t=100.0, queue_pos=0)
+        tr.span("run", 100.0, 100.5, pid=1, tid="slot3", uid=4, tokens=5)
+        tr.event("finish", 100.5, uid=4, tid="slot3", t=100.5)
+        evs = tr.finish()
+        path = str(tmp_path / "trace.json")
+        write_chrome_trace(evs, path, n_shards=2,
+                           stats={"gen_tokens": 5.0})
+        obj = json.load(open(path))
+        assert obj["otherData"]["schema"] == TRACE_SCHEMA
+        # metadata names every (pid, tid) track for Perfetto
+        meta = {(e["pid"], e["name"]) for e in obj["traceEvents"]
+                if e["ph"] == "M"}
+        assert (1, "process_name") in meta and (1, "thread_name") in meta
+        back = events_from_chrome(obj)
+        assert [(e["name"], e["tid"], e["uid"]) for e in back] == \
+            [("queued", "queue", 4), ("run", "slot3", 4),
+             ("finish", "slot3", 4)]
+        assert back[1]["args"]["tokens"] == 5
+        assert validate_chrome_file(path) == []
+
+    def test_jsonl_roundtrip(self, tmp_path):
+        tr = Tracer()
+        tr.begin_serve(0.0)
+        tr.span("run", 0.0, 1.0, uid=1, tid="slot0", tokens=2)
+        tr.event("finish", t=1.0, uid=1, tid="slot0")
+        path = str(tmp_path / "trace.jsonl")
+        write_jsonl(tr.finish(), path, meta={"last_stats":
+                                             {"gen_tokens": 2.0}})
+        assert validate_jsonl_file(path) == []
+        bad = str(tmp_path / "bad.jsonl")
+        write_jsonl([_sp("run", 0.0, 1.0, uid=9, tid="slot0")], bad)
+        assert validate_jsonl_file(bad) != []
+
+    def test_tracer_cap_counts_dropped(self):
+        tr = Tracer(max_events=2)
+        tr.begin_serve(0.0)
+        for i in range(5):
+            tr.event("queued", uid=i, t=float(i))
+        assert len(tr.events) == 2 and tr.dropped == 3
+
+
+# ---------------------------------------------------------------------------
+# engine: tracing is schedule-invisible and traces validate
+# ---------------------------------------------------------------------------
+
+
+def _scfg(trace, pool_blocks=10):
+    return ServerConfig(
+        batch_size=2, max_seq=96, kv_compress=CCFG, prefill_chunk=8,
+        paged=PagedKVConfig(block_size=4, pool_blocks=pool_blocks),
+        use_clustered_batching=False,
+        scheduler=SLOConfig(priority_admission=False),
+        telemetry=TelemetryConfig(trace=True) if trace else None)
+
+
+class TestEngineTracing:
+
+    def test_tokens_bit_identical_and_trace_validates(self, params,
+                                                      tmp_path):
+        """Tracing on vs off under preemption/swap/resume pressure:
+        tokens must be bit-identical, and the emitted trace must pass
+        every schema invariant AND reconcile against last_stats."""
+        reqs, prompts = _mixed_stream()
+        off = Server(TINY, _scfg(False), params)
+        ref = {o.uid: o.tokens for o in off.serve(reqs, prompts)}
+        assert off.last_trace == []            # tracer never constructed
+
+        on = Server(TINY, _scfg(True), params)
+        outs = {o.uid: o.tokens for o in on.serve(reqs, prompts)}
+        assert outs == ref
+        assert on.last_stats["sched_preemptions"] >= 1.0
+        evs = on.last_trace
+        assert validate_trace(evs, totals=on.last_stats) == []
+        names = {e["name"] for e in evs}
+        # the lifecycle story is all there, including the swap arc
+        for want in ("queued", "run", "first_token", "finish",
+                     "engine_step", "prefill_chunk", "swap_out",
+                     "resume", "brownout"):
+            assert want in names, want
+        # brownout events carry the rung and a reason
+        br = [e for e in evs if e["name"] == "brownout"]
+        assert br and all("rung" in e["args"] and "why" in e["args"]
+                          for e in br)
+        # exported chrome file validates standalone (CI's check)
+        path = str(tmp_path / "trace.json")
+        on.export_trace(path)
+        assert validate_chrome_file(path) == []
+        ph = phase_breakdown(evs)
+        assert ph.get("phase_swap_out_ms", 0.0) > 0.0
+        assert any(k.startswith("phase_") for k in ph)
+
+    def test_trace_resets_between_serves(self, params):
+        srv = Server(TINY, _scfg(True, pool_blocks=48), params)
+        reqs, prompts = _mixed_stream(n=3, n_high=0)
+        srv.serve(reqs, prompts)
+        first = srv.last_trace
+        srv.serve(reqs, prompts)
+        assert validate_trace(srv.last_trace,
+                              totals=srv.last_stats) == []
+        assert srv.last_trace is not first
+
+
+# ---------------------------------------------------------------------------
+# engine: stale last_stats keys cannot leak across serves
+# ---------------------------------------------------------------------------
+
+
+class TestStaleStatsRegression:
+
+    def test_dynamic_keys_dropped_between_serves(self, params):
+        """Per-serve dynamic keys (template_cluster*, prefix_*) from a
+        templated serve must vanish from last_stats once the traffic
+        that produced them is gone; lifetime *_total keys persist."""
+        scfg = ServerConfig(
+            batch_size=2, max_seq=96, kv_compress=CCFG, prefill_chunk=8,
+            paged=PagedKVConfig(block_size=4, pool_blocks=24),
+            template_store=TemplateStoreConfig(max_entries=2))
+        srv = Server(TINY, scfg, params)
+        rng = np.random.default_rng(0)
+        tpl = rng.integers(0, 64, size=(16,)).astype(np.int32)
+        reqs, prompts = [], {}
+        for i in range(4):
+            sfx = rng.integers(0, 64, size=(3,))
+            prompts[i] = np.concatenate([tpl, sfx]).astype(np.int32)
+            reqs.append(Request(i, len(prompts[i]), 4))
+        def cid_keys(st):
+            # per-cluster keys only: template_cluster<digit>..., not the
+            # aggregate template_clusters / template_clusters_retired
+            return {k for k in st if k.startswith("template_cluster")
+                    and k[len("template_cluster")].isdigit()}
+
+        srv.serve(reqs, prompts)
+        srv.serve(reqs, prompts)               # warm serve forms clusters
+        st1 = dict(srv.last_stats)
+        assert cid_keys(st1)
+        hits_total = st1["template_hits_total"]
+        assert hits_total >= 1.0
+
+        srv.invalidate_templates()             # template traffic is gone
+        reqs2, prompts2 = _mixed_stream(n=3, n_high=0, seed=9)
+        srv.serve(reqs2, prompts2)
+        st2 = srv.last_stats
+        # the invalidated store re-clusters fresh traffic under NEW cids
+        # (the cid counter never resets), so serve 3's stats may carry
+        # new-cid keys — but every serve-2-era cid key is stale and must
+        # be gone, and the keys present must mirror the live clusters
+        live = {int(c["cid"]) for c in srv._store.cluster_stats()[:8]}
+        got = cid_keys(st2)
+        want = {f"template_cluster{cid}_{sfx}" for cid in live
+                for sfx in ("cohesion", "hit_rate", "bytes_pinned")}
+        assert got == want
+        assert not (got & cid_keys(st1))
+        # lifetime totals survive the per-serve drop, monotonically
+        assert st2["template_hits_total"] >= hits_total
+
+    def test_sched_keys_absent_without_scheduler(self, params):
+        """A scheduler-less server built after a scheduled one shares no
+        registry, and a single server never leaks sched_* keys into a
+        serve that has no scheduler — the per-server config is fixed, so
+        the cross-serve hazard is per-serve dynamic keys only (covered
+        above); here: the baseline absence contract still holds."""
+        reqs, prompts = _mixed_stream(n=3, n_high=0)
+        srv = Server(TINY, ServerConfig(
+            batch_size=2, max_seq=96, kv_compress=CCFG, prefill_chunk=8,
+            paged=PagedKVConfig(block_size=4)), params)
+        srv.serve(reqs, prompts)
+        assert not any(k.startswith("sched_") for k in srv.last_stats)
+        assert not any(k.startswith("template_") for k in srv.last_stats)
