@@ -1077,6 +1077,143 @@ def slo_bench(quick=False, seed=7, mesh_spec=None,
              f"runs={n_runs};records={len(records)};path={json_out}")
 
 
+def recurrent_bench(quick=False, seed=7, mesh_spec=None,
+                    json_out="artifacts/serve_bench.json", trace_out=None):
+    """Recurrent-state serving (core/layer_state.py): a mamba2-style
+    reduced hybrid config — the SSD reduced config with an interleaved
+    clustered-ring attention layer, pattern 'GM' — served by the
+    chunked + paged engine vs blocking one-at-a-time static decode.
+    The layer-state-family exit pin as a benchmark: greedy tokens must
+    be bit-identical across the two schedules, the per-family
+    state-byte split (state_bytes_ring / state_bytes_recurrent) is
+    recorded, and kv_retired_recurrent must stay 0 (fixed-size state
+    folds every position; nothing retires).  ``--mesh 2x4`` adds the
+    sharded chunked + paged variant, compared against the same
+    single-device blocking oracle; ``--trace-out`` writes the paged
+    serves' Chrome traces (state_families snapshot + lifecycle spans)."""
+    import dataclasses as dc
+
+    from repro import configs
+    from repro.kernels.ops import interpret_default
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models import transformer as tfm
+    from repro.runtime.kv_pool import PagedKVConfig
+    from repro.runtime.server import Server, ServerConfig
+    from repro.runtime.telemetry import TelemetryConfig
+
+    # 'M'-only patterns serve dense (the pool holds nothing for
+    # fixed-size state), so the paged leg needs one ring-family layer:
+    # keep the reduced SSD mixer and interleave a clustered 'G' layer
+    GM = dc.replace(
+        configs.get_reduced("mamba2-2.7b"), name="mamba2-hybrid",
+        family="hybrid", layer_pattern="GM", n_kv_heads=2, head_dim=16,
+        d_ff=128, dtype="float32").validate()
+    params = tfm.init_params(jax.random.PRNGKey(0), GM)
+    rng = np.random.default_rng(seed)
+    n = 4 if quick else 8
+    reqs = [Request(i, int(rng.integers(8, 28)), int(rng.integers(4, 11)))
+            for i in range(n)]
+    prompts = {r.uid: rng.integers(0, GM.vocab, size=(r.prompt_len,))
+               .astype(np.int32) for r in reqs}
+    ccfg = kv_compress.KVCompressConfig(n_clusters=4, iters=2,
+                                        keep_recent=16, refresh_every=4)
+    mesh = make_serving_mesh(mesh_spec) if mesh_spec else None
+
+    def scfg(chunked_paged, use_mesh, trace=False):
+        if not chunked_paged:
+            # the exit-pin oracle: one request at a time, stepwise decode
+            return ServerConfig(batch_size=1, engine="static",
+                                use_clustered_batching=False)
+        return ServerConfig(
+            batch_size=4, max_seq=96, kv_compress=ccfg, prefill_chunk=8,
+            paged=PagedKVConfig(block_size=4),
+            telemetry=TelemetryConfig(trace=True) if trace else None,
+            mesh=mesh if use_mesh else None)
+
+    blocking = "serve_recurrent_blocking"
+    variants = [(blocking, scfg(False, False)),
+                ("serve_recurrent_paged_chunked",
+                 scfg(True, False, trace=bool(trace_out)))]
+    if mesh is not None:
+        tag = mesh_spec.lower()
+        variants.append((f"serve_recurrent_paged_chunked_mesh{tag}",
+                         scfg(True, True, trace=bool(trace_out))))
+    probe = [Request(10_000 + i, l, g)
+             for i, (l, g) in enumerate([(9, 3), (11, 5)])]
+    probe_prompts = {r.uid: rng.integers(0, GM.vocab, size=(r.prompt_len,))
+                     .astype(np.int32) for r in probe}
+
+    records, tokens_by_variant = [], {}
+    for name, cfg in variants:
+        srv = Server(GM, cfg, params)
+        srv.serve(probe, probe_prompts)       # warm the launch shapes
+        t0 = time.perf_counter()
+        outs = srv.serve(reqs, prompts)
+        wall = time.perf_counter() - t0
+        st = {k: float(v) for k, v in srv.last_stats.items()}
+        tokens_by_variant[name] = {o.uid: o.tokens for o in outs}
+        gen = sum(len(o.tokens) for o in outs)
+        # the static oracle publishes no engine stats — rate wall-side
+        # so blocking and paged rows stay comparable
+        emit(name, wall * 1e6,
+             f"tok_per_s_wall={gen / max(wall, 1e-9):.1f};"
+             f"state_bytes_ring={st.get('state_bytes_ring', 0):.0f};"
+             f"state_bytes_recurrent="
+             f"{st.get('state_bytes_recurrent', 0):.0f};"
+             f"kv_retired_recurrent="
+             f"{st.get('kv_retired_recurrent', 0):.0f}")
+        if cfg.telemetry is not None and trace_out:
+            os.makedirs(trace_out, exist_ok=True)
+            suffix = name.removeprefix("serve_recurrent_paged_chunked")
+            srv.export_trace(os.path.join(
+                trace_out, f"trace_recurrent{suffix}.json"))
+        records.append({
+            "name": name, "seed": seed,
+            "mesh": mesh_spec if cfg.mesh is not None else "1x1",
+            "batch_size": cfg.batch_size, "requests": n,
+            "wall_s": wall, "gen_tokens": gen,
+            "tok_per_s_wall": gen / max(wall, 1e-9),
+            "state_bytes_ring": st.get("state_bytes_ring", 0.0),
+            "state_bytes_recurrent": st.get("state_bytes_recurrent", 0.0),
+            "kv_retired_recurrent": st.get("kv_retired_recurrent", 0.0),
+            **st,
+        })
+
+    by_name = {r["name"]: r for r in records}
+    comparisons = {}
+    for pname in [v for v, _ in variants if v != blocking]:
+        rb, rp = by_name[blocking], by_name[pname]
+        same = tokens_by_variant[blocking] == tokens_by_variant[pname]
+        cmp = {
+            "tok_per_s_wall_blocking": rb["tok_per_s_wall"],
+            "tok_per_s_wall_paged_chunked": rp["tok_per_s_wall"],
+            "speedup": rp["tok_per_s_wall"]
+            / max(rb["tok_per_s_wall"], 1e-9),
+            "state_bytes_ring": rp["state_bytes_ring"],
+            "state_bytes_recurrent": rp["state_bytes_recurrent"],
+            "kv_retired_recurrent": rp["kv_retired_recurrent"],
+            "tokens_identical": bool(same),
+        }
+        comparisons[pname] = cmp
+        emit(f"{pname}_vs_blocking", 0.0,
+             f"speedup={cmp['speedup']:.2f}x;"
+             f"state_bytes_recurrent={cmp['state_bytes_recurrent']:.0f};"
+             f"kv_retired_recurrent={cmp['kv_retired_recurrent']:.0f};"
+             f"tokens_identical={same}")
+
+    if json_out:
+        scenario = "serve_recurrent" + ("_quick" if quick else "")
+        run_key = {"git_sha": _git_sha(), "seed": seed,
+                   "mesh": mesh_spec or "1x1", "scenario": scenario}
+        n_runs = _append_serve_json(json_out, run_key, {
+            "quick": bool(quick), "timestamp": time.time(),
+            "backend": jax.default_backend(),
+            "pallas_interpret": bool(interpret_default()),
+            "records": records, "comparisons": comparisons})
+        emit("serve_recurrent_json", 0.0,
+             f"runs={n_runs};records={len(records)};path={json_out}")
+
+
 def roofline_summary(quick=False):
     arts = sorted(glob.glob("artifacts/dryrun/*.json"))
     if not arts:
@@ -1109,7 +1246,7 @@ BENCHES = [t1_median_throughput, t2_recognition_rate, t3_fixed_point,
            t4_optimal_k, t5_kmedians_end2end, kv_compress_bench,
            request_batching_bench, grad_compress_bench, serve_bench,
            prefix_share_bench, template_store_bench, window_bench,
-           slo_bench, roofline_summary]
+           slo_bench, recurrent_bench, roofline_summary]
 
 
 def main() -> None:
@@ -1135,8 +1272,9 @@ def main() -> None:
                          "bucketed path")
     ap.add_argument("--trace-out", default=None,
                     help="directory where the traced scenarios (slo, "
-                         "template_store) write Chrome trace-event JSON "
-                         "(Perfetto-loadable request-lifecycle timelines)")
+                         "template_store, recurrent) write Chrome "
+                         "trace-event JSON (Perfetto-loadable "
+                         "request-lifecycle timelines)")
     args = ap.parse_args()
     only = args.only or args.scenario
     print("name,us_per_call,derived")
@@ -1146,7 +1284,7 @@ def main() -> None:
         if b is serve_bench:
             b(quick=args.quick, seed=args.seed, mesh_spec=args.mesh,
               json_out=args.json_out, paged=args.paged)
-        elif b in (template_store_bench, slo_bench):
+        elif b in (template_store_bench, slo_bench, recurrent_bench):
             b(quick=args.quick, seed=args.seed, mesh_spec=args.mesh,
               json_out=args.json_out, trace_out=args.trace_out)
         elif b in (prefix_share_bench, window_bench):

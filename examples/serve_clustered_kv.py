@@ -366,6 +366,51 @@ def main():
           f"positions, frontier retired {stw['kv_retired_frontier']:.0f}, "
           f"{stw['pool_blocks_end']:.0f} blocks held at drain")
 
+    # --- recurrent-state serving (layer-state families open mamba2) ---
+    # RetentionPolicy answers "which ring positions may drop?", but a
+    # mamba2 ('M') or RG-LRU ('R') layer holds no ring at all — its
+    # per-slot state is a fixed-size (conv window, state matrix) pair.
+    # core/layer_state.py names that split: every layer belongs to a
+    # LayerState family, RingKVState ('G'/'L', retention-governed,
+    # pool-backed when paged) or RecurrentState ('M'/'R', advanced inside
+    # the same mixed prefill+decode launch, snapshotted whole).  A hybrid
+    # 'GM' model therefore serves through the SAME chunked + paged engine
+    # — 'G' layers cluster and page as above while the 'M' layer's state
+    # rides along — and greedy tokens stay bit-identical to blocking
+    # one-at-a-time decode.  Checkpoints carry both families, so
+    # prefix-sharing and preempt -> swap -> resume work unchanged (the
+    # recurrent state's bytes are priced into the swap ledger).
+    from repro.models.config import SSMConfig
+    GMREC = ModelConfig(name="serve-lm-gm", family="hybrid", n_layers=2,
+                        d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+                        d_ff=128, vocab=512, pad_vocab_multiple=128,
+                        dtype="float32", layer_pattern="GM",
+                        ssm=SSMConfig(d_state=16, d_conv=4, expand=2,
+                                      head_dim=32, n_groups=1, chunk=32))
+    params_r = tfm.init_params(jax.random.PRNGKey(2), GMREC)
+    r_reqs = [Request(i, int(rng.integers(8, 28)), 8) for i in range(8)]
+    r_prompts = {r.uid: rng.integers(0, 512, size=(r.prompt_len,)).astype(
+        np.int32) for r in r_reqs}
+    srv_rb = Server(GMREC, ServerConfig(batch_size=1, engine="static",
+                                        use_clustered_batching=False),
+                    params_r)
+    outs_rb = srv_rb.serve(r_reqs, r_prompts)
+    srv_r = Server(GMREC, ServerConfig(batch_size=4, max_seq=96,
+                                       kv_compress=ccfg_w, prefill_chunk=8,
+                                       paged=PagedKVConfig(block_size=8)),
+                   params_r)
+    outs_r = srv_r.serve(r_reqs, r_prompts)
+    same_r = all(a.tokens == b.tokens for a, b in
+                 zip(sorted(outs_r, key=lambda o: o.uid),
+                     sorted(outs_rb, key=lambda o: o.uid)))
+    str_ = srv_r.last_stats
+    print(f"[server] hybrid recurrent model ('GM', chunked + paged): tokens "
+          f"{'identical' if same_r else 'DIVERGED'} vs blocking decode; "
+          f"state bytes/slot ring {str_['state_bytes_ring']:.0f} / "
+          f"recurrent {str_['state_bytes_recurrent']:.0f}, recurrent "
+          f"retired {str_['kv_retired_recurrent']:.0f} (fixed-size state "
+          f"never retires), {str_['pool_blocks_end']:.0f} blocks at drain")
+
     # --- mesh-sharded serving (slots x tensor parallel) ---
     # With N>1 visible devices (XLA_FLAGS above) the same queue is served
     # on a (data, model) mesh: the engine cache becomes sharded arrays

@@ -17,7 +17,7 @@ live, positions below it are retired, and positions at/after ``t``
 policy sets ``keep_unwritten`` (quota mode reserves storage up front, so
 unwritten positions hold blocks that must not be swept).
 
-Three concrete policies:
+Four concrete policies:
 
 * :class:`FrontierRetention` — the clustered coverage frontier.  Owns
   the host-side ``cov`` mirror and the frontier-advance formula
@@ -33,6 +33,10 @@ Three concrete policies:
   keep_unwritten = True); instead the full depth of a request is
   reserved at admission and returned only at slot exit, so an
   oversubscribed burst defers admissions rather than dying mid-decode.
+* :class:`RecurrentRetention` — recurrent-state layers (Mamba2 /
+  RG-LRU): a named no-op.  Fixed-size running state has no positions to
+  retire; the policy exists so family-driven engine bookkeeping and the
+  ``kv_retired_recurrent`` diagnostics stay explicit.
 
 Policies also carry the *write protection* registry that used to be
 ``free_covered``'s ``exclude=`` parameter: before a sweep, the engine
@@ -156,6 +160,41 @@ class WindowRetention(RetentionPolicy):
         super().on_slot_free(slot)
         if slot < self._head.shape[0]:
             self._head[slot] = 0
+
+
+class RecurrentRetention(RetentionPolicy):
+    """Recurrent-state layers (Mamba2 'M', RG-LRU 'R'): nothing retires.
+
+    The recurrent family (see :mod:`repro.core.layer_state`) carries a
+    fixed-size running state per slot instead of a position-indexed
+    ring: every past token is already folded into ``(conv, ssm)`` /
+    ``(conv, h)``, so there are no claimed positions to retire, protect,
+    or sweep — the policy is a named no-op.  It exists so the engine's
+    family-driven bookkeeping stays uniform: the per-serve retirement
+    counters carry an explicit ``kv_retired_recurrent = 0`` entry (the
+    invariant, not an omission), and diagnostics name the family instead
+    of silently skipping it.
+    """
+
+    kind = "recurrent"
+    #: nothing is position-claimed, so sweeps must not touch these slots
+    keep_unwritten = True
+
+    def __init__(self, kinds=("M", "R")):
+        self.kinds = tuple(kinds)
+
+    def retire_lo(self, slot: int, t: int) -> int:
+        return 0
+
+    def advance(self, slot: int, t: int) -> int:
+        """Stream-head bookkeeping analogue of WindowRetention.advance:
+        recurrent state folds every position, so zero positions retire."""
+        return 0
+
+    def diagnostics(self) -> dict:
+        """Named per-family counters for the end-of-serve publish."""
+        return {"kv_retired_recurrent": 0,
+                "retention_recurrent_kinds": "".join(self.kinds)}
 
 
 class QuotaRetention(RetentionPolicy):

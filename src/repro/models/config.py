@@ -126,15 +126,21 @@ class ModelConfig:
     def serving_gate_report(self) -> Optional[str]:
         """Why this config cannot serve chunked/paged — or None if it can.
 
-        The continuous engine's retention-policy layer covers per-layer
-        GQA attention with a retention rule: 'G' layers retire behind
-        the clustered coverage frontier (FrontierRetention) or a block
-        quota (QuotaRetention), and 'L' layers retire behind their own
-        sliding window (WindowRetention).  Anything else — recurrent /
-        SSM sub-layers, MLA latent caches, encoder–decoder cross
-        attention, modality frontends — has no retention policy yet.
-        The report names each offending layer and its attention kind so
-        the validation error says *what* to fix, not just 'unsupported'.
+        The continuous engine covers both layer-state families (see
+        :mod:`repro.core.layer_state`): ring-KV layers with a retention
+        rule — 'G' layers retire behind the clustered coverage frontier
+        (FrontierRetention) or a block quota (QuotaRetention), 'L'
+        layers behind their own sliding window (WindowRetention) — and
+        recurrent-state layers ('M' Mamba2 SSD, 'R' RG-LRU) whose
+        fixed-size state is advanced in the mixed launch and never
+        retires (RecurrentRetention).  What remains ungated: MLA latent
+        caches, encoder–decoder cross attention, modality frontends,
+        'L' without a window, and unknown kinds.
+
+        The report enumerates **every** unsupported (layer, kind) pair
+        — not just the first blocking layer — so a mixed config's
+        diagnostics name all the gaps at once and the validation error
+        says *what* to fix, not just 'unsupported'.
         """
         problems = []
         if self.is_encdec:
@@ -149,27 +155,23 @@ class ModelConfig:
                             "prepended tokens) breaks position-0 admission")
         kind_names = {"G": "global attention", "L": "local attention",
                       "R": "RG-LRU recurrence", "M": "Mamba2 SSD"}
-        bad = {}
         for i in range(self.n_layers):
             kind = self.pattern_for_layer(i)
-            if kind == "G":
+            if kind in ("G", "M", "R"):
                 continue
             if kind == "L" and self.sliding_window:
                 continue
-            bad.setdefault(kind, []).append(i)
-        for kind, layers in sorted(bad.items()):
-            what = kind_names.get(kind, f"'{kind}'")
+            what = kind_names.get(kind, f"unknown kind '{kind}'")
             why = (" without sliding_window" if kind == "L"
-                   else " (stateful, not a KV ring)")
-            problems.append(
-                f"layer{'s' if len(layers) > 1 else ''} "
-                f"{', '.join(map(str, layers))}: {what}{why}")
+                   else " has no layer-state family")
+            problems.append(f"layer {i}: {what}{why}")
         if not problems:
             return None
-        return (f"model '{self.name}' needs retention policies the engine "
+        return (f"model '{self.name}' needs state handling the engine "
                 "lacks: " + "; ".join(problems) +
-                " — only global-attention GQA layers ('G') and "
-                "sliding-window local layers ('L') serve chunked/paged")
+                " — global attention ('G'), sliding-window local layers "
+                "('L'), and recurrent-state layers ('M' Mamba2 SSD, 'R' "
+                "RG-LRU) serve chunked/paged")
 
     def validate(self) -> "ModelConfig":
         assert self.n_heads % self.n_kv_heads == 0 or self.attn_kind == "mla"

@@ -17,6 +17,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import layer_state
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import rglru as rg_mod
@@ -148,8 +149,20 @@ def init_sublayer_cache(cfg: ModelConfig, kind: str, batch: int,
 
 
 def sublayer_prefill(p, h, cfg: ModelConfig, kind: str, *, positions,
-                     kv_repeat: int, max_seq: int, enc_kv=None):
-    """Returns (h, cache, aux)."""
+                     kv_repeat: int, max_seq: int, enc_kv=None,
+                     recurrent_mode: str = "scan"):
+    """Returns (h, cache, aux).
+
+    ``recurrent_mode`` selects how recurrent-state layers ('M'/'R')
+    compute the prefill: "scan" (default) uses the parallel forms —
+    chunked SSD / log-depth associative scan — which are mathematically
+    exact but not *bitwise* equal to stepping the one-token decode;
+    "sequential" steps the decode recurrence position by position, so a
+    prefill is bit-identical to feeding the prompt through the decode
+    path one token at a time.  The serving engine uses "sequential":
+    its chunked admission advances recurrent state token-by-token inside
+    the mixed launch, and blocking admission must match it bitwise.
+    """
     aux = jnp.float32(0.0)
     if kind in ("G", "L"):
         x = apply_norm(p["norm1"], h, cfg)
@@ -182,15 +195,43 @@ def sublayer_prefill(p, h, cfg: ModelConfig, kind: str, *, positions,
         # run chunked SSD for outputs; rebuild the state with a short
         # decode burn-in is wasteful, so recompute final state directly.
         x = apply_norm(p["norm1"], h, cfg)
-        y, cache = _ssm_prefill(p["ssm"], x, cfg)
+        if recurrent_mode == "sequential":
+            y, cache = _recurrent_prefill_sequential(
+                lambda xt, c: ssm_mod.ssm_decode(p["ssm"], xt, cfg, c),
+                x, ssm_mod.init_cache_ssm(cfg, x.shape[0]))
+        else:
+            y, cache = _ssm_prefill(p["ssm"], x, cfg)
         return h + y, cache, aux
     if kind == "R":
         x = apply_norm(p["norm1"], h, cfg)
-        y, cache = rg_mod.rglru_prefill(p["rg"], x, cfg)
+        if recurrent_mode == "sequential":
+            y, cache = _recurrent_prefill_sequential(
+                lambda xt, c: rg_mod.rglru_decode(p["rg"], xt, cfg, c),
+                x, rg_mod.init_cache_rglru(cfg, x.shape[0]))
+        else:
+            y, cache = rg_mod.rglru_prefill(p["rg"], x, cfg)
         h = h + y
         h, aux = _ffn(p, h, cfg)
         return h, cache, aux
     raise ValueError(kind)
+
+
+def _recurrent_prefill_sequential(step_fn, x, cache):
+    """Prefill a recurrent layer by stepping its one-token decode.
+
+    x (B, S, d) normed input; ``step_fn(xt (B,1,d), cache) -> (y, cache)``
+    is the layer's decode recurrence.  Returns (y (B, S, d), cache) that
+    is bit-identical — not just numerically close — to feeding the S
+    positions through the decode path one at a time, which is what the
+    chunked serving engine's mixed launch does.
+    """
+
+    def step(c, xt):
+        y, c = step_fn(xt[:, None, :], c)
+        return c, y[:, 0]
+
+    cache, ys = jax.lax.scan(step, cache, x.transpose(1, 0, 2))
+    return ys.transpose(1, 0, 2), cache
 
 
 def _ssm_prefill(p, x, cfg: ModelConfig):
@@ -225,7 +266,10 @@ def _ssm_prefill(p, x, cfg: ModelConfig):
 def sublayer_decode(p, h, cfg: ModelConfig, kind: str, cache, t, *,
                     kv_repeat: int, enc_kv=None, chunk_len=None):
     """h (B,1,d) — or (B,L,d) mixed-mode with per-slot ``chunk_len``
-    (chunked prefill interleaved with decode; attention layers only).
+    (chunked prefill interleaved with decode).  Ring-family layers
+    stream the chunk into their KV at exact positions; recurrent-state
+    layers ('M'/'R') advance their fixed-size state column by column
+    with per-slot masking (:func:`_recurrent_mixed_advance`).
     Returns (h, cache')."""
     if kind in ("G", "L"):
         x = apply_norm(p["norm1"], h, cfg)
@@ -248,22 +292,57 @@ def sublayer_decode(p, h, cfg: ModelConfig, kind: str, cache, t, *,
             h = h + attn.cross_attn_apply(p["xattn"], x, enc_kv, cfg)
         h, _ = _ffn(p, h, cfg)
         return h, cache
-    if chunk_len is not None:
-        raise NotImplementedError(
-            "mixed-mode chunked decode supports attention layers only "
-            f"(got layer kind {kind!r}; recurrent state must be stepped "
-            "token by token)")
     if kind == "M":
         x = apply_norm(p["norm1"], h, cfg)
-        y, cache = ssm_mod.ssm_decode(p["ssm"], x, cfg, cache)
+        if chunk_len is None:
+            y, cache = ssm_mod.ssm_decode(p["ssm"], x, cfg, cache)
+        else:
+            y, cache = _recurrent_mixed_advance(
+                lambda xt, c: ssm_mod.ssm_decode(p["ssm"], xt, cfg, c),
+                x, cache, chunk_len)
         return h + y, cache
     if kind == "R":
         x = apply_norm(p["norm1"], h, cfg)
-        y, cache = rg_mod.rglru_decode(p["rg"], x, cfg, cache)
+        if chunk_len is None:
+            y, cache = rg_mod.rglru_decode(p["rg"], x, cfg, cache)
+        else:
+            y, cache = _recurrent_mixed_advance(
+                lambda xt, c: rg_mod.rglru_decode(p["rg"], xt, cfg, c),
+                x, cache, chunk_len)
         h = h + y
         h, _ = _ffn(p, h, cfg)
         return h, cache
     raise ValueError(kind)
+
+
+def _recurrent_mixed_advance(step_fn, x, cache, chunk_len):
+    """Advance recurrent state through a mixed prefill+decode launch.
+
+    x (B, L, d) normed chunk columns; chunk_len (B,) valid columns per
+    slot (decode slots carry 1).  Scans the L columns through the
+    layer's one-token decode ``step_fn``, masking each slot's state
+    update once its chunk is exhausted — so every slot's state advances
+    by exactly its own tokens, in order, with per-step ops identical to
+    the blocking decode path (bitwise-equal states by construction).
+    Columns at/after chunk_len produce garbage outputs that the caller's
+    last-valid-row gather never reads.
+    """
+    b, L, _ = x.shape
+    cl = jnp.broadcast_to(jnp.asarray(chunk_len, jnp.int32), (b,))
+
+    def col(c, xs):
+        xt, i = xs
+        y, c_new = step_fn(xt[:, None, :], c)            # (B, 1, d)
+        keep = i < cl                                    # (B,)
+        c = jax.tree.map(
+            lambda new, old: jnp.where(
+                keep.reshape((-1,) + (1,) * (new.ndim - 1)), new, old),
+            c_new, c)
+        return c, y[:, 0]
+
+    cache, ys = jax.lax.scan(col, cache,
+                             (x.transpose(1, 0, 2), jnp.arange(L)))
+    return ys.transpose(1, 0, 2), cache
 
 
 # ---------------------------------------------------------------------------
@@ -523,12 +602,19 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
 
 
 def clustered_slot_state(cache, j):
-    """Snapshot slot ``j``'s per-slot clustered summary rows — centroids,
-    counts, coverage frontier (attention.CLUSTERED_SLOT_KEYS) — from
-    every clustered leaf of an engine cache.  Tail payloads are NOT
-    copied: in the paged engine they live in shared pool blocks that the
-    prefix cache pins by ref count instead.  Returns a cache-shaped
-    pytree (non-clustered leaves dropped to None) that
+    """Snapshot slot ``j``'s per-slot state from every snapshot-bearing
+    leaf of an engine cache:
+
+    * clustered ring leaves — the summary rows (centroids, counts,
+      coverage frontier; attention.CLUSTERED_SLOT_KEYS).  Tail payloads
+      are NOT copied: in the paged engine they live in shared pool
+      blocks that the prefix cache pins by ref count instead.
+    * recurrent-state leaves ('M'/'R': {"conv","ssm"} / {"conv","h"}) —
+      the *whole* fixed-size state.  For the recurrent family the state
+      IS the checkpoint, so template-store prefix sharing and the
+      preempt→swap→resume path carry it in this same snapshot format.
+
+    Returns a cache-shaped pytree (other leaves dropped to None) that
     ``restore_clustered_slot_state`` writes back into any slot."""
     def leaf(node):
         stacked = node["k_cents"].ndim == 5       # scan: (L, B, ...)
@@ -536,10 +622,17 @@ def clustered_slot_state(cache, j):
         return {k: jax.lax.dynamic_slice_in_dim(node[k], j, 1, axis=ax)
                 for k in attn.CLUSTERED_SLOT_KEYS}
 
+    def rleaf(node):
+        ax = 1 if layer_state.recurrent_leaf_stacked(node) else 0
+        return {k: jax.lax.dynamic_slice_in_dim(node[k], j, 1, axis=ax)
+                for k in node}
+
     def walk(node):
         if isinstance(node, dict):
             if "k_cents" in node:
                 return leaf(node)
+            if layer_state.is_recurrent_leaf(node):
+                return rleaf(node)
             return {k: walk(v) for k, v in node.items()}
         if isinstance(node, list):
             return [walk(v) for v in node]
@@ -550,9 +643,11 @@ def clustered_slot_state(cache, j):
 
 def restore_clustered_slot_state(cache, snap, j):
     """Write a ``clustered_slot_state`` snapshot into slot ``j`` of every
-    clustered leaf (prefix-sharing admission: the reused prompt centroids
-    + coverage frontier land in the fresh slot; its tail blocks are
-    adopted through the block table separately)."""
+    snapshot-bearing leaf (prefix-sharing admission and swap-in resume:
+    the reused prompt centroids + coverage frontier — and, for
+    recurrent-state layers, the full (conv, ssm)/(conv, h) checkpoint —
+    land in the fresh slot; ring tail blocks are adopted through the
+    block table separately)."""
     def walk(node, s):
         if isinstance(node, dict):
             if "k_cents" in node:
@@ -562,6 +657,12 @@ def restore_clustered_slot_state(cache, snap, j):
                     k: jax.lax.dynamic_update_slice_in_dim(
                         node[k], s[k].astype(node[k].dtype), j, axis=ax)
                     for k in attn.CLUSTERED_SLOT_KEYS})
+            if layer_state.is_recurrent_leaf(node):
+                ax = 1 if layer_state.recurrent_leaf_stacked(node) else 0
+                return dict(node, **{
+                    k: jax.lax.dynamic_update_slice_in_dim(
+                        node[k], s[k].astype(node[k].dtype), j, axis=ax)
+                    for k in node})
             return {k: walk(v, s[k]) for k, v in node.items()}
         if isinstance(node, list):
             return [walk(v, sv) for v, sv in zip(node, s)]
@@ -572,13 +673,19 @@ def restore_clustered_slot_state(cache, snap, j):
 
 def prefill(params, cfg: ModelConfig, tokens, *, max_seq: int,
             frontend_embeds=None, enc_embeds=None, kv_repeat: int = 1,
-            last_pos=None):
+            last_pos=None, recurrent_mode: str = "scan"):
     """Full-sequence prefill.  Returns (last_logits (B, V), cache).
 
     ``last_pos`` (traced scalar ok) selects which position's logits to
     return — needed when prompts are right-padded to a bucket length (the
     continuous batcher): the causal mask makes position last_pos exact
-    regardless of the padding behind it."""
+    regardless of the padding behind it.
+
+    ``recurrent_mode`` (see :func:`sublayer_prefill`): the serving
+    engine passes "sequential" so recurrent-state layers prefill by
+    stepping their decode recurrence — bit-identical to chunked
+    admission through the mixed launch; "scan" keeps the parallel
+    chunked-SSD / associative-scan forms for training-style use."""
     enc_out = None
     cross_cache = None
     if cfg.is_encdec:
@@ -592,7 +699,7 @@ def prefill(params, cfg: ModelConfig, tokens, *, max_seq: int,
         ekv = _layer_enc_kv(lp, enc_out, cfg)
         h, c, _ = sublayer_prefill(lp, h, cfg, "G", positions=positions,
                                    kv_repeat=kv_repeat, max_seq=max_seq,
-                                   enc_kv=ekv)
+                                   enc_kv=ekv, recurrent_mode=recurrent_mode)
         caches["prefix"].append(c)
         cross["prefix"].append(ekv)
 
@@ -603,7 +710,8 @@ def prefill(params, cfg: ModelConfig, tokens, *, max_seq: int,
                 ekv = _layer_enc_kv(lp[f"sub{j}"], enc_out, cfg)
                 hh, c, _ = sublayer_prefill(
                     lp[f"sub{j}"], hh, cfg, kind, positions=positions,
-                    kv_repeat=kv_repeat, max_seq=max_seq, enc_kv=ekv)
+                    kv_repeat=kv_repeat, max_seq=max_seq, enc_kv=ekv,
+                    recurrent_mode=recurrent_mode)
                 cs[f"sub{j}"] = c
                 if ekv is not None:
                     cs[f"xkv{j}"] = ekv
@@ -617,7 +725,7 @@ def prefill(params, cfg: ModelConfig, tokens, *, max_seq: int,
         ekv = _layer_enc_kv(lp, enc_out, cfg)
         h, c, _ = sublayer_prefill(lp, h, cfg, kind, positions=positions,
                                    kv_repeat=kv_repeat, max_seq=max_seq,
-                                   enc_kv=ekv)
+                                   enc_kv=ekv, recurrent_mode=recurrent_mode)
         caches["tail"].append(c)
         cross["tail"].append(ekv)
 
@@ -645,8 +753,9 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, t, *,
     positions t..t+chunk_len-1.  The returned logits are each slot's LAST
     valid row — the next-token distribution for decode slots, and the
     first-generated-token distribution when a slot's final prompt chunk
-    lands.  Attention-layer models only (no recurrent state, no MLA,
-    no encoder-decoder)."""
+    lands.  Covers both layer-state families (ring-KV attention and
+    'M'/'R' recurrent state); MLA latent caches and encoder-decoder
+    remain unsupported."""
     if chunk_len is not None and cfg.is_encdec:
         raise NotImplementedError("mixed-mode chunked decode is "
                                   "decoder-only")
@@ -746,6 +855,41 @@ def _sublayer_decode_window_packed(p, h, cfg: ModelConfig, cache, *,
     return h, cache
 
 
+def _sublayer_decode_recurrent_packed(p, h, cfg: ModelConfig, cache, kind,
+                                      *, row_slot, row_pos, row_cidx,
+                                      width):
+    """One recurrent sublayer ('M'/'R') over packed rows.
+
+    Recurrent state is slot-indexed and fixed-size, and must advance one
+    token at a time in position order.  A slot's rows within a packed
+    step carry distinct chunk indices (row_cidx 0..chunk_len-1), so the
+    ``width`` rounds of this loop sequence them exactly: round ``jj``
+    gathers every row's current slot state, steps all rows through the
+    one-token decode, and scatters back only rows with cidx == jj (at
+    most one row per slot per round → conflict-free).  Per-row math is
+    batch-independent, so each round is bit-identical to the dense
+    one-token decode; padding rows (row_pos < 0) never scatter.
+    """
+    x = apply_norm(p["norm1"], h, cfg)                   # (N, 1, d)
+    decode = ssm_mod.ssm_decode if kind == "M" else rg_mod.rglru_decode
+    pp = p["ssm"] if kind == "M" else p["rg"]
+    n_slots = cache["conv"].shape[0]
+    y = jnp.zeros_like(h)
+    for jj in range(width):
+        sel = (row_cidx == jj) & (row_pos >= 0)          # (N,)
+        st = jax.tree.map(lambda a: a[row_slot], cache)
+        y_j, st_new = decode(pp, x, cfg, st)
+        idx = jnp.where(sel, row_slot, n_slots)
+        cache = jax.tree.map(
+            lambda a, nr: a.at[idx].set(nr.astype(a.dtype), mode="drop"),
+            cache, st_new)
+        y = jnp.where(sel[:, None, None], y_j.astype(y.dtype), y)
+    h = h + y
+    if kind == "R":
+        h, _ = _ffn(p, h, cfg)
+    return h, cache
+
+
 def decode_step_packed(params, cfg: ModelConfig, cache, tokens, row_slot,
                        row_pos, row_tw, row_cidx, block_tables, *,
                        block_size: int, width: int = 1,
@@ -763,11 +907,11 @@ def decode_step_packed(params, cfg: ModelConfig, cache, tokens, row_slot,
     cache'): every row's next-token distribution — the engine reads each
     slot's last valid row (decode slots: their one row; an admitting
     slot's final chunk row carries its first generated token).
-    Decoder-only models whose layers all carry a retention policy ('G'
-    clustered/quota + 'L' sliding-window — the paged engine's gate); MLP
-    / norms / embeddings are position-independent, so treating rows as
-    batch is exact, and per-row outputs are bit-identical to the dense
-    launch."""
+    Decoder-only models whose layers all carry a layer-state family
+    ('G' clustered/quota + 'L' sliding-window rings, 'M'/'R' recurrent
+    state — the paged engine's gate); MLP / norms / embeddings are
+    position-independent, so treating rows as batch is exact, and
+    per-row outputs are bit-identical to the dense launch."""
     tokens = jnp.where(row_pos >= 0, tokens, 0)[:, None]   # (N, 1)
     h = embed_tokens(params["embed"], tokens, cfg)
     if cfg.pos_kind == "abs_sinusoidal":
@@ -777,6 +921,10 @@ def decode_step_packed(params, cfg: ModelConfig, cache, tokens, row_slot,
     h = annotate(h, "batch", "seq", "d_model")
 
     def step(p, hh, c, kind):
+        if kind in ("M", "R"):
+            return _sublayer_decode_recurrent_packed(
+                p, hh, cfg, c, kind, row_slot=row_slot, row_pos=row_pos,
+                row_cidx=row_cidx, width=width)
         if kind == "L":
             return _sublayer_decode_window_packed(
                 p, hh, cfg, c, row_slot=row_slot, row_pos=row_pos,

@@ -20,7 +20,13 @@ per-shard pool:
     summarize it) and it goes back to the free list;
   * one block table is shared by every layer's pool: all clustered leaves
     of a slot advance in lockstep (same ``t``/``cov``), so a single
-    (slot, ring-block) → physical-block mapping serves the whole stack.
+    (slot, ring-block) → physical-block mapping serves the whole stack;
+  * the pool backs the **ring family only** (core/layer_state.py):
+    recurrent-state layers ('M'/'R') carry a fixed-size per-slot state
+    with no position-indexed tail — block tables skip them entirely, and
+    their bytes are accounted separately (``mapped_blocks`` prices a
+    slot's pool footprint; the engine adds recurrent state bytes on top
+    for victim selection and swap payloads).
 
 The allocator itself is host-side (the engine loop is host-driven and the
 table is pushed to the device as a small int32 array each launch); the
@@ -228,6 +234,14 @@ class BlockPool:
         """Free-list depth for one data shard — how many fresh blocks
         ``alloc`` can hand out there before ``PoolExhausted``."""
         return len(self._free[shard])
+
+    def mapped_blocks(self, slot: int) -> int:
+        """Blocks slot ``slot`` currently maps.  This is the slot's
+        ENTIRE pool footprint: the pool backs ring-family tail KV only
+        (core/layer_state.py) — recurrent-state layers carry fixed-size
+        per-slot state outside the pool, priced separately by the
+        engine's victim/swap accounting."""
+        return int((self.table[slot] >= 0).sum())
 
     def shared_extra(self) -> int:
         """Logical table mappings beyond one per physical block — the

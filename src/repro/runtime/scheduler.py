@@ -11,11 +11,13 @@ in ``PoolExhausted``.  This module adds the QoS layer on top:
   * requests carry an SLO class (``core.request_cluster.Request.priority``,
     larger = more important) and an optional soft TTFT deadline;
   * under slot or pool pressure the engine **preempts** the cheapest
-    lower-priority in-flight slot: its clustered centroid snapshot
-    (``clustered_slot_state`` — the PR 5 prefix-snapshot format) plus its
-    mapped tail-ring block payloads are gathered to **host memory**, the
-    blocks go back to the pool (``BlockPool.release_slot``), and the
-    request parks on a swap backlog;
+    lower-priority in-flight slot: its slot snapshot
+    (``clustered_slot_state`` — the PR 5 prefix-snapshot format, which
+    also carries any recurrent-family (conv, ssm)/(conv, h) state whole)
+    plus its mapped tail-ring block payloads are gathered to **host
+    memory**, the blocks go back to the pool
+    (``BlockPool.release_slot``), and the request parks on a swap
+    backlog;
   * a parked request **resumes mid-stream** when capacity returns:
     blocks whose ``(gid, generation)`` survived untouched are re-adopted
     without a re-upload (the COW rule makes a live block's payload
@@ -115,6 +117,11 @@ class SwapRecord:
     epoch: Any
     seq: int                    # swap-out order (FIFO within a class)
     n_blocks_swapped: int = 0   # mapped blocks at swap-out (accounting)
+    state_bytes: int = 0        # recurrent-family state bytes riding the
+    #                             snapshot (core/layer_state.py): the
+    #                             fixed-size (conv, ssm)/(conv, h) price a
+    #                             mixed-family slot pays per swap on top
+    #                             of its mapped tail blocks
     hold: bool = False          # parked by a zero-progress (within-class)
     #                             preemption: not resumable until the
     #                             engine decodes real tokens again, or
@@ -149,7 +156,8 @@ class SLOScheduler:
         self.reuploaded_blocks = 0
         self.swapped_blocks = 0     # currently parked blocks-worth of tail
         self.swapped_peak = 0
-        self.swap_bytes = 0         # host bytes currently parked (tails)
+        self.swap_bytes = 0         # host bytes currently parked
+                                    # (tail KV + recurrent state)
 
     # ------------------------------------------------------------------
     # class predicates
@@ -166,17 +174,22 @@ class SLOScheduler:
                     below_prio: int) -> Optional[int]:
         """Choose the cheapest preemption victim among active slots.
 
-        ``candidates`` is ``[(priority, mapped_block_count, slot), ...]``
-        for the admissible slots (caller pre-filters by shard when the
-        pressure is shard-local — blocks are shard-local, so only a
-        same-shard victim frees usable blocks).  Eligible victims have
+        ``candidates`` is ``[(priority, swap_cost, slot), ...]`` for the
+        admissible slots (caller pre-filters by shard when the pressure
+        is shard-local — blocks are shard-local, so only a same-shard
+        victim frees usable blocks).  Eligible victims have
         ``priority < below_prio`` strictly (preemption never reorders
         within a class — that would trade one request's SLO for an
         equal one's) and are outside the protected class unless the
         preemptor itself outranks them.  Cheapest = lowest priority
-        first, then fewest mapped blocks (most-covered slot: centroids
-        already summarize it, least exact KV moves — the Mettu–Plaxton
-        cheapest-eviction rule), then lowest slot for determinism."""
+        first, then lowest swap cost, then lowest slot for determinism.
+        The cost function belongs to the caller: the engine prices
+        heterogeneous layer-state families as mapped-tail-block bytes
+        plus the recurrent family's fixed per-slot state bytes
+        (core/layer_state.py) — the most-covered slot moves the least
+        exact KV, the Mettu–Plaxton cheapest-eviction rule, and for
+        all-ring patterns the byte cost is a monotone transform of the
+        old mapped-block count so victim choices are unchanged."""
         elig = [(p, nb, j) for (p, nb, j) in candidates if p < below_prio]
         if not elig:
             return None
@@ -289,7 +302,7 @@ class SLOScheduler:
                     "resume blocks re-uploaded from the host copy"
                     ).add(self.reuploaded_blocks)
         reg.gauge("sched_swap_bytes",
-                  "host bytes currently parked (tails)"
+                  "host bytes parked (tail KV + recurrent state)"
                   ).set(float(self.swap_bytes))
         reg.gauge("sched_backlog_end",
                   "records still parked at end of serve"

@@ -74,6 +74,7 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.core import kv_compress
+from repro.core import layer_state
 from repro.core import retention
 from repro.core.request_cluster import BatchPlan, Request, plan_batches, plan_fifo
 from repro.models import attention as attn
@@ -88,7 +89,8 @@ from repro.runtime.telemetry import TelemetryConfig
 from repro.sharding import (Rules, constrain_cache, default_table,
                             place_admission, place_block_tables,
                             place_prefix_snapshot, place_swap_payload,
-                            shard_cache, use_rules)
+                            serving_param_specs, shard_cache,
+                            shardings_from_specs, use_rules)
 from repro.sharding.rules import _key_str as _key_name
 
 
@@ -114,9 +116,12 @@ class ServerConfig:
                                    # most one admitting slot per data shard,
                                    # fused with the decode launch.  Exact
                                    # positions, so no bucket padding.
-                                   # Attention-only models (G/L layers,
-                                   # GQA); must be <= kv_compress.keep_recent
-                                   # when serving clustered.
+                                   # Covers both layer-state families
+                                   # (G/L ring-KV layers and M/R
+                                   # recurrent-state layers — see
+                                   # core/layer_state.py); must be
+                                   # <= kv_compress.keep_recent when
+                                   # serving clustered.
     kv_compress: Optional[kv_compress.KVCompressConfig] = None
     # when set, the engine serves from a clustered KV cache end to end and
     # re-compacts every kv_compress.refresh decode steps
@@ -264,6 +269,13 @@ class Server:
             report = cfg.serving_gate_report()
             if report is not None:
                 raise ValueError("paged serving: " + report)
+            if not layer_state.families_for(cfg).has_ring:
+                raise ValueError(
+                    "paged serving needs at least one ring-family layer: "
+                    "recurrent-state layers ('M'/'R') carry fixed-size "
+                    "per-slot state that is never pool-backed, so a "
+                    "pure-recurrent pattern has nothing to page — serve "
+                    "dense chunked instead (prefill_chunk= without paged=)")
         # paged without kv_compress = exact-KV serving under a block
         # quota (core/retention.QuotaRetention): the cache keeps the
         # clustered LAYOUT (one permanently-dead centroid, counts == 0 ⇒
@@ -287,29 +299,32 @@ class Server:
         if self._pshare is not None:
             if (self._paged is None or not scfg.prefill_chunk
                     or scfg.kv_compress is None
-                    or set(cfg.layer_pattern) - set("G")):
+                    or set(cfg.layer_pattern) - set("GMR")):
                 raise ValueError(
                     "prefix_share/template_store requires the paged "
-                    "clustered engine with chunked prefill and an "
-                    "all-'G' layer pattern "
-                    "(kv_compress= + paged= + prefill_chunk=): "
+                    "clustered engine with chunked prefill over snapshot-"
+                    "coverable layers ('G' clustered rings plus 'M'/'R' "
+                    "recurrent state; 'L' window rings are not in "
+                    "snapshots) — kv_compress= + paged= + prefill_chunk=: "
                     "block-granular sharing needs the block pool's ref "
-                    "counts, snapshots restore only FrontierRetention "
-                    "(clustered) slot state, and prefix-pure registration "
-                    "points only exist on the chunked admission schedule")
+                    "counts, slot snapshots restore clustered summaries "
+                    "and recurrent state only, and prefix-pure "
+                    "registration points only exist on the chunked "
+                    "admission schedule")
         self._slo = scfg.scheduler
         if self._slo is not None:
             if (self._paged is None or scfg.kv_compress is None
-                    or set(cfg.layer_pattern) - set("G")
+                    or set(cfg.layer_pattern) - set("GMR")
                     or scfg.engine != "continuous"):
                 raise ValueError(
                     "scheduler= (SLO-aware preemption) requires the "
-                    "paged clustered continuous engine with an all-'G' "
-                    "layer pattern (kv_compress= + paged=): swap "
-                    "snapshots restore only FrontierRetention "
-                    "(clustered) slot state, and preemption frees pool "
-                    "blocks — the dense and exact engines have nothing "
-                    "to swap")
+                    "paged clustered continuous engine over snapshot-"
+                    "coverable layers ('G' clustered rings plus 'M'/'R' "
+                    "recurrent state; 'L' window rings are not in "
+                    "snapshots) — kv_compress= + paged=: swap snapshots "
+                    "restore clustered summaries and recurrent state "
+                    "only, and preemption frees pool blocks — the dense "
+                    "and exact engines have nothing to swap")
         self._chunk = scfg.prefill_chunk
         if self._chunk:
             if scfg.engine != "continuous":
@@ -332,10 +347,14 @@ class Server:
                                  "engine (static batches are per-device)")
             mesh = scfg.mesh
             self._rules = Rules(mesh, default_table("pod" in mesh.axis_names))
-            # replicate params across the mesh; annotations shard the
+            # param placement: MoE routed-expert banks distribute over
+            # the model axis (serving_param_specs — the one family of
+            # leaves whose replication cost dominates); everything else
+            # replicates and the annotate/shard_map islands shard the
             # per-head compute, GSPMD propagation does the rest
-            from jax.sharding import NamedSharding, PartitionSpec as P
-            params = jax.device_put(params, NamedSharding(mesh, P()))
+            params = jax.device_put(
+                params, shardings_from_specs(
+                    mesh, serving_param_specs(params, self._rules)))
             axes = self._rules.axes_for("batch", scfg.batch_size)
             if axes:
                 self._n_data_shards = math.prod(
@@ -367,6 +386,18 @@ class Server:
                              scfg.max_seq, scfg.batch_size,
                              self._n_data_shards,
                              self._params_digest(self.params))
+        # layer-state families (core/layer_state.py): which state each
+        # layer carries per slot — ring-KV ('G'/'L', retention-governed)
+        # vs fixed-size recurrent state ('M'/'R', checkpointed whole).
+        # None = the pattern has kinds outside both families; every
+        # engine path that consults families has already been rejected
+        # by a gate for such configs.
+        try:
+            self._families = layer_state.families_for(cfg)
+        except ValueError:
+            self._families = None
+        self._has_recurrent = (self._families is not None
+                               and self._families.has_recurrent)
         # bucket-padded prefill is only exact for global attention (causal
         # mask + masked decode); sliding-window rings and SSM/RG-LRU state
         # absorb pad tokens, so those models admit at exact prompt length
@@ -392,8 +423,16 @@ class Server:
 
         def _prefill_fn(tk, lp):
             with _ctx():
+                # recurrent layers prefill SEQUENTIALLY when served: the
+                # parallel scan forms (ssd_chunked / associative scan)
+                # are mathematically equal but not bitwise equal to
+                # stepwise decode, and serving pins chunked/paged tokens
+                # bit-identical to blocking one-at-a-time decode
                 return tfm.prefill(self.params, cfg, tk,
-                                   max_seq=scfg.max_seq, last_pos=lp)
+                                   max_seq=scfg.max_seq, last_pos=lp,
+                                   recurrent_mode=("sequential"
+                                                   if self._has_recurrent
+                                                   else "scan"))
 
         def _write_slot_fn(dst, src, j):
             with _ctx():
@@ -615,6 +654,15 @@ class Server:
 
         if tr is not None:
             tr.begin_serve(t0_serve, max(shards, 1))
+            if self._families is not None:
+                # name the layer-state families this serve runs with so
+                # offline trace consumers can segment span populations
+                # (swap_out spans carry state_bytes, engine steps advance
+                # recurrent state inside the same launch) by family mix
+                tr.event("state_families", tid="engine", t=t0_serve,
+                         ring="".join(sorted(self._families.ring.kinds)),
+                         recurrent="".join(
+                             sorted(self._families.recurrent.kinds)))
             for qpos, quid in enumerate(order):
                 qr = by_uid[quid]
                 tr.event("queued", tid="queue", uid=quid, t=t0_serve,
@@ -705,6 +753,10 @@ class Server:
         #   wr     'L' layers: retire behind the sliding window (virtual
         #          — the dense ring overwrite reclaims storage — but it
         #          drives the kv_retired_window accounting)
+        #   rr     'M'/'R' layers: fixed-size recurrent state folds every
+        #          position — nothing retires, a named no-op whose
+        #          diagnostics keep the kv_retired_recurrent invariant
+        #          explicit
         fr = (retention.FrontierRetention(n, ccfg)
               if ccfg is not None else None)
         quota = (retention.QuotaRetention(paged.block_size,
@@ -712,6 +764,9 @@ class Server:
                  if pool is not None and ccfg is None else None)
         wr = (retention.WindowRetention(cfg.sliding_window, n)
               if "L" in cfg.layer_pattern and cfg.sliding_window else None)
+        rr = (retention.RecurrentRetention(
+                  tuple(sorted(self._families.recurrent.kinds)))
+              if self._has_recurrent else None)
         sweep_policy = fr if fr is not None else quota
         cov_of = fr.frontier if fr is not None else (lambda j: 0)
         kv_retired = {"frontier": 0, "window": 0, "quota": 0}
@@ -741,8 +796,7 @@ class Server:
                 return
             t0s, how, uid, tok0, p0 = seg[j]
             seg[j] = None
-            held = (int((pool.table[j] >= 0).sum())
-                    if pool is not None else 0)
+            held = (pool.mapped_blocks(j) if pool is not None else 0)
             tr.span("run", t0s, t, pid=shard_of(j), tid=slot_tid(j),
                     uid=uid, start=how, end=why,
                     tokens=len(toks.get(uid, ())) - tok0, pos0=p0,
@@ -785,6 +839,11 @@ class Server:
         # blocks-worth of tail KV that sharing avoided materializing
         kv_shared_peak = 0
         tail_bpt = self._tail_bytes_per_token(cache) if layout else 0
+        # recurrent-family byte price: the whole fixed-size state one
+        # slot carries — constant over the stream, swapped whole, never
+        # pool-backed — added to every victim's cost and swap payload
+        rec_state_b = (layer_state.recurrent_state_bytes(cache, n)
+                       if self._has_recurrent else 0)
 
         def resize_to(nb):
             nonlocal cache, bucket
@@ -915,9 +974,14 @@ class Server:
         # instead.
 
         def victim_candidates(shard=None):
-            """(priority, mapped_block_count, slot) for every active
-            slot (optionally one shard's — blocks are shard-local, so
-            pool pressure needs a same-shard victim)."""
+            """(priority, swap_cost_bytes, slot) for every active slot
+            (optionally one shard's — blocks are shard-local, so pool
+            pressure needs a same-shard victim).  Cheapest-first victim
+            selection prices heterogeneous per-layer state: ring-family
+            cost is the slot's mapped tail blocks (bytes), recurrent
+            state adds its fixed per-slot byte price — for all-ring
+            patterns this is a monotone transform of the old mapped-
+            block count, so victim choices are unchanged."""
             out = []
             for j in range(n):
                 if not active[j]:
@@ -925,17 +989,20 @@ class Server:
                 if shard is not None and shard_of(j) != shard:
                     continue
                 out.append((by_uid[slot_uid[j]].priority,
-                            int((pool.table[j] >= 0).sum()), j))
+                            pool.mapped_blocks(j) * paged.block_size
+                            * tail_bpt + rec_state_b, j))
             return out
 
         def preempt(j):
-            """Swap slot ``j`` out to host memory: gather its clustered
-            snapshot + tail-ring block payloads, release its blocks
-            (remembering (gid, generation) for re-adoption), park the
-            request on the swap backlog.  Bit-identity on resume comes
-            for free: each slot's state is a deterministic function of
-            its own token stream (per-slot compaction cadence), and the
-            swap round-trips that state exactly."""
+            """Swap slot ``j`` out to host memory: gather its slot
+            snapshot (clustered summaries + any recurrent state — the
+            recurrent family's whole checkpoint rides the same opaque
+            snapshot format) + tail-ring block payloads, release its
+            blocks (remembering (gid, generation) for re-adoption), park
+            the request on the swap backlog.  Bit-identity on resume
+            comes for free: each slot's state is a deterministic function
+            of its own token stream (per-slot compaction cadence), and
+            the swap round-trips that state exactly."""
             nonlocal cache
             uid = slot_uid[j]
             r = by_uid[uid]
@@ -952,14 +1019,15 @@ class Server:
                 max_new_tokens=r.max_new_tokens,
                 deadline_ms=r.deadline_ms, held=held, snap=snap,
                 tails=tails, epoch=self._store_epoch, seq=0,
-                n_blocks_swapped=len(held))
+                n_blocks_swapped=len(held), state_bytes=rec_state_b)
             slo.record_swap(rec)
-            slo.swap_bytes += len(held) * paged.block_size * tail_bpt
+            slo.swap_bytes += (len(held) * paged.block_size * tail_bpt
+                               + rec_state_b)
             if tr is not None:
                 t_now = time.perf_counter()
                 tr.span("swap_out", t_sw0, t_now, pid=shard_of(j),
                         tid=slot_tid(j), uid=uid, blocks=len(held),
-                        pos=int(pos[j]))
+                        pos=int(pos[j]), state_bytes=rec_state_b)
                 tr_close(j, t_now, "preempt")
             active[j] = False
             slot_uid[j] = -1
@@ -1034,8 +1102,8 @@ class Server:
             slot_uid[j] = rec.uid
             fr.set_frontier(j, rec.cov)
             slo.pop_record(rec)
-            slo.swap_bytes -= rec.n_blocks_swapped * paged.block_size \
-                * tail_bpt
+            slo.swap_bytes -= (rec.n_blocks_swapped * paged.block_size
+                               * tail_bpt + rec.state_bytes)
             if tr is not None:
                 t_now = time.perf_counter()
                 tr_open(j, rec.uid, t_r0, "resume", p0=rec.pos)
@@ -1075,8 +1143,9 @@ class Server:
             rec = slo.pick_shed()
             if rec is not None:
                 slo.shed_record(rec)
-                slo.swap_bytes -= rec.n_blocks_swapped \
-                    * paged.block_size * tail_bpt
+                slo.swap_bytes -= (rec.n_blocks_swapped
+                                   * paged.block_size * tail_bpt
+                                   + rec.state_bytes)
                 tr_brownout("shed", "parked_record", uid=rec.uid)
                 if tr is not None:
                     tr.event("shed", tid="engine", uid=rec.uid,
@@ -1119,10 +1188,10 @@ class Server:
                                         max(c[0] for c in cands) + 1)
                 if v is not None:
                     if tr is not None:
-                        vp, vnb, _ = next(c for c in cands if c[2] == v)
+                        vp, vcost, _ = next(c for c in cands if c[2] == v)
                         tr_brownout("preempt", "zero_progress",
                                     victim=int(v), victim_priority=vp,
-                                    victim_blocks=vnb,
+                                    victim_cost_bytes=int(vcost),
                                     within_class=within_class)
                     rec = preempt(v)
                     # hold until real tokens decode again, else the
@@ -1199,10 +1268,12 @@ class Server:
                 # block — release the in-flight pin lookup() took so
                 # pool-pressure eviction may reclaim the entry again
                 pcache.adoption_done(hit)
-            elif layout is not None:
-                # the slot's previous occupant left stale centroids; its
-                # ring entries are hidden by the position mask, but stale
-                # counts would unmask stale centroids (on a prefix hit
+            elif layout is not None or self._has_recurrent:
+                # the slot's previous occupant left stale centroids and/or
+                # recurrent state; ring entries are hidden by the position
+                # mask, but stale counts would unmask stale centroids and
+                # recurrent leaves have no mask at all — the fixed-size
+                # state feeds straight into the next step (on a prefix hit
                 # the restore overwrites all of this state instead)
                 cache = self._reset_slot(cache, jnp.int32(phys(j)))
             if tr is not None:
@@ -1974,6 +2045,28 @@ class Server:
         reg.counter("kv_retired_quota",
                     "block-backed positions released at request exit"
                     ).add(kv_retired["quota"])
+        # recurrent family: the retirement counter is identically zero
+        # by construction (fixed-size state folds every position) — the
+        # explicit key comes from RecurrentRetention.diagnostics so the
+        # invariant is published, not silently omitted
+        reg.counter("kv_retired_recurrent",
+                    "positions retired from recurrent state (0 by "
+                    "construction: fixed-size state folds every position)"
+                    ).add(rr.diagnostics()["kv_retired_recurrent"]
+                          if rr is not None else 0)
+        # per-family state-byte picture (core/layer_state.py): dense
+        # per-slot bytes each family carries — ring centroid summaries /
+        # window rings (pool-backed tail blocks are priced separately in
+        # the kv_bytes_* metrics) vs the recurrent family's fixed-size
+        # whole-state price.  Always present so benchmark schemas stay
+        # stable across layer patterns
+        reg.gauge("state_bytes_ring",
+                  "dense ring-family state bytes per slot (tails excluded)"
+                  ).set(float(layer_state.ring_state_bytes(
+                      cache, max(shards, 1) * bucket)))
+        reg.gauge("state_bytes_recurrent",
+                  "recurrent-family state bytes per slot"
+                  ).set(float(rec_state_b))
         if layout is not None:
             # KV-allocation picture, comparable across paged and dense:
             # dense "allocates" every launched slot's full tail ring
@@ -2117,10 +2210,13 @@ class Server:
     # ------------------------------------------------------------------
 
     def _reset_slot_impl(self, cache, j):
-        """Zero one slot's clustered bookkeeping (counts + cov) ahead of a
-        fresh chunked admission.  Ring/centroid payloads need no wipe:
-        ring entries are hidden by the position mask until the chunk
-        stream overwrites them, and zero-count centroids are masked."""
+        """Zero one slot's clustered bookkeeping (counts + cov) and its
+        recurrent state ahead of a fresh chunked admission.  Ring/centroid
+        payloads need no wipe: ring entries are hidden by the position
+        mask until the chunk stream overwrites them, and zero-count
+        centroids are masked.  Recurrent leaves have no mask — the whole
+        fixed-size state IS live input to the next step — so the previous
+        occupant's (conv, ssm) / (conv, h) must be zeroed outright."""
         def walk(node):
             if _is_clustered_kv(node):
                 out = dict(node)
@@ -2131,6 +2227,10 @@ class Server:
                     out["counts"] = node["counts"].at[j].set(0.0)
                     out["cov"] = node["cov"].at[j].set(0)
                 return out
+            if layer_state.is_recurrent_leaf(node):
+                if layer_state.recurrent_leaf_stacked(node):
+                    return {k: v.at[:, j].set(0) for k, v in node.items()}
+                return {k: v.at[j].set(0) for k, v in node.items()}
             if isinstance(node, dict):
                 return {k: walk(v) for k, v in node.items()}
             if isinstance(node, list):

@@ -242,6 +242,121 @@ class MetricsRegistry:
         return "\n".join(lines)
 
 
+def reference_registry() -> "MetricsRegistry":
+    """A registry holding every metric the serving stack can publish.
+
+    Built by running a canonical battery of tiny in-memory serves — the
+    real registration calls in server/scheduler/pool/template-store with
+    their real help strings, so the generated reference can never drift
+    from the code.  Battery legs (each adds the families the previous
+    legs can't reach):
+
+    1. mixed 'GM' clustered + paged + chunked + SLO scheduler — base
+       engine metrics, frontier/recurrent retirement, both layer-state
+       byte gauges, pool accounting, sched_* ladder
+    2. windowed 'GL' clustered + paged + chunked — window retirement
+    3. exact-KV paged — quota retirement
+    4. clustered + paged + template store — template_* / prefix_*
+    5. clustered dense — the non-paged KV-footprint gauges
+    6. static batch engine — plan_waste
+
+    Mesh-only metrics (per-data-shard waste) are registered directly:
+    the battery must run on one device.
+    """
+    import jax
+    import numpy as np
+    from dataclasses import replace as dataclasses_replace
+
+    from repro.core import kv_compress
+    from repro.core.request_cluster import Request
+    from repro.models import transformer as tfm
+    from repro.models.config import ModelConfig, SSMConfig
+    from repro.runtime.kv_pool import PagedKVConfig
+    from repro.runtime.scheduler import SLOConfig
+    from repro.runtime.server import Server, ServerConfig
+    from repro.runtime.template_store import TemplateStoreConfig
+
+    gm = ModelConfig(name="ref-gm", family="hybrid", n_layers=2,
+                     d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+                     d_ff=64, vocab=64, pad_vocab_multiple=16,
+                     dtype="float32", layer_pattern="GM",
+                     ssm=SSMConfig(d_state=8, d_conv=4, expand=2,
+                                   head_dim=16, n_groups=1, chunk=16))
+    g = ModelConfig(name="ref-g", family="dense", n_layers=2, d_model=32,
+                    n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                    vocab=64, pad_vocab_multiple=16, dtype="float32")
+    gl = dataclasses_replace(g, name="ref-gl", layer_pattern="GL",
+                             sliding_window=8)
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, int(l), n) for i, (l, n) in
+            enumerate([(20, 6), (7, 5), (14, 4)])]
+    prompts = {r.uid: rng.integers(0, 64, size=(r.prompt_len,)).astype(
+        np.int32) for r in reqs}
+    ccfg = kv_compress.KVCompressConfig(n_clusters=4, iters=2,
+                                        keep_recent=8, refresh_every=4)
+    merged = MetricsRegistry()
+
+    import re as _re
+    instanced = _re.compile(r"template_cluster\d+_")
+
+    def run(cfg, scfg):
+        srv = Server(cfg, scfg,
+                     tfm.init_params(jax.random.PRNGKey(0), cfg))
+        srv.serve(reqs, prompts)
+        for name, m in srv.metrics._metrics.items():
+            # collapse per-instance dynamic gauges to one <C> placeholder
+            # row each (registered below) — which cluster ids exist is a
+            # traffic artifact, not part of the metrics surface
+            if not instanced.match(name):
+                merged._metrics.setdefault(name, m)
+
+    run(gm, ServerConfig(batch_size=2, max_seq=48, kv_compress=ccfg,
+                         prefill_chunk=8,
+                         paged=PagedKVConfig(block_size=4),
+                         scheduler=SLOConfig()))
+    run(gl, ServerConfig(batch_size=2, max_seq=48, kv_compress=ccfg,
+                         prefill_chunk=8,
+                         paged=PagedKVConfig(block_size=4)))
+    run(g, ServerConfig(batch_size=2, max_seq=48,
+                        paged=PagedKVConfig(block_size=4)))
+    run(g, ServerConfig(batch_size=2, max_seq=48, kv_compress=ccfg,
+                        prefill_chunk=8, paged=PagedKVConfig(block_size=4),
+                        template_store=TemplateStoreConfig()))
+    run(g, ServerConfig(batch_size=2, max_seq=48, kv_compress=ccfg))
+    run(g, ServerConfig(batch_size=2, max_seq=48, engine="static",
+                        use_clustered_batching=False))
+    # per-cluster placeholders (help strings mirror template_store.py)
+    merged.gauge("template_cluster<C>_cohesion",
+                 "cluster <C>: matched/prompt cohesion")
+    merged.gauge("template_cluster<C>_hit_rate",
+                 "cluster <C>: hits per member admission")
+    merged.gauge("template_cluster<C>_bytes_pinned",
+                 "cluster <C>: bytes pinned by its entries")
+    # mesh-only (engine registers these when n_data_shards > 1; help
+    # strings mirror runtime/server.py)
+    merged.gauge("n_data_shards", "data shards this serve")
+    merged.gauge("slot_waste_shard<S>",
+                 "idle slot-step fraction on data shard <S>")
+    return merged
+
+
+def reference_doc() -> str:
+    """The committed ``docs/metrics.md`` content."""
+    return (
+        "# Serving metrics reference\n\n"
+        "Every metric the serving engine can publish into "
+        "`Server.last_stats`, in registration order.  Generated by "
+        "`python -m repro.runtime.telemetry reference` from the live "
+        "registrations (a battery of tiny in-memory serves) — do not "
+        "edit by hand; CI regenerates it and fails on drift.\n\n"
+        "Per-serve metrics reset at each `serve()`; metrics tagged "
+        "*(lifetime)* persist across serves on the same `Server`.  "
+        "`<S>` ranges over data shards on a mesh; "
+        "`template_cluster<C>_*` gauges appear per online traffic "
+        "cluster when a template store is configured.\n\n"
+        + reference_registry().reference_table() + "\n")
+
+
 # ---------------------------------------------------------------------------
 # tracer
 # ---------------------------------------------------------------------------
@@ -654,7 +769,37 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
         action="store_true",
         help="skip reconciling event counts against embedded last_stats",
     )
+    r = sub.add_parser(
+        "reference",
+        help="emit the metrics reference doc (docs/metrics.md)",
+    )
+    r.add_argument(
+        "--check",
+        metavar="PATH",
+        default=None,
+        help="compare against an existing file instead of printing; "
+        "exit 1 if it is out of date",
+    )
     args = ap.parse_args(argv)
+
+    if args.cmd == "reference":
+        doc = reference_doc()
+        if args.check is None:
+            print(doc, end="")
+            return 0
+        try:
+            with open(args.check, "r", encoding="utf-8") as f:
+                on_disk = f.read()
+        except OSError as e:
+            print(f"{args.check}: {e}")
+            return 1
+        if on_disk != doc:
+            print(f"{args.check}: out of date — regenerate with "
+                  "`python -m repro.runtime.telemetry reference > "
+                  f"{args.check}`")
+            return 1
+        print(f"{args.check}: up to date")
+        return 0
 
     rc = 0
     for path in args.paths:

@@ -447,6 +447,34 @@ def tree_param_specs(params, rules: Rules):
     return jax.tree_util.tree_unflatten(treedef, specs)
 
 
+# serve-time placement: only the leaves whose replication cost dominates
+# are distributed; everything else replicates (the serving engine's
+# annotate/shard_map islands shard the COMPUTE, and small replicated
+# weights keep every decode launch free of parameter collectives)
+_SERVING_DISTRIBUTED = re.compile(r"moe/(w_gate|w_up|w_down)$")
+
+
+def serving_param_specs(params, rules: Rules):
+    """PartitionSpec pytree for serve-time parameter placement.
+
+    MoE routed-expert banks — by far the largest leaves in an MoE config
+    (Qwen2-MoE: 60 experts × (d, f) per projection per layer) — are
+    placed by ``param_spec``, which puts the expert dim on the ``model``
+    axis (spilling onto ``data`` when the count divides, prefix-falling
+    back to ``model`` alone for awkward counts like 60 on a 4-wide
+    axis).  Every other leaf replicates, exactly as serving always did:
+    attention/MLP weights are small enough that replication beats the
+    gather traffic GSPMD would synthesize into each decode step.  Pure
+    placement — no cache change, no compute change (ROADMAP item 5)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for kp, leaf in flat:
+        path = "/".join(_key_str(k) for k in kp)
+        specs.append(param_spec(path, leaf.shape, rules)
+                     if _SERVING_DISTRIBUTED.search(path) else P())
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
 def _key_str(k) -> str:
     if hasattr(k, "key"):
         return str(k.key)

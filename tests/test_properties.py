@@ -1034,3 +1034,132 @@ class TestTraceSchemaProperties:
         off = dict(totals, gen_tokens=totals["gen_tokens"] + 1)
         assert any("gen_tokens" in p
                    for p in validate_trace(events, totals=off))
+
+
+class TestRecurrentStateProperties:
+    """Layer-state-family invariants for the recurrent side
+    (core/layer_state.py): a ``clustered_slot_state`` checkpoint of a
+    recurrent slot, restored at any decode boundary — even into a fresh
+    cache or a different slot index — replays the remaining tokens
+    bit-identically to the uninterrupted run, and the SLO swap-bytes
+    ledger conserves mixed-family payloads (ring blocks + recurrent
+    state bytes) through any preempt/resume/shed interleaving."""
+
+    _CFGS = {}
+
+    @classmethod
+    def _cfg(cls, kind):
+        if kind not in cls._CFGS:
+            from repro.models.config import ModelConfig, SSMConfig
+            from repro.models import transformer as tfm
+            if kind == "M":
+                cfg = ModelConfig(
+                    name="pm", family="ssm", n_layers=2, d_model=32,
+                    n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                    vocab=64, pad_vocab_multiple=16, dtype="float32",
+                    layer_pattern="M",
+                    ssm=SSMConfig(d_state=8, d_conv=4, expand=2,
+                                  head_dim=16, n_groups=1, chunk=16))
+            else:
+                cfg = ModelConfig(
+                    name="pr", family="hybrid", n_layers=2, d_model=32,
+                    n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                    vocab=64, pad_vocab_multiple=16, dtype="float32",
+                    layer_pattern="R", lru_width=32)
+            params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+            cls._CFGS[kind] = (cfg, params)
+        return cls._CFGS[kind]
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.sampled_from(["M", "R"]), st.integers(1, 10),
+           st.integers(1, 6), st.integers(0, 1), st.integers(0, 1),
+           st.integers(0, 10_000))
+    def test_checkpoint_restore_replays_bit_identical(
+            self, kind, boundary, extra, slot, dest_slot, seed):
+        """Decode T = boundary + extra steps uninterrupted; checkpoint
+        ``slot`` at the boundary, restore into ``dest_slot`` of a FRESH
+        cache, replay the tail — every replayed logits row must be
+        bitwise equal.  This is the property the engine's preempt→swap→
+        resume and template-store prefix sharing paths rest on: for the
+        recurrent family the state IS the checkpoint."""
+        from repro.models import transformer as tfm
+        cfg, params = self._cfg(kind)
+        T = boundary + extra
+        rng = np.random.default_rng(seed)
+        toks = rng.integers(0, 64, size=(2, T)).astype(np.int32)
+
+        cache = tfm.init_cache(cfg, 2, max_seq=32)
+        logits_ref = []
+        snap = None
+        for t in range(T):
+            if t == boundary:
+                snap = tfm.clustered_slot_state(cache, slot)
+            lg, cache = tfm.decode_step(
+                params, cfg, cache, jnp.asarray(toks[:, t:t + 1]),
+                jnp.int32(t))
+            logits_ref.append(np.asarray(lg[slot]))
+
+        fresh = tfm.init_cache(cfg, 2, max_seq=32)
+        fresh = tfm.restore_clustered_slot_state(fresh, snap, dest_slot)
+        for i, t in enumerate(range(boundary, T)):
+            row = np.zeros((2, 1), np.int32)
+            row[dest_slot, 0] = toks[slot, t]
+            lg, fresh = tfm.decode_step(params, cfg, fresh,
+                                        jnp.asarray(row), jnp.int32(t))
+            np.testing.assert_array_equal(
+                np.asarray(lg[dest_slot]), logits_ref[boundary + i],
+                err_msg=f"replay step {t} diverged after restore")
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.sampled_from([4, 8]), st.integers(1, 64),
+           st.lists(st.tuples(st.integers(0, 6), st.integers(0, 4096),
+                              st.sampled_from(["preempt", "resume",
+                                               "shed_parked"])),
+                    min_size=1, max_size=50),
+           st.integers(0, 10_000))
+    def test_swap_bytes_ledger_conserves_mixed_families(self, bsz, bpt,
+                                                        ops, seed):
+        """The engine credits ``len(held) * block_size * tail_bpt +
+        state_bytes`` at preempt and debits the same expression from the
+        parked SwapRecord at resume/shed.  Whatever the interleaving —
+        ring-only records (state_bytes 0) mixed with recurrent-family
+        records — the ledger equals the sum over the parked backlog at
+        every step, never goes negative, and drains to exactly zero."""
+        from repro.runtime.scheduler import SLOConfig, SLOScheduler, \
+            SwapRecord
+        slo = SLOScheduler(SLOConfig(max_swapped=64), 8)
+        next_uid = 0
+
+        def price(rec):
+            return rec.n_blocks_swapped * bsz * bpt + rec.state_bytes
+
+        for nb, state_b, op in ops:
+            if op == "preempt":
+                held = {bi: (bi, 0) for bi in range(nb)}
+                rec = SwapRecord(uid=next_uid, priority=0, pos=1, cur=0,
+                                 fed=0, since_tok=0, cov=0,
+                                 max_new_tokens=4, deadline_ms=0.0,
+                                 held=held, snap=None, tails=None,
+                                 epoch=0, seq=next_uid,
+                                 n_blocks_swapped=nb, state_bytes=state_b)
+                next_uid += 1
+                slo.record_swap(rec)
+                slo.swap_bytes += price(rec)
+            elif op == "resume":
+                rec = slo.peek_resume()
+                if rec is not None:
+                    slo.pop_record(rec)
+                    slo.swap_bytes -= price(rec)
+            elif op == "shed_parked":
+                rec = slo.pick_shed()
+                if rec is not None:
+                    slo.shed_record(rec)
+                    slo.swap_bytes -= price(rec)
+            assert slo.swap_bytes >= 0
+            assert slo.swap_bytes == sum(price(r) for r in slo._backlog)
+
+        while slo.backlog_size() > 0:          # drain: resume everything
+            rec = slo.peek_resume()
+            slo.pop_record(rec)
+            slo.swap_bytes -= price(rec)
+        assert slo.swap_bytes == 0

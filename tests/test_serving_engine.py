@@ -194,27 +194,56 @@ class TestChunkedPrefill:
         assert np.mean(agree) > 0.7, agree
 
     def test_rejects_unsupported_models(self, pieces):
-        """The gate is per-layer now: sliding-window 'L' layers serve
-        chunked (WindowRetention), so rejection happens only for layers
-        with no retention policy — and the diagnostic names each
-        offending layer index and its attention kind."""
+        """The gate is per-(layer, kind) now: sliding-window 'L' layers
+        serve chunked (WindowRetention) and recurrent 'M'/'R' layers
+        serve as checkpointed fixed-size state (RecurrentRetention), so
+        rejection happens only for state no family covers — and the
+        diagnostic names each offending layer index and its kind."""
         params = pieces[0]
         import dataclasses as dc
         # 'L' without sliding_window has no window to retire behind
         gl = dc.replace(TINY, layer_pattern="GL")
         with pytest.raises(ValueError, match="without sliding_window"):
             Server(gl, ServerConfig(prefill_chunk=8), params)
-        # recurrent sub-layers carry state, not a KV ring: the report
-        # must name the layer and the kind, and still state the rule
+        # recurrent sub-layers are a supported family now: the gate must
+        # NOT fire for a 'GR' pattern (the serve itself is pinned in
+        # TestRecurrentServing)
         gr = dc.replace(TINY, layer_pattern="GR", lru_width=32)
-        with pytest.raises(ValueError, match=r"layer 1: RG-LRU recurrence"):
-            Server(gr, ServerConfig(prefill_chunk=8), params)
-        with pytest.raises(ValueError, match="global-attention"):
-            Server(gr, ServerConfig(prefill_chunk=8), params)
+        assert gr.serving_gate_report() is None
+        Server(gr, ServerConfig(prefill_chunk=8), params)
         ccfg = kv_compress.KVCompressConfig(keep_recent=8, refresh_every=4)
         with pytest.raises(ValueError, match="keep_recent"):
             Server(TINY, ServerConfig(prefill_chunk=16, kv_compress=ccfg),
                    params)
+
+    def test_gate_report_enumerates_every_gap(self):
+        """Regression: the report used to stop at the first blocking
+        layer — a mixed config's diagnostics must name EVERY unsupported
+        (layer, kind) pair at once, alongside any config-level gaps."""
+        import dataclasses as dc
+        # windowless 'L' at layers 1, 3, 5 — all three must be named
+        gl = dc.replace(TINY, n_layers=6, layer_pattern="GL")
+        report = gl.serving_gate_report()
+        for i in (1, 3, 5):
+            assert f"layer {i}: local attention without sliding_window" \
+                in report, report
+        # unknown kind + windowless 'L' together: both enumerated, with
+        # per-layer indices and the closing statement of the rule
+        weird = dc.replace(TINY, n_layers=4, layer_pattern="GLXG")
+        report = weird.serving_gate_report()
+        assert "layer 1: local attention without sliding_window" in report
+        assert "layer 2: unknown kind 'X' has no layer-state family" \
+            in report
+        assert "recurrent-state layers" in report
+        # config-level gaps (MLA) combine with per-layer gaps in one pass
+        mla = dc.replace(TINY, n_layers=2, layer_pattern="GL",
+                         attn_kind="mla")
+        report = mla.serving_gate_report()
+        assert "latent KV" in report
+        assert "layer 1: local attention without sliding_window" in report
+        # supported kinds never appear as problems
+        ok = dc.replace(TINY, layer_pattern="GL", sliding_window=8)
+        assert ok.serving_gate_report() is None
 
 
 class TestBucketedLaunch:
@@ -392,7 +421,7 @@ class TestPagedEngine:
         # per-layer gate: MLA latent caches have no retention policy
         import dataclasses as dc
         mla = dc.replace(TINY, attn_kind="mla")
-        with pytest.raises(ValueError, match="global-attention"):
+        with pytest.raises(ValueError, match="latent KV"):
             Server(mla, ServerConfig(kv_compress=self.CCFG, paged=self.PG),
                    params)
 
@@ -708,3 +737,148 @@ class TestBatchedCompress:
         h = np.asarray(cc["counts"]).shape[2]
         np.testing.assert_allclose(m1, cov1 * h, rtol=1e-5)
         np.testing.assert_allclose(m2, cov2 * h, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Recurrent-state families: mamba2-style ('M') and RG-LRU ('R') layers
+# serving through the same chunked/paged continuous engine.  The exit pin
+# for the layer-state refactor: greedy tokens bit-identical to a blocking
+# one-request-at-a-time static decode, because (a) sequential recurrent
+# prefill replays exactly the decode step and (b) per-slot recurrent
+# state is advanced/checkpointed with slot-local math only.
+# ---------------------------------------------------------------------------
+
+from repro.models.config import SSMConfig  # noqa: E402
+
+GM_REC = ModelConfig(name="gm", family="hybrid", n_layers=2, d_model=64,
+                     n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                     vocab=64, pad_vocab_multiple=16, dtype="float32",
+                     layer_pattern="GM",
+                     ssm=SSMConfig(d_state=16, d_conv=4, expand=2,
+                                   head_dim=32, n_groups=1, chunk=32))
+GR_REC = ModelConfig(name="gr", family="hybrid", n_layers=2, d_model=64,
+                     n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                     vocab=64, pad_vocab_multiple=16, dtype="float32",
+                     layer_pattern="GR", lru_width=64)
+M_PURE = ModelConfig(name="m", family="ssm", n_layers=2, d_model=64,
+                     n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                     vocab=64, pad_vocab_multiple=16, dtype="float32",
+                     layer_pattern="M",
+                     ssm=SSMConfig(d_state=16, d_conv=4, expand=2,
+                                   head_dim=32, n_groups=1, chunk=32))
+
+
+def _rec_stream(vocab=64, seed=9):
+    rng = np.random.default_rng(seed)
+    reqs = [Request(i, int(l), g) for i, (l, g) in
+            enumerate([(60, 12), (9, 10), (48, 9), (21, 14)])]
+    prompts = {r.uid: rng.integers(0, vocab, size=(r.prompt_len,)).astype(
+        np.int32) for r in reqs}
+    return reqs, prompts
+
+
+@pytest.fixture(scope="module", params=["GM", "GR"], ids=["gm", "gr"])
+def rec_pieces(request):
+    cfg = {"GM": GM_REC, "GR": GR_REC}[request.param]
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    reqs, prompts = _rec_stream()
+    ref = Server(cfg, ServerConfig(batch_size=1, max_seq=96,
+                                   engine="static",
+                                   use_clustered_batching=False), params)
+    ref_out = {o.uid: o.tokens for o in ref.serve(reqs, prompts)}
+    return cfg, params, reqs, prompts, ref_out
+
+
+class TestRecurrentServing:
+    CCFG = kv_compress.KVCompressConfig(n_clusters=8, iters=4,
+                                        keep_recent=16, refresh_every=8)
+
+    def test_chunked_dense_bit_identical(self, rec_pieces):
+        cfg, params, reqs, prompts, ref_out = rec_pieces
+        srv = Server(cfg, ServerConfig(batch_size=2, max_seq=96,
+                                       kv_compress=self.CCFG,
+                                       prefill_chunk=8), params)
+        for o in srv.serve(reqs, prompts):
+            assert o.tokens == ref_out[o.uid], f"uid {o.uid} diverged"
+
+    def test_chunked_paged_bit_identical(self, rec_pieces):
+        cfg, params, reqs, prompts, ref_out = rec_pieces
+        srv = Server(cfg, ServerConfig(batch_size=2, max_seq=96,
+                                       kv_compress=self.CCFG,
+                                       prefill_chunk=8,
+                                       paged=PagedKVConfig(block_size=4)),
+                     params)
+        for o in srv.serve(reqs, prompts):
+            assert o.tokens == ref_out[o.uid], f"uid {o.uid} diverged"
+        st = srv.last_stats
+        # both families are priced and visible in the metrics surface
+        assert st["state_bytes_recurrent"] > 0
+        assert st["state_bytes_ring"] > 0
+        # recurrent state never retires — the counter exists and stays 0
+        assert st["kv_retired_recurrent"] == 0
+        assert st["pool_blocks_end"] == 0
+
+    def test_preempt_swap_resume_bit_identical(self, rec_pieces):
+        """One preempt→host-swap→resume cycle through recurrent state:
+        the snapshot carries the (conv, ssm)/(conv, h) leaves whole, the
+        swap-bytes ledger prices them, and restored requests finish with
+        exactly the tokens of an unpressured run."""
+        from repro.runtime.scheduler import SLOConfig
+        cfg, params, reqs, prompts, ref_out = rec_pieces
+        rng = np.random.default_rng(3)
+        reqs, prompts = [], {}
+        for i in range(8):
+            plen = int(rng.integers(6, 30))
+            prompts[i] = rng.integers(0, 64, size=(plen,)).astype(np.int32)
+            reqs.append(Request(i, plen, int(rng.integers(6, 14)),
+                                priority=1 if i >= 5 else 0))
+        big = Server(cfg, ServerConfig(
+            batch_size=2, max_seq=96, kv_compress=self.CCFG,
+            prefill_chunk=8,
+            paged=PagedKVConfig(block_size=4, pool_blocks=48),
+            use_clustered_batching=False), params)
+        want = {o.uid: o.tokens for o in big.serve(reqs, prompts)}
+        tight = Server(cfg, ServerConfig(
+            batch_size=2, max_seq=96, kv_compress=self.CCFG,
+            prefill_chunk=8,
+            paged=PagedKVConfig(block_size=4, pool_blocks=10),
+            use_clustered_batching=False,
+            # arrival-order admission: the late high-priority tail can
+            # only run by preempting a resident best-effort request
+            scheduler=SLOConfig(priority_admission=False)), params)
+        outs = tight.serve(reqs, prompts)
+        st = tight.last_stats
+        assert st["sched_preemptions"] >= 1
+        assert st["sched_swaps_in"] >= 1
+        assert st["sched_swap_bytes"] == 0  # ledger drains to zero
+        shed = {o.uid for o in outs if o.shed}
+        for o in outs:
+            if o.uid not in shed:
+                assert o.tokens == want[o.uid], f"uid {o.uid} diverged"
+
+    def test_pure_recurrent_dense_chunked(self):
+        """An attention-free pattern (no ring layers at all) still
+        serves chunked dense — the engine no longer assumes a KV ring
+        exists anywhere."""
+        params = tfm.init_params(jax.random.PRNGKey(0), M_PURE)
+        reqs, prompts = _rec_stream()
+        ref = Server(M_PURE, ServerConfig(batch_size=1, max_seq=96,
+                                          engine="static",
+                                          use_clustered_batching=False),
+                     params)
+        ref_out = {o.uid: o.tokens for o in ref.serve(reqs, prompts)}
+        srv = Server(M_PURE, ServerConfig(batch_size=2, max_seq=96,
+                                          prefill_chunk=8), params)
+        for o in srv.serve(reqs, prompts):
+            assert o.tokens == ref_out[o.uid], f"uid {o.uid} diverged"
+
+    def test_pure_recurrent_paged_rejected(self):
+        """Recurrent state is never pool-backed, so a pure-recurrent
+        pattern has nothing to page — the gate must say so."""
+        params = tfm.init_params(jax.random.PRNGKey(0), M_PURE)
+        with pytest.raises(ValueError, match="ring-family"):
+            Server(M_PURE, ServerConfig(batch_size=2, max_seq=96,
+                                        kv_compress=self.CCFG,
+                                        prefill_chunk=8,
+                                        paged=PagedKVConfig(block_size=4)),
+                   params)

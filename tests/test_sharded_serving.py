@@ -375,6 +375,200 @@ def test_sharded_slo_preemption_parity():
 
 
 @pytest.mark.slow
+def test_sharded_moe_expert_placement_parity():
+    """Qwen2-MoE serving on a 2x4 mesh with routed-expert banks
+    DISTRIBUTED on the model axis (serving_param_specs) instead of
+    replicated: greedy tokens bit-identical to the single-device engine,
+    blocking and chunked admission, and the expert leaves really are
+    sharded (pure param placement — no cache change)."""
+    run_sub(_COMMON + """
+    from repro import configs
+    from repro.sharding.rules import _key_str
+    cfg = configs.get_reduced("qwen2-moe-a2.7b")
+    p = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    ref = Server(cfg, ServerConfig(batch_size=4, max_seq=64), p)
+    ref_out = {o.uid: o.tokens for o in ref.serve(reqs, prompts)}
+    srv = Server(cfg, ServerConfig(batch_size=4, max_seq=64, mesh=mesh), p)
+    for o in srv.serve(reqs, prompts):
+        assert o.tokens == ref_out[o.uid], o.uid
+    # the expert banks are distributed, everything else replicated
+    flat, _ = jax.tree_util.tree_flatten_with_path(srv.params)
+    expert_specs, other_specs = [], []
+    for kp, leaf in flat:
+        path = "/".join(_key_str(k) for k in kp)
+        spec = leaf.sharding.spec
+        if path.endswith(("moe/w_gate", "moe/w_up", "moe/w_down")) \
+                and "shared" not in path:
+            expert_specs.append((path, spec))
+        else:
+            other_specs.append((path, spec))
+    assert expert_specs, "no expert leaves found"
+    for path, spec in expert_specs:
+        flat_axes = [a for s in spec if s for a in
+                     ((s,) if isinstance(s, str) else s)]
+        assert "model" in flat_axes, (path, spec)
+    for path, spec in other_specs:
+        assert all(s is None for s in spec), (path, spec)
+
+    # chunked admission with the distributed placement stays identical
+    refc = Server(cfg, ServerConfig(batch_size=4, max_seq=64,
+                                    prefill_chunk=8), p)
+    refc_out = {o.uid: o.tokens for o in refc.serve(reqs, prompts)}
+    srvc = Server(cfg, ServerConfig(batch_size=4, max_seq=64,
+                                    prefill_chunk=8, mesh=mesh), p)
+    for o in srvc.serve(reqs, prompts):
+        assert o.tokens == refc_out[o.uid], o.uid
+    print("sharded moe expert placement parity OK")
+    """)
+
+
+def test_serving_param_specs_single_device():
+    """Placement rules need no devices: routed-expert banks take the
+    model axis (spilling to data when the count divides, prefix-falling
+    back to model alone for Qwen2's 60), scan-stacked leading dims stay
+    unsharded, and every non-expert leaf replicates."""
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding import Rules, default_table, serving_param_specs
+
+    class FakeMesh:
+        shape = {"data": 2, "model": 4}
+        axis_names = ("data", "model")
+
+    rules = Rules(FakeMesh(), default_table(False))
+    import numpy as np
+    params = {
+        "tail": [{"moe": {
+            "w_gate": np.zeros((8, 64, 96)),      # 8 % 8 == 0 → model×data
+            "w_down": np.zeros((60, 96, 64)),     # 60 % 8 != 0 → model only
+            "router": np.zeros((64, 8)),
+            "shared": {"w_gate": np.zeros((64, 128))},
+        }, "wq": np.zeros((64, 64))}],
+        "scan": {"moe": {"w_up": np.zeros((2, 8, 64, 96))}},
+    }
+    specs = serving_param_specs(params, rules)
+    t = specs["tail"][0]
+    assert t["moe"]["w_gate"] == P(("model", "data"), None, None)
+    assert t["moe"]["w_down"] == P(("model",), None, None)
+    assert specs["scan"]["moe"]["w_up"] == P(None, ("model", "data"),
+                                             None, None)
+    # replicated at serve time even though train-time rules shard them
+    assert t["moe"]["router"] == P()
+    assert t["moe"]["shared"]["w_gate"] == P()
+    assert t["wq"] == P()
+
+
+@pytest.mark.slow
+def test_sharded_recurrent_parity():
+    """Recurrent-state families on a 2x4 mesh (the layer-state exit
+    pin): mamba2-style 'GM' and RG-LRU 'GR' configs serve chunked dense
+    AND chunked paged with greedy tokens bit-identical to a blocking
+    one-request-at-a-time single-device decode.  Recurrent leaves shard
+    slot-only over the data axis; the mixed prefill+decode launch
+    advances them inside the same shard_map island as the ring KV."""
+    run_sub(_COMMON + """
+    from repro.models.config import SSMConfig
+    from repro.runtime.kv_pool import PagedKVConfig
+    GM = ModelConfig(name="gm4", family="hybrid", n_layers=2, d_model=64,
+                     n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                     vocab=64, pad_vocab_multiple=16, dtype="float32",
+                     layer_pattern="GM",
+                     ssm=SSMConfig(d_state=16, d_conv=4, expand=2,
+                                   head_dim=32, n_groups=1, chunk=32))
+    GR = ModelConfig(name="gr4", family="hybrid", n_layers=2, d_model=64,
+                     n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                     vocab=64, pad_vocab_multiple=16, dtype="float32",
+                     layer_pattern="GR", lru_width=64)
+    ccfg = kv_compress.KVCompressConfig(n_clusters=8, iters=4,
+                                        keep_recent=16, refresh_every=8)
+    rreqs = [Request(i, int(l), g) for i, (l, g) in enumerate(
+        [(60, 12), (9, 10), (48, 9), (21, 14)])]
+    rprompts = {r.uid: rng.integers(0, 64, size=(r.prompt_len,)).astype(
+        np.int32) for r in rreqs}
+    for name, cfg in (("GM", GM), ("GR", GR)):
+        p = tfm.init_params(jax.random.PRNGKey(0), cfg)
+        ref = Server(cfg, ServerConfig(batch_size=1, max_seq=96,
+                                       engine="static",
+                                       use_clustered_batching=False), p)
+        ref_out = {o.uid: o.tokens for o in ref.serve(rreqs, rprompts)}
+        dense = Server(cfg, ServerConfig(batch_size=4, max_seq=96,
+                                         kv_compress=ccfg, prefill_chunk=8,
+                                         mesh=mesh), p)
+        for o in dense.serve(rreqs, rprompts):
+            assert o.tokens == ref_out[o.uid], (name, "dense", o.uid)
+        srv = Server(cfg, ServerConfig(batch_size=4, max_seq=96,
+                                       kv_compress=ccfg, prefill_chunk=8,
+                                       paged=PagedKVConfig(block_size=4),
+                                       mesh=mesh), p)
+        for o in srv.serve(rreqs, rprompts):
+            assert o.tokens == ref_out[o.uid], (name, "paged", o.uid)
+        st = srv.last_stats
+        assert st["state_bytes_recurrent"] > 0
+        assert st["kv_retired_recurrent"] == 0.0
+        assert st["pool_blocks_end"] == 0.0
+    print("sharded recurrent parity OK")
+    """)
+
+
+@pytest.mark.slow
+def test_sharded_recurrent_preemption_parity():
+    """Preempt→swap→resume through recurrent state on a 2x4 mesh: the
+    slot snapshot carries the (conv, ssm)/(conv, h) leaves across the
+    host round-trip, and every non-shed request finishes bit-identical
+    to an unpressured serve.  Completes the layer-state exit pin."""
+    run_sub(_COMMON + """
+    from repro.models.config import SSMConfig
+    from repro.runtime.kv_pool import PagedKVConfig
+    from repro.runtime.scheduler import SLOConfig
+    GM = ModelConfig(name="gm4", family="hybrid", n_layers=2, d_model=64,
+                     n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                     vocab=64, pad_vocab_multiple=16, dtype="float32",
+                     layer_pattern="GM",
+                     ssm=SSMConfig(d_state=16, d_conv=4, expand=2,
+                                   head_dim=32, n_groups=1, chunk=32))
+    ccfg = kv_compress.KVCompressConfig(n_clusters=8, iters=4,
+                                        keep_recent=16, refresh_every=8)
+    srng = np.random.default_rng(3)
+    sreqs, sprompts = [], {}
+    for i in range(10):
+        plen = int(srng.integers(6, 30))
+        sprompts[i] = srng.integers(0, 64, size=(plen,)).astype(np.int32)
+        sreqs.append(Request(i, plen, int(srng.integers(6, 14)),
+                             priority=1 if i >= 6 else 0))
+    p = tfm.init_params(jax.random.PRNGKey(0), GM)
+    ref = Server(GM, ServerConfig(batch_size=4, max_seq=96,
+                                  kv_compress=ccfg, prefill_chunk=8,
+                                  use_clustered_batching=False,
+                                  paged=PagedKVConfig(block_size=4,
+                                                      pool_blocks=48)), p)
+    ref_out = {o.uid: o.tokens for o in ref.serve(
+        [Request(r.uid, r.prompt_len, r.max_new_tokens) for r in sreqs],
+        sprompts)}
+    srv = Server(GM, ServerConfig(batch_size=4, max_seq=96,
+                                  kv_compress=ccfg, prefill_chunk=8,
+                                  use_clustered_batching=False,
+                                  paged=PagedKVConfig(block_size=4,
+                                                      pool_blocks=8),
+                                  scheduler=SLOConfig(
+                                      priority_admission=False),
+                                  mesh=mesh), p)
+    outs = srv.serve(sreqs, sprompts)
+    st = srv.last_stats
+    assert st["sched_preemptions"] >= 1.0
+    assert st["sched_swaps_in"] >= 1.0
+    assert st["sched_shed_high"] == 0.0
+    assert st["sched_swap_bytes"] == 0.0
+    for o in outs:
+        if o.shed:
+            assert sreqs[o.uid].priority == 0
+            continue
+        assert o.tokens == ref_out[o.uid], (o.uid, o.tokens, ref_out[o.uid])
+    done = {o.uid for o in outs if not o.shed}
+    assert all(r.uid in done for r in sreqs if r.priority == 1)
+    print("sharded recurrent preemption parity OK")
+    """)
+
+
+@pytest.mark.slow
 def test_indivisible_heads_fall_back_to_replication():
     """A model whose kv-head count doesn't divide the model axis must
     still serve correctly (heads replicate, slots stay data-sharded)."""

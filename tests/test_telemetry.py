@@ -388,3 +388,31 @@ class TestStaleStatsRegression:
         srv.serve(reqs, prompts)
         assert not any(k.startswith("sched_") for k in srv.last_stats)
         assert not any(k.startswith("template_") for k in srv.last_stats)
+
+
+class TestMetricsReference:
+    """The committed metrics reference (docs/metrics.md) is generated
+    from the live registrations via `python -m repro.runtime.telemetry
+    reference` — this pins it fresh so a new or renamed metric cannot
+    ship undocumented."""
+
+    def test_docs_metrics_md_up_to_date(self):
+        import pathlib
+        from repro.runtime.telemetry import reference_doc
+        root = pathlib.Path(__file__).resolve().parent.parent
+        path = root / "docs" / "metrics.md"
+        assert path.exists(), "docs/metrics.md missing — generate with " \
+            "`python -m repro.runtime.telemetry reference > docs/metrics.md`"
+        doc = reference_doc()
+        assert path.read_text() == doc, \
+            "docs/metrics.md is stale — regenerate with " \
+            "`python -m repro.runtime.telemetry reference > docs/metrics.md`"
+
+    def test_reference_covers_recurrent_family_metrics(self):
+        """The layer-state refactor's new always-present metrics are in
+        the reference (and therefore in the committed docs)."""
+        from repro.runtime.telemetry import reference_registry
+        names = set(reference_registry()._metrics)
+        for key in ("kv_retired_recurrent", "state_bytes_ring",
+                    "state_bytes_recurrent", "sched_swap_bytes"):
+            assert key in names, key
